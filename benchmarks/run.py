@@ -1,0 +1,24 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import paper_tables
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in paper_tables.ALL_BENCHES:
+        try:
+            for name, us, derived in bench():
+                print(f'{name},{us:.1f},"{derived}"', flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f'{bench.__name__},-1,"FAILED: {type(e).__name__}: {e}"', flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

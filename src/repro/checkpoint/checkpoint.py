@@ -1,0 +1,197 @@
+"""Checkpointing — atomic step directories, mesh-shape-independent restore.
+
+Layout:
+    <dir>/step_0000100/
+        manifest.json        tree structure + leaf metadata + user metadata
+        arrays.npz           all leaves, flattened with path-derived keys
+    <dir>/step_0000100.COMPLETE   (commit marker — written last)
+
+Properties needed at fleet scale:
+  * **atomic**: a crash mid-write never corrupts the latest checkpoint — the
+    COMPLETE marker is written only after fsync of the payload; restore only
+    considers marked steps.
+  * **elastic**: arrays are stored unsharded (gathered); restore re-shards
+    onto whatever mesh/sharding the caller provides, so a 512-chip job can
+    restart on 256 chips (see distributed.elastic + tests).
+  * **self-describing**: the manifest stores dtype/shape per leaf and a user
+    metadata dict (step, scheduler state, RNG, workload cursor).
+
+For multi-host deployment each host would write its address-space shard
+(process-local npz) — single-process here, noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Tree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    tree: Tree,
+    metadata: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> Path:
+    """Atomically write ``tree`` (params/opt/engine state) at ``step``."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    step_name = f"step_{step:08d}"
+    final = directory / step_name
+    marker = directory / f"{step_name}.COMPLETE"
+    tmp = Path(tempfile.mkdtemp(prefix=f".{step_name}.", dir=directory))
+    try:
+        leaves = _flatten_with_paths(tree)
+        # npz has no bfloat16: store such leaves as a uint16 bit-view and
+        # record the logical dtype in the manifest for exact restore.
+        arrays = {}
+        for k, v in leaves:
+            a = np.asarray(v)
+            if a.dtype.name == "bfloat16":
+                a = a.view(np.uint16)
+            arrays[k] = a
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {
+            "step": step,
+            "keys": [k for k, _ in leaves],
+            "leaf_meta": {
+                k: {"shape": list(np.shape(v)), "dtype": str(np.asarray(v).dtype)}
+                for k, v in leaves
+            },
+            "metadata": metadata or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # fsync payload before commit
+        for f in tmp.iterdir():
+            fd = os.open(f, os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        marker.touch()
+        fd = os.open(directory, os.O_RDONLY)
+        os.fsync(fd)
+        os.close(fd)
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: Path, keep: int) -> None:
+    steps = sorted(latest_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        name = f"step_{s:08d}"
+        (directory / f"{name}.COMPLETE").unlink(missing_ok=True)
+        shutil.rmtree(directory / name, ignore_errors=True)
+
+
+def latest_steps(directory: str | Path) -> List[int]:
+    directory = Path(directory)
+    out = []
+    for marker in directory.glob("step_*.COMPLETE"):
+        name = marker.name[: -len(".COMPLETE")]
+        if (directory / name).is_dir():
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    steps = latest_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    directory: str | Path,
+    step: Optional[int] = None,
+    target: Optional[Tree] = None,
+    shardings: Optional[Tree] = None,
+) -> Tuple[Tree, Dict[str, Any]]:
+    """Restore a checkpoint.
+
+    ``target``: a tree of the same structure (arrays or ShapeDtypeStructs);
+    required to rebuild the pytree. ``shardings``: optional matching tree of
+    NamedShardings — leaves are placed with jax.device_put onto them (this is
+    the elastic-restore path: the mesh may differ from the writer's).
+    Returns (tree, metadata).
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoints under {directory}")
+    final = directory / f"step_{step:08d}"
+    manifest = json.loads((final / "manifest.json").read_text())
+    arrays = np.load(final / "arrays.npz")
+    by_key = {k: arrays[k] for k in manifest["keys"]}
+    if target is None:
+        return by_key, manifest["metadata"]
+    flat = _flatten_with_paths(target)
+    leaves = []
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = [s for _, s in _flatten_with_paths(shardings)]
+    import ml_dtypes  # ships with jax
+
+    for i, (key, tgt) in enumerate(flat):
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = by_key[key]
+        stored_dtype = manifest["leaf_meta"][key]["dtype"]
+        if stored_dtype == "bfloat16" and arr.dtype == np.uint16:
+            arr = arr.view(ml_dtypes.bfloat16)
+        want_dtype = tgt.dtype if hasattr(tgt, "dtype") else arr.dtype
+        if str(arr.dtype) != str(want_dtype):
+            arr = np.asarray(
+                arr.astype(np.float32)
+            ).astype(ml_dtypes.bfloat16 if str(want_dtype) == "bfloat16" else want_dtype)
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(target)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+class CheckpointManager:
+    """Save-every-N policy + resume helper used by the train loop/engine."""
+
+    def __init__(self, directory: str | Path, save_every: int = 100, keep: int = 3):
+        self.directory = Path(directory)
+        self.save_every = save_every
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree: Tree, metadata: Optional[dict] = None):
+        if step % self.save_every == 0:
+            return save_checkpoint(self.directory, step, tree, metadata, self.keep)
+        return None
+
+    def resume(self, target: Tree, shardings: Optional[Tree] = None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, 0, {}
+        tree, meta = restore_checkpoint(self.directory, step, target, shardings)
+        return tree, step, meta

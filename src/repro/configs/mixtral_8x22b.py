@@ -1,0 +1,37 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA [arXiv:2401.04088; hf]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    n_experts=8,
+    experts_per_token=2,
+    moe_group_size=256,
+    sliding_window=4096,
+    mlp_kind="swiglu",
+    norm_kind="rmsnorm",
+    rope_theta=1_000_000.0,
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="mixtral-8x22b-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    vocab_size=256,
+    n_experts=4,
+    experts_per_token=2,
+    sliding_window=8,
+    mlp_kind="swiglu",
+    norm_kind="rmsnorm",
+    moe_capacity_factor=2.0,
+)

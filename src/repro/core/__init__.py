@@ -1,0 +1,47 @@
+# The paper's primary contribution: hybrid offline-online scheduling for
+# LLM inference under PD Competition (MIP + binpack + Algorithm 1 +
+# Lagrangian iteration rule), shared by the simulator and the real engine.
+from .types import (
+    Request,
+    ClientState,
+    StageKind,
+    StageRecord,
+    ScheduleTrace,
+    Phase,
+    make_requests,
+)
+from .cost_model import CostModel, PrefillLevel, PAPER_COST_MODEL
+from .offline import (
+    OfflineResult,
+    LowerBound,
+    solve_offline,
+    lpt_assign,
+    local_search,
+    milp_assign,
+    round_robin_assign,
+    theoretical_lower_bound,
+)
+from .online import (
+    RequestScheduler,
+    StaticBacklogScheduler,
+    SortingPreemptiveScheduler,
+    GlobalQueueScheduler,
+    build_clients,
+)
+from .iteration import (
+    IterationPolicy,
+    PrefillFirstPolicy,
+    DecodeFirstPolicy,
+    LagrangianPolicy,
+    BalancedLagrangianPolicy,
+    AmortizedPolicy,
+    UtilizationWeightedPolicy,
+    DynamicBatchPolicy,
+    TimedPolicy,
+    SystemSnapshot,
+    CandidateBatch,
+    POLICIES,
+    make_policy,
+)
+from .simulator import Simulator, SimConfig, simulate
+from .mip import OriginalMIP, MIPSolution, toy_instance, recost_trace_mip_semantics

@@ -1,0 +1,155 @@
+"""Linear prefill/decode cost model and prefill level table.
+
+The paper measures (over 400 data groups, LLaMA-65B on an 8-device node):
+
+    prefill_time(total_tokens)   = 25 ms + 0.13 ms * total_tokens
+    decode_round_time(n_clients) = 29 ms + 0.21 ms * n_clients
+
+and quantizes prefill stages into *levels* l ∈ L with token capacity N_l^cap
+and duration T_l^p. Levels serve two purposes here:
+
+  1. faithfulness to the paper's MIP (y_{k,l} indicator per stage), and
+  2. in the real JAX engine, each level is one padded compilation shape, so
+     the level table doubles as the jit bucketing table.
+
+``CostModel.fit`` reproduces the paper's calibration: a least-squares linear
+fit of measured stage times vs token counts, used by the engine's online
+profiler to adapt the model to whatever hardware it actually runs on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PrefillLevel:
+    """One prefill level: capacity in tokens and stage duration in seconds."""
+
+    index: int
+    cap_tokens: int
+    duration_s: float
+
+
+@dataclass
+class CostModel:
+    """Linear PD-competition cost model (all times in seconds).
+
+    Defaults are the paper's Table III / §V-A measurements.
+    """
+
+    prefill_per_token: float = 0.13e-3
+    prefill_overhead: float = 25e-3
+    decode_per_token: float = 0.21e-3
+    decode_overhead: float = 29e-3
+    level_caps: Tuple[int, ...] = (512, 1024, 2048, 3072, 4096, 5000)
+
+    def __post_init__(self) -> None:
+        if any(c <= 0 for c in self.level_caps):
+            raise ValueError("level capacities must be positive")
+        if list(self.level_caps) != sorted(set(self.level_caps)):
+            raise ValueError("level capacities must be strictly increasing")
+
+    # ------------------------------------------------------------------ #
+    # Raw linear model                                                   #
+    # ------------------------------------------------------------------ #
+    def prefill_time(self, total_tokens: int) -> float:
+        """Un-quantized prefill stage duration for a packed token batch."""
+        if total_tokens <= 0:
+            return 0.0
+        return self.prefill_overhead + self.prefill_per_token * total_tokens
+
+    def decode_round_time(self, n_active_clients: int) -> float:
+        """One decode round: every active client emits one token."""
+        if n_active_clients <= 0:
+            return 0.0
+        return self.decode_overhead + self.decode_per_token * n_active_clients
+
+    # ------------------------------------------------------------------ #
+    # Levels (y_{k,l} in the MIP; jit buckets in the engine)             #
+    # ------------------------------------------------------------------ #
+    @property
+    def levels(self) -> List[PrefillLevel]:
+        return [
+            PrefillLevel(index=l, cap_tokens=cap, duration_s=self.prefill_time(cap))
+            for l, cap in enumerate(self.level_caps)
+        ]
+
+    @property
+    def max_level(self) -> PrefillLevel:
+        """Level L = argmax_l N_l^cap (used by the lower bound, Eq. 31)."""
+        return self.levels[-1]
+
+    def level_for(self, total_tokens: int) -> PrefillLevel:
+        """Smallest level whose capacity fits ``total_tokens``.
+
+        Raises if the batch exceeds the largest capacity — callers must split
+        batches to the max level first (the simulator/engine do).
+        """
+        for lv in self.levels:
+            if total_tokens <= lv.cap_tokens:
+                return lv
+        raise ValueError(
+            f"prefill batch of {total_tokens} tokens exceeds max level "
+            f"capacity {self.max_level.cap_tokens}"
+        )
+
+    def quantized_prefill_time(self, total_tokens: int) -> float:
+        """T_l^p of the level the batch lands in (Eq. 5)."""
+        return self.level_for(total_tokens).duration_s
+
+    # ------------------------------------------------------------------ #
+    # Aggregates used by schedulers                                      #
+    # ------------------------------------------------------------------ #
+    def decode_time_per_token_amortized(self, n_clients: int) -> float:
+        """System-time to decode one token when n_clients run in parallel."""
+        if n_clients <= 0:
+            raise ValueError("n_clients must be positive")
+        return self.decode_round_time(n_clients) / n_clients
+
+    def estimated_decode_completion(self, n_decode: int, n_clients: int) -> float:
+        """T_i of the offline model (Eq. 28): a client's *wall-clock* decode
+        time for a request. Clients decode in lockstep rounds (one token per
+        round), so a request of N_i^d tokens occupies its client for N_i^d
+        rounds, each of the full-batch round duration."""
+        return n_decode * self.decode_round_time(n_clients)
+
+    # ------------------------------------------------------------------ #
+    # Calibration (the paper's 400-group linear fit; engine profiler)    #
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def fit(
+        prefill_samples: Sequence[Tuple[int, float]],
+        decode_samples: Sequence[Tuple[int, float]],
+        level_caps: Sequence[int] = (512, 1024, 2048, 3072, 4096, 5000),
+    ) -> "CostModel":
+        """Least-squares fit of (tokens, seconds) samples → CostModel.
+
+        ``prefill_samples``: (total_tokens, stage_seconds) pairs.
+        ``decode_samples``: (n_active_clients, round_seconds) pairs.
+        """
+
+        def linfit(samples: Sequence[Tuple[int, float]]) -> Tuple[float, float]:
+            if len(samples) < 2:
+                raise ValueError("need >= 2 samples for a linear fit")
+            x = np.asarray([s[0] for s in samples], dtype=np.float64)
+            y = np.asarray([s[1] for s in samples], dtype=np.float64)
+            a = np.vstack([x, np.ones_like(x)]).T
+            (slope, intercept), *_ = np.linalg.lstsq(a, y, rcond=None)
+            return float(slope), float(max(intercept, 0.0))
+
+        p_slope, p_int = linfit(prefill_samples)
+        d_slope, d_int = linfit(decode_samples)
+        return CostModel(
+            prefill_per_token=p_slope,
+            prefill_overhead=p_int,
+            decode_per_token=d_slope,
+            decode_overhead=d_int,
+            level_caps=tuple(level_caps),
+        )
+
+
+# Paper Table III constants, importable by name.
+PAPER_COST_MODEL = CostModel()

@@ -1,0 +1,101 @@
+"""Gantt accounting and rendering (the paper's Figs. 6–9).
+
+Renders a ScheduleTrace as (a) an ASCII Gantt (downsampled), (b) a CSV of
+stage records, and (c) per-client busy/idle accounting. Terminal-friendly —
+no plotting dependencies ship in the container.
+"""
+from __future__ import annotations
+
+import io
+from typing import List, Optional
+
+from .types import ScheduleTrace, StageKind
+
+
+def stage_csv(trace: ScheduleTrace) -> str:
+    """CSV of stage records: kind,t_start,t_end,bin,n_busy,tokens,level."""
+    buf = io.StringIO()
+    buf.write("kind,t_start,t_end,bin,n_busy,tokens,level\n")
+    for s in trace.stages:
+        buf.write(
+            f"{s.kind.value},{s.t_start:.6f},{s.t_end:.6f},{s.bin_index},"
+            f"{len(s.busy)},{s.tokens},{s.level if s.level is not None else ''}\n"
+        )
+    return buf.getvalue()
+
+
+def client_accounting(trace: ScheduleTrace) -> List[dict]:
+    """Per-client busy time / utilization over the makespan."""
+    busy = [0.0] * trace.num_clients
+    for s in trace.stages:
+        for cid in s.busy:
+            busy[cid] += s.duration
+    span = trace.makespan or 1.0
+    return [
+        {"client": cid, "busy_s": round(b, 4), "utilization": round(b / span, 4)}
+        for cid, b in enumerate(busy)
+    ]
+
+
+def ascii_gantt(
+    trace: ScheduleTrace,
+    width: int = 100,
+    max_clients: int = 40,
+    every_nth_client: Optional[int] = None,
+) -> str:
+    """Downsampled ASCII Gantt.
+
+    '#' = decoding, 'P' = in prefill, '.' = idle. One row per (sampled)
+    client; columns are equal time buckets. A bucket shows the dominant state.
+    """
+    if not trace.stages:
+        return "(empty trace)"
+    span = trace.makespan
+    n = trace.num_clients
+    step = every_nth_client or max(1, n // max_clients)
+    rows = list(range(0, n, step))
+    # occupancy[cid][col] in {0 idle, 1 prefill, 2 decode} by dominant time
+    occ = {cid: [[0.0, 0.0, 0.0] for _ in range(width)] for cid in rows}
+    for s in trace.stages:
+        c0 = int(s.t_start / span * width)
+        c1 = max(c0 + 1, int(s.t_end / span * width + 0.999999))
+        kind = 1 if s.kind is StageKind.PREFILL else 2
+        for cid in rows:
+            state = kind if cid in s.busy else 0
+            for col in range(c0, min(c1, width)):
+                # apportion stage duration to bucket overlap (approximate)
+                occ[cid][col][state] += s.duration / (c1 - c0)
+    chars = {0: ".", 1: "P", 2: "#"}
+    out = io.StringIO()
+    out.write(
+        f"Gantt [{trace.policy_name}] makespan={span:.2f}s "
+        f"util={trace.utilization * 100:.2f}% "
+        f"speed={trace.generation_speed:.1f} tok/s\n"
+    )
+    for cid in rows:
+        line = "".join(
+            chars[max(range(3), key=lambda k: occ[cid][col][k])] for col in range(width)
+        )
+        out.write(f"c{cid:>4} |{line}|\n")
+    out.write(f"       {'':<1}('#'=decode  'P'=prefill  '.'=idle; {step} clients/row)\n")
+    return out.getvalue()
+
+
+def utilization_timeline(trace: ScheduleTrace, buckets: int = 50) -> List[float]:
+    """Utilization per time bucket (for Fig.-style summaries)."""
+    if not trace.stages:
+        return []
+    span = trace.makespan
+    busy = [0.0] * buckets
+    for s in trace.stages:
+        b0 = s.t_start / span * buckets
+        b1 = s.t_end / span * buckets
+        n_busy = len(s.busy)
+        i = int(b0)
+        while i < b1 and i < buckets:
+            lo = max(b0, i)
+            hi = min(b1, i + 1)
+            busy[i] += (hi - lo) * span / buckets * n_busy
+            i += 1
+    denom = span / buckets * trace.num_clients
+    return [round(b / denom, 4) for b in busy]

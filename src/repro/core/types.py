@@ -1,0 +1,261 @@
+"""Core datatypes for the hybrid offline-online LLM inference scheduler.
+
+These types are framework-agnostic (pure Python) so the same scheduler code
+drives both the event-driven simulator (paper reproduction) and the real JAX
+serving engine (``repro.serving.engine``).
+
+Notation follows the paper (TABLE II):
+  I  — set of requests, each with prefill tokens N_i^p and decode tokens N_i^d
+  J  — set of clients (= decode batch slots in the engine)
+  K  — bins; bin k = one prefill stage followed by one decode stage
+  L  — prefill levels (token-capacity buckets with duration T_l^p)
+"""
+from __future__ import annotations
+
+import enum
+import json
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class Phase(enum.Enum):
+    """Lifecycle phase of a request."""
+
+    WAITING = "waiting"      # not yet prefilled
+    PREFILL = "prefill"      # currently in a prefill stage
+    DECODE = "decode"        # prefilled, decoding (possibly preempted)
+    DONE = "done"
+
+
+class StageKind(enum.Enum):
+    """PD-Competition stage type — the system runs exactly one at a time."""
+
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+@dataclass
+class Request:
+    """One inference request.
+
+    ``n_decode`` is the *true* output length (unknown to the scheduler until
+    the EOS materializes); ``n_decode_est`` is what offline planning may use
+    (the paper plans with estimates and executes under uncertainty).
+    """
+
+    rid: int
+    n_prefill: int
+    n_decode: int
+    n_decode_est: Optional[int] = None
+    arrival: float = 0.0
+
+    # Execution bookkeeping (filled by simulator/engine).
+    client: Optional[int] = None
+    prefill_bin: Optional[int] = None
+    decoded: int = 0
+    t_prefill_start: Optional[float] = None
+    t_prefill_end: Optional[float] = None
+    t_done: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.n_prefill <= 0:
+            raise ValueError(f"request {self.rid}: n_prefill must be positive")
+        if self.n_decode <= 0:
+            raise ValueError(f"request {self.rid}: n_decode must be positive")
+        if self.n_decode_est is None:
+            self.n_decode_est = self.n_decode
+
+    @property
+    def total_tokens(self) -> int:
+        return self.n_prefill + self.n_decode
+
+    @property
+    def est_total_tokens(self) -> int:
+        return self.n_prefill + int(self.n_decode_est or self.n_decode)
+
+    @property
+    def remaining_decode(self) -> int:
+        return self.n_decode - self.decoded
+
+    def reset(self) -> None:
+        """Clear execution bookkeeping (so one workload can be re-simulated)."""
+        self.client = None
+        self.prefill_bin = None
+        self.decoded = 0
+        self.t_prefill_start = None
+        self.t_prefill_end = None
+        self.t_done = None
+
+
+@dataclass
+class ClientState:
+    """State of one client (batch slot)."""
+
+    cid: int
+    current: Optional[Request] = None        # request being decoded
+    backlog: List[Request] = field(default_factory=list)  # offline-assigned queue
+    busy_time: float = 0.0                   # accumulated busy client-time
+
+    @property
+    def idle(self) -> bool:
+        return self.current is None
+
+    def remain_token(self) -> int:
+        """Expected remaining tokens in this client's backlog (Algorithm 1)."""
+        return sum(r.est_total_tokens for r in self.backlog)
+
+
+@dataclass
+class StageRecord:
+    """One executed stage, for the Gantt chart and utilization accounting."""
+
+    kind: StageKind
+    t_start: float
+    t_end: float
+    bin_index: int
+    # Clients busy during this stage and the request they worked on.
+    busy: Dict[int, int] = field(default_factory=dict)  # cid -> rid
+    tokens: int = 0          # tokens processed in this stage
+    rounds: int = 0          # decode rounds contained (decode stages only)
+    level: Optional[int] = None  # prefill level index (prefill stages only)
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+
+@dataclass
+class ScheduleTrace:
+    """Full execution trace of one simulated (or real) serve run."""
+
+    num_clients: int
+    stages: List[StageRecord] = field(default_factory=list)
+    requests: List[Request] = field(default_factory=list)
+    decision_times_ms: List[float] = field(default_factory=list)
+    policy_name: str = ""
+
+    @property
+    def makespan(self) -> float:
+        return self.stages[-1].t_end if self.stages else 0.0
+
+    @property
+    def total_prefill_time(self) -> float:
+        return sum(s.duration for s in self.stages if s.kind is StageKind.PREFILL)
+
+    @property
+    def total_decode_time(self) -> float:
+        return sum(s.duration for s in self.stages if s.kind is StageKind.DECODE)
+
+    @property
+    def busy_client_time(self) -> float:
+        """Σ over stages of (busy clients × stage duration)."""
+        return sum(len(s.busy) * s.duration for s in self.stages)
+
+    @property
+    def utilization(self) -> float:
+        """Busy client-time over total client-time — the paper's Gantt metric."""
+        if not self.stages:
+            return 0.0
+        return self.busy_client_time / (self.makespan * self.num_clients)
+
+    @property
+    def total_generated_tokens(self) -> int:
+        return sum(r.n_decode for r in self.requests)
+
+    @property
+    def generation_speed(self) -> float:
+        """Output tokens per second (the paper's Fig. 11 metric)."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.total_generated_tokens / self.makespan
+
+    @property
+    def num_bins(self) -> int:
+        return 1 + max((s.bin_index for s in self.stages), default=-1)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy_name,
+            "num_requests": len(self.requests),
+            "num_clients": self.num_clients,
+            "num_bins": self.num_bins,
+            "makespan_s": round(self.makespan, 4),
+            "utilization": round(self.utilization, 6),
+            "generation_speed_tok_s": round(self.generation_speed, 3),
+            "prefill_time_s": round(self.total_prefill_time, 4),
+            "decode_time_s": round(self.total_decode_time, 4),
+            "max_decision_ms": round(max(self.decision_times_ms), 4)
+            if self.decision_times_ms
+            else 0.0,
+            "mean_decision_ms": round(
+                sum(self.decision_times_ms) / len(self.decision_times_ms), 5
+            )
+            if self.decision_times_ms
+            else 0.0,
+        }
+
+    def validate(self) -> None:
+        """Invariant checks (used by tests and after every simulation).
+
+        - stages tile the timeline with no overlap and no negative durations
+        - every request decoded exactly n_decode tokens, prefilled exactly once
+        - a client is never busy with two requests in one stage
+        """
+        t = 0.0
+        for s in self.stages:
+            if s.t_start < t - 1e-9:
+                raise AssertionError(f"stage overlap at t={s.t_start} (< {t})")
+            if s.duration < -1e-12:
+                raise AssertionError("negative stage duration")
+            t = s.t_end
+        prefilled: Dict[int, int] = {}
+        for s in self.stages:
+            if s.kind is StageKind.PREFILL:
+                for cid, rid in s.busy.items():
+                    prefilled[rid] = prefilled.get(rid, 0) + 1
+        for r in self.requests:
+            if prefilled.get(r.rid, 0) != 1:
+                raise AssertionError(
+                    f"request {r.rid} prefilled {prefilled.get(r.rid, 0)} times"
+                )
+            if r.decoded != r.n_decode:
+                raise AssertionError(
+                    f"request {r.rid} decoded {r.decoded}/{r.n_decode} tokens"
+                )
+            if r.t_done is None:
+                raise AssertionError(f"request {r.rid} never finished")
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "summary": self.summary(),
+                "stages": [
+                    {
+                        "kind": s.kind.value,
+                        "t_start": s.t_start,
+                        "t_end": s.t_end,
+                        "bin": s.bin_index,
+                        "busy": s.busy,
+                        "tokens": s.tokens,
+                        "rounds": s.rounds,
+                        "level": s.level,
+                    }
+                    for s in self.stages
+                ],
+            }
+        )
+
+
+def make_requests(
+    prefill_lens: Sequence[int],
+    decode_lens: Sequence[int],
+    decode_ests: Optional[Sequence[int]] = None,
+) -> List[Request]:
+    """Convenience constructor used by tests and workload generators."""
+    if len(prefill_lens) != len(decode_lens):
+        raise ValueError("prefill/decode length mismatch")
+    reqs = []
+    for i, (p, d) in enumerate(zip(prefill_lens, decode_lens)):
+        est = None if decode_ests is None else int(decode_ests[i])
+        reqs.append(Request(rid=i, n_prefill=int(p), n_decode=int(d), n_decode_est=est))
+    return reqs

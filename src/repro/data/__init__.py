@@ -1,0 +1,6 @@
+from .workload import (
+    WorkloadSpec,
+    gsm8k_like_workload,
+    PAPER_WORKLOAD_SPEC,
+    PAPER_PREDICTOR_NOISE_STD,
+)

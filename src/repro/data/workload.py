@@ -1,0 +1,87 @@
+"""Synthetic workload generation matching the paper's Table III statistics.
+
+GSM8K inputs:  N_i^p ~ N(68.43, 25.04²), clipped to [1, ∞)
+LLaMA-65B out: N_i^d ~ N(344.83, 187.99²), clipped to [1, 512]
+
+The scheduler plans with *estimates* of the decode length; we model the
+estimate as the distribution mean (what an offline profiler would predict)
+unless ``estimate_noise_std`` injects a per-request estimator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from ..core.types import Request
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Workload distribution spec.
+
+    ``output_mean/std`` are the *post-cap* sample moments the paper reports
+    (their outputs were generated with max_output_length=512, so the
+    published moments already include the cap). ``output_mu0/sigma0`` are the
+    pre-clip normal parameters calibrated so that clip(N(mu0, sigma0), 1,
+    512) reproduces those moments exactly (solved numerically; ~40% of
+    outputs hit the cap, which is what a hard cap at 0.9 sigma above the
+    mean implies).
+    """
+
+    n_requests: int = 1319
+    input_mean: float = 68.43
+    input_std: float = 25.04
+    output_mean: float = 344.83
+    output_std: float = 187.99
+    output_max: int = 512
+    input_max: Optional[int] = None
+    output_mu0: float = 423.508
+    output_sigma0: float = 340.894
+
+
+PAPER_WORKLOAD_SPEC = WorkloadSpec()
+
+# Output-length predictor error (std, tokens) used for the offline planner's
+# T_i estimates. The paper does not publish its predictor; σ=40 is calibrated
+# once so the *offline* configuration reproduces the paper's Fig. 7 result,
+# and the online/hybrid numbers then fall out untuned (see EXPERIMENTS.md).
+PAPER_PREDICTOR_NOISE_STD = 40.0
+
+
+def gsm8k_like_workload(
+    spec: WorkloadSpec = PAPER_WORKLOAD_SPEC,
+    seed: int = 0,
+    known_lengths: bool = False,
+    estimate_noise_std: float = 0.0,
+) -> List[Request]:
+    """Draw a request set from the paper's published moments.
+
+    ``known_lengths=True`` gives the scheduler oracle decode lengths (used to
+    isolate the value of uncertainty); default plans with the mean.
+    """
+    rng = np.random.default_rng(seed)
+    p = rng.normal(spec.input_mean, spec.input_std, size=spec.n_requests)
+    p = np.clip(np.round(p), 1, spec.input_max or np.inf).astype(int)
+    d = rng.normal(spec.output_mu0, spec.output_sigma0, size=spec.n_requests)
+    d = np.clip(np.round(d), 1, spec.output_max).astype(int)
+
+    requests = []
+    for i in range(spec.n_requests):
+        if known_lengths:
+            est = int(d[i])
+        elif estimate_noise_std > 0:
+            est = int(
+                np.clip(
+                    round(d[i] + rng.normal(0, estimate_noise_std)),
+                    1,
+                    spec.output_max,
+                )
+            )
+        else:
+            est = int(round(spec.output_mean))
+        requests.append(
+            Request(rid=i, n_prefill=int(p[i]), n_decode=int(d[i]), n_decode_est=est)
+        )
+    return requests

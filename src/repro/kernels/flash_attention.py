@@ -1,0 +1,147 @@
+"""Flash attention (prefill) — Pallas TPU kernel.
+
+TPU adaptation of FlashAttention (the paper's §II kernel-fusion foundation):
+KV blocks stream HBM→VMEM while an online-softmax accumulator lives in VMEM
+scratch (f32, VREG-friendly); the (bq × bk) score tile feeds the MXU with
+128-aligned dims. Grid = (batch, q_head, q_blocks, k_blocks) with the
+k_blocks dim innermost and sequential — TPU grids execute in order, so the
+scratch accumulator carries across k steps and the output tile is written
+once on the last k step.
+
+Causal + sliding-window masking is position-based (matches
+``models.attention``); fully-masked k blocks are skipped with ``pl.when``
+(compute skipped; the block DMA still happens — acceptable because masked
+blocks are the minority under the bq≈bk blocking and the DMA pipeline hides
+them).
+
+GQA: q heads map onto kv heads via integer division in the kv index_map.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,            # VMEM blocks
+    o_ref,                          # output block
+    acc_ref, m_ref, l_ref,          # VMEM scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level skip decisions (static per grid step)
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    run = True
+    if causal:
+        # whole block above the diagonal → nothing to do
+        run = jnp.logical_and(True, k_start <= q_start + block_q - 1)
+    if window > 0:
+        # whole block left of the window → nothing to do
+        run = jnp.logical_and(run, q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale     # (bq, d)
+        k = k_ref[0, 0, :, :].astype(jnp.float32)             # (bk, d)
+        v = v_ref[0, 0, :, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                     # (bq, bk)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                   # (B, H, Sq, D)
+    k: jax.Array,                   # (B, KV, Sk, D)
+    v: jax.Array,                   # (B, KV, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    if h % kv != 0:
+        raise ValueError(f"H={h} not divisible by KV={kv}")
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    if sq % bq or sk % bk:
+        raise ValueError(f"seq ({sq},{sk}) must divide blocks ({bq},{bk})")
+    nq, nk = sq // bq, sk // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=bq,
+        block_k=bk,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,51 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute through Pallas interpret mode —
+numerically identical, used by tests. On TPU the same call sites compile the
+real kernels. ``use_pallas=`` flags in the model zoo route through these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .rglru import rglru_scan as _rglru
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "block_q", "block_k")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    scale: Optional[float] = None, block_q: int = 128, block_k: int = 128,
+):
+    """(B, H, Sq, D) × (B, KV, Sk, D) → (B, H, Sq, D)."""
+    return _flash(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=_on_cpu(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k"))
+def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
+                     block_k: int = 256):
+    """(B, H, D) one token vs (B, KV, S, D) cache → (B, H, D)."""
+    return _decode(
+        q, k, v, lengths, scale=scale, block_k=block_k, interpret=_on_cpu()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_r"))
+def rglru_scan(a, x, h0=None, *, block_s: int = 256, block_r: int = 128
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t·h_{t-1} + x_t over (B, S, R)."""
+    return _rglru(a, x, h0, block_s=block_s, block_r=block_r, interpret=_on_cpu())

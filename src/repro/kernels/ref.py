@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+These share the masking semantics with ``repro.models.attention`` — the
+kernels and the model reference path are validated against the same math.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(
+    q: jax.Array,                   # (B, H, Sq, D)
+    k: jax.Array,                   # (B, KV, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kv, g, sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = jnp.logical_and(mask, kpos <= qpos)
+    if window > 0:
+        mask = jnp.logical_and(mask, qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,                   # (B, H, D)
+    k: jax.Array,                   # (B, KV, S, D)
+    v: jax.Array,
+    lengths: jax.Array,             # (B,)
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, h, d = q.shape
+    _, kv, s, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kv, g, d)
+    sc = jnp.einsum("bkgd,bksd->bkgs", qf, k.astype(jnp.float32))
+    valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def rglru_scan_ref(
+    a: jax.Array,                   # (B, S, R)
+    x: jax.Array,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, r = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, r), jnp.float32)
+
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+
+    h_fin, hs = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (
+            jnp.swapaxes(a.astype(jnp.float32), 0, 1),
+            jnp.swapaxes(x.astype(jnp.float32), 0, 1),
+        ),
+    )
+    return jnp.swapaxes(hs, 0, 1), h_fin

@@ -1,0 +1,298 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once —
+useless for scan-over-layers / grad-accumulation programs where >99% of the
+work sits inside loops. This module parses the partitioned HLO text,
+recovers each loop's trip count from its condition computation
+(``compare(counter, constant), direction=LT``), and accumulates
+
+  * FLOPs        — dots (2·M·N·K), elementwise arithmetic, reduces
+  * collective bytes — per kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), result-buffer bytes
+  * HBM traffic proxy — bytes written by dots/parameters is NOT recoverable
+    from text alone; we take cost_analysis()'s per-call bytes for the body
+    and scale by trip counts the same way.
+
+multiplied through arbitrarily nested while/fusion/call computations.
+Numbers are per-device (the module is the SPMD-partitioned per-chip
+program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "and", "or", "xor", "not", "compare", "select", "clamp", "sign",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "cbrt", "tanh", "sine", "cosine", "tan", "atan2", "power",
+    "logistic", "erf",
+}
+
+
+@dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    shape_str: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, OpInfo] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    root: Optional[str] = None
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "transcendentals": self.transcendentals,
+            "collectives": {
+                k: {"bytes": self.collective_bytes[k], "count": self.collective_counts[k]}
+                for k in COLLECTIVE_KINDS
+            },
+            "total_collective_bytes": self.total_collective_bytes,
+        }
+
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# "  %name = <shape-or-tuple> opcode(...), attrs" — opcode is [\w-]+
+_OP_LINE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\("
+)
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """(element count, bytes) over every array in a (possibly tuple) shape."""
+    elems = 0
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = _COMP_HEADER.match(line)
+        if header and ("->" in line):
+            cur = Computation(name=header.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        is_root, name, shape_str, opcode = m.group(1), m.group(2), m.group(3), m.group(4)
+        op = OpInfo(name=name, opcode=opcode, shape_str=shape_str, line=line)
+        cur.ops[name] = op
+        cur.order.append(name)
+        if is_root:
+            cur.root = name
+    return comps, entry
+
+
+def _operand_names(line: str, opcode: str) -> List[str]:
+    """Operand ids inside the top-level parens of ``opcode(...)``."""
+    idx = line.find(opcode + "(")
+    if idx < 0:
+        return []
+    start = idx + len(opcode) + 1
+    depth = 1
+    out = []
+    token = []
+    i = start
+    while i < len(line) and depth > 0:
+        c = line[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        elif c == "," and depth == 1:
+            out.append("".join(token).strip())
+            token = []
+            i += 1
+            continue
+        token.append(c)
+        i += 1
+    if token:
+        out.append("".join(token).strip())
+    names = []
+    for t in out:
+        t = t.strip()
+        if t.startswith("%"):
+            t = t[1:]
+        # strip embedded shapes like "bf16[2,3]{1,0} %foo"
+        parts = t.split()
+        cand = parts[-1] if parts else t
+        if cand.startswith("%"):
+            cand = cand[1:]
+        names.append(cand)
+    return names
+
+
+_ATTR_CALLS = re.compile(r"(?:to_apply|body|condition|branch_computations|called_computations|calls)=\{?%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONSTANT_VAL = re.compile(r"constant\((-?\d+)\)")
+
+
+def _dot_flops(comp: Computation, op: OpInfo) -> float:
+    elems, _ = _shape_elems_bytes(op.shape_str)
+    m = _CONTRACT.search(op.line)
+    contract = 1
+    if m:
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        operands = _operand_names(op.line, "dot")
+        if operands:
+            lhs = comp.ops.get(operands[0])
+            if lhs is not None:
+                sm = _SHAPE_TOKEN.search(lhs.shape_str)
+                if sm:
+                    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for d in dims:
+                        if d < len(lhs_dims):
+                            contract *= lhs_dims[d]
+    return 2.0 * elems * contract
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> float:
+    """Trip count of a scan-style loop condition (counter < constant).
+
+    The compare is often wrapped in a fusion with the bound passed as an
+    operand, so we take the largest integer constant defined in the
+    condition computation — for jax.lax.scan-generated loops that is always
+    the trip bound (other constants are 0/±1 counter steps)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1.0
+    best = 1.0
+    for op_name in cond.order:
+        op = cond.ops[op_name]
+        if op.opcode == "constant":
+            m = _CONSTANT_VAL.search(op.line)
+            if m:
+                best = max(best, float(m.group(1)))
+    return best
+
+
+def _analyze_comp(
+    comps: Dict[str, Computation],
+    name: str,
+    totals: CostTotals,
+    mult: float,
+    visited_stack: Tuple[str, ...] = (),
+) -> None:
+    comp = comps.get(name)
+    if comp is None or name in visited_stack:
+        return
+    stack = visited_stack + (name,)
+    for op_name in comp.order:
+        op = comp.ops[op_name]
+        oc = op.opcode
+        if oc == "while":
+            m = re.search(r"condition=%?([\w.\-]+)", op.line)
+            b = re.search(r"body=%?([\w.\-]+)", op.line)
+            trips = _trip_count(comps, m.group(1)) if m else 1.0
+            if b:
+                _analyze_comp(comps, b.group(1), totals, mult * trips, stack)
+            if m:
+                _analyze_comp(comps, m.group(1), totals, mult * trips, stack)
+            continue
+        if oc in ("fusion", "call", "custom-call", "conditional", "async-start",
+                  "map", "reduce", "reduce-window", "sort", "scatter", "select-and-scatter"):
+            for cm in _ATTR_CALLS.finditer(op.line):
+                _analyze_comp(comps, cm.group(1), totals, mult, stack)
+        if oc == "dot":
+            totals.flops += mult * _dot_flops(comp, op)
+        elif oc == "convolution":
+            # rough: 2 * out_elems * (in_channels * window) — rare in our zoo
+            elems, _ = _shape_elems_bytes(op.shape_str)
+            totals.flops += mult * 2.0 * elems
+        elif oc in _ELEMENTWISE_1FLOP:
+            elems, _ = _shape_elems_bytes(op.shape_str)
+            totals.flops += mult * elems
+        elif oc in _TRANSCENDENTAL:
+            elems, _ = _shape_elems_bytes(op.shape_str)
+            totals.flops += mult * elems
+            totals.transcendentals += mult * elems
+        elif oc == "reduce":
+            operands = _operand_names(op.line, "reduce")
+            if operands:
+                src = comp.ops.get(operands[0])
+                if src is not None:
+                    elems, _ = _shape_elems_bytes(src.shape_str)
+                    totals.flops += mult * elems
+        else:
+            base = oc.replace("-start", "")
+            if base in COLLECTIVE_KINDS and not oc.endswith("-done"):
+                _, nbytes = _shape_elems_bytes(op.shape_str)
+                totals.collective_bytes[base] += mult * nbytes
+                totals.collective_counts[base] += mult
+
+
+def analyze_hlo(text: str) -> CostTotals:
+    comps, entry = parse_hlo(text)
+    totals = CostTotals()
+    if entry is None:
+        # fall back: analyze every computation once (over-count risk)
+        for name in comps:
+            _analyze_comp(comps, name, totals, 1.0)
+        return totals
+    _analyze_comp(comps, entry, totals, 1.0)
+    return totals

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+device initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests and elastic re-mesh use this)."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_for(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a production mesh (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# TPU v5e hardware constants (per chip) — roofline denominators.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s per link

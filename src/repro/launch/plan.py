@@ -1,0 +1,70 @@
+"""Per-(arch × cell) runtime knobs for the dry-run and launchers.
+
+Microbatch counts keep per-device activation peaks inside the 16 GB v5e
+budget at train_4k (global batch 256); serve cells run unbatched. These are
+the §Perf baseline settings — hillclimbs override via ``overrides``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from ..distributed.sharding import ShardingConfig
+
+# (arch, cell) -> microbatches for training. Sized so per-device
+# (argument + temp) stays under the 16 GB v5e HBM (validated by the dry-run;
+# the sequence-parallel hillclimb in §Perf reduces these).
+MICROBATCHES: Dict[Tuple[str, str], int] = {
+    ("mixtral_8x22b", "train_4k"): 32,  # 14.8 GB/chip with bf16 grad accum
+    ("olmoe_1b_7b", "train_4k"): 16,
+    ("qwen3_8b", "train_4k"): 16,
+    ("starcoder2_7b", "train_4k"): 16,
+    ("granite_3_8b", "train_4k"): 16,
+    ("nemotron_4_15b", "train_4k"): 16,
+    ("qwen2_vl_7b", "train_4k"): 16,
+    ("xlstm_350m", "train_4k"): 8,
+    ("recurrentgemma_9b", "train_4k"): 16,
+    ("whisper_small", "train_4k"): 4,
+}
+
+# Whisper serve-cell geometry (see DESIGN.md §Arch-applicability):
+# prefill_32k = 32k encoder frames + 448-token decoder prompt;
+# decode_32k  = one decoder token against a 32k self-KV + 1500 cross-KV.
+WHISPER_DECODER_PROMPT = 448
+WHISPER_CROSS_LEN = 1536
+
+
+# Serve-time weights stay FSDP-sharded only where TP-only weights exceed the
+# 16 GB/chip budget (mixtral: 282 GB bf16 / 16 TP = 17.6 GB). Everyone else
+# replicates weights across DP at serve time — the per-step weight
+# all-gathers vanish (§Perf H1: 30× less decode collective traffic).
+FSDP_AT_SERVE = {"mixtral_8x22b"}
+# xlstm's 0.2B params never warrant FSDP; per-time-step weight gathers under
+# the recurrent scan cost ~2.5× the total collective bytes otherwise.
+NEVER_FSDP = {"xlstm_350m"}
+
+
+def plan_for(arch: str, cell_name: str, multi_pod: bool = False,
+             overrides: Optional[dict] = None) -> dict:
+    is_serve = cell_name in ("prefill_32k", "decode_32k", "long_500k")
+    fsdp = True
+    if arch in NEVER_FSDP:
+        fsdp = False
+    elif is_serve and arch not in FSDP_AT_SERVE:
+        fsdp = False
+    mb = MICROBATCHES.get((arch, cell_name), 1)
+    if multi_pod and mb > 1:
+        # 2 pods double the DP width to 32: per-microbatch batch must stay
+        # divisible by it (256/mb % 32 == 0 → mb ≤ 8), or the batch dim
+        # degrades to partial sharding and activations blow up ~2-4×.
+        mb = min(mb, 8)
+    plan = {
+        "microbatches": mb,
+        "remat": True,
+        "sharding": ShardingConfig(
+            dp_axes=("pod", "data") if multi_pod else ("data",),
+            fsdp_weights=fsdp,
+        ),
+    }
+    if overrides:
+        plan.update(overrides)
+    return plan

@@ -1,0 +1,49 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch qwen3_8b --smoke --steps 50
+    python -m repro.launch.train --arch whisper_small --smoke --steps 100 \\
+        --checkpoint-dir /tmp/ckpt           # kill it and rerun → resumes
+
+Full-size configs train via the same path on a real TPU mesh; on this CPU
+container use --smoke (reduced same-family config). The multi-device
+distribution path is exercised by the dry-run (repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..train.optimizer import AdamWConfig
+from ..train.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainConfig(
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        microbatches=args.microbatches,
+        checkpoint_dir=args.checkpoint_dir,
+    )
+    out = train(cfg, tc, AdamWConfig(lr=args.lr, warmup_steps=10))
+    print(
+        f"done: arch={cfg.name} steps={out['steps_run']} "
+        f"(resumed at {out['start_step']}) loss {out['first_loss']:.4f} -> "
+        f"{out['last_loss']:.4f} in {out['wall_s']:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .layers import ParamDef, init_params, abstract_params, logical_specs
+from .registry import get_model, MODEL_FAMILIES

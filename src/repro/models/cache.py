@@ -1,0 +1,167 @@
+"""KV / recurrent-state cache containers.
+
+Caches are plain dict pytrees of arrays (stacked over layers) so they flow
+through jit/pjit with explicit shardings and can be declared abstractly for
+the dry-run. Two attention cache styles:
+
+  * full cache  — (L, B, S_max, KV, D); write cursor = ``length``
+  * ring cache  — (L, B, W, KV, D) for sliding-window attention; slot
+                  ``length % W``; per-slot absolute positions are stored so
+                  masking stays position-based (see models.attention)
+
+Recurrent families (xLSTM, RG-LRU) keep per-layer state tensors instead; see
+their modules. ``length`` is a scalar int32 shared by all layers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def full_cache_shape(
+    n_layers: int, batch: int, max_len: int, kv_heads: int, head_dim: int,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    f = jax.ShapeDtypeStruct
+    return {
+        "k": f((n_layers, batch, max_len, kv_heads, head_dim), dtype),
+        "v": f((n_layers, batch, max_len, kv_heads, head_dim), dtype),
+        "length": f((batch,), jnp.int32),
+    }
+
+
+def full_cache_init(
+    n_layers: int, batch: int, max_len: int, kv_heads: int, head_dim: int,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, kv_heads, head_dim), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def ring_cache_shape(
+    n_layers: int, batch: int, window: int, kv_heads: int, head_dim: int,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    f = jax.ShapeDtypeStruct
+    return {
+        "k": f((n_layers, batch, window, kv_heads, head_dim), dtype),
+        "v": f((n_layers, batch, window, kv_heads, head_dim), dtype),
+        "pos": f((batch, window), jnp.int32),
+        "length": f((batch,), jnp.int32),
+    }
+
+
+def ring_cache_init(
+    n_layers: int, batch: int, window: int, kv_heads: int, head_dim: int,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((n_layers, batch, window, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, window, kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, window), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Per-layer write ops (used inside the layer scan; arrays are layer slices).  #
+# --------------------------------------------------------------------------- #
+def full_cache_write(
+    k_layer: jax.Array,       # (B, S_max, KV, D)
+    v_layer: jax.Array,
+    k_new: jax.Array,         # (B, S_new, KV, D)
+    v_new: jax.Array,
+    start: jax.Array,         # scalar int32 — write offset
+) -> Tuple[jax.Array, jax.Array]:
+    k_layer = jax.lax.dynamic_update_slice(k_layer, k_new.astype(k_layer.dtype), (0, start, 0, 0))
+    v_layer = jax.lax.dynamic_update_slice(v_layer, v_new.astype(v_layer.dtype), (0, start, 0, 0))
+    return k_layer, v_layer
+
+
+def full_cache_write_token(
+    k_layer: jax.Array,       # (B, S_max, KV, D)
+    v_layer: jax.Array,
+    k_new: jax.Array,         # (B, 1, KV, D)
+    v_new: jax.Array,
+    positions: jax.Array,     # (B,) int32 — per-slot write positions
+) -> Tuple[jax.Array, jax.Array]:
+    b = k_layer.shape[0]
+    rows = jnp.arange(b)
+    k_layer = k_layer.at[rows, positions].set(k_new[:, 0].astype(k_layer.dtype))
+    v_layer = v_layer.at[rows, positions].set(v_new[:, 0].astype(v_layer.dtype))
+    return k_layer, v_layer
+
+
+def ring_cache_write_token(
+    k_layer: jax.Array,       # (B, W, KV, D)
+    v_layer: jax.Array,
+    k_new: jax.Array,         # (B, 1, KV, D)
+    v_new: jax.Array,
+    positions: jax.Array,     # (B,) int32 — absolute token positions
+) -> Tuple[jax.Array, jax.Array]:
+    b, w = k_layer.shape[:2]
+    rows = jnp.arange(b)
+    slots = jnp.mod(positions, w)
+    k_layer = k_layer.at[rows, slots].set(k_new[:, 0].astype(k_layer.dtype))
+    v_layer = v_layer.at[rows, slots].set(v_new[:, 0].astype(v_layer.dtype))
+    return k_layer, v_layer
+
+
+def ring_positions_write_token(pos: jax.Array, positions: jax.Array) -> jax.Array:
+    """Update the (B, W) slot→absolute-position map for one token per slot."""
+    b, w = pos.shape
+    rows = jnp.arange(b)
+    slots = jnp.mod(positions, w)
+    return pos.at[rows, slots].set(positions.astype(pos.dtype))
+
+
+def ring_cache_write_prefill(
+    k_layer: jax.Array,       # (B, W, KV, D)
+    v_layer: jax.Array,
+    k_new: jax.Array,         # (B, S, KV, D) — token p at row p
+    v_new: jax.Array,
+    pos_map: Optional[jax.Array] = None,   # (B, W) slot→position (-1 empty)
+) -> Tuple[jax.Array, jax.Array]:
+    """Bulk write of a prefill into a ring cache.
+
+    ``pos_map`` (from ``ring_positions_prefill``) names the absolute position
+    each ring slot should hold — per batch row, so ragged prompts (engine
+    path) fill correctly. Slots mapped to -1 are zeroed. With no map, a
+    uniform full-width prefill is assumed."""
+    w = k_layer.shape[1]
+    s = k_new.shape[1]
+    b = k_layer.shape[0]
+    if pos_map is None:
+        pos_map = ring_positions_prefill(b, w, s)
+    rows = jnp.arange(b)[:, None]
+    idx = jnp.clip(pos_map, 0, s - 1)
+    valid = (pos_map >= 0)[..., None, None]
+    k_layer = jnp.where(valid, k_new[rows, idx], 0).astype(k_layer.dtype)
+    v_layer = jnp.where(valid, v_new[rows, idx], 0).astype(v_layer.dtype)
+    return k_layer, v_layer
+
+
+def ring_positions_prefill(batch: int, window: int, s) -> jax.Array:
+    """Slot→position map after prefills of length ``s``.
+
+    ``s`` may be a static int (uniform prefill) or a (B,) vector of
+    per-slot lengths (engine path). Slot z holds the largest p < s with
+    p ≡ z (mod w); slots beyond the fill level hold -1."""
+    w = window
+    slots = jnp.arange(w, dtype=jnp.int32)
+    if isinstance(s, int):
+        if s <= w:
+            pos = jnp.where(slots < s, slots, -1)
+        else:
+            pos = s - 1 - jnp.mod((s - 1 - slots), w)
+        return jnp.broadcast_to(pos[None, :], (batch, w)).astype(jnp.int32)
+    sv = s.astype(jnp.int32)[:, None]                      # (B, 1)
+    # largest p < s with p ≡ z (mod w); equals z itself when s <= w
+    pos = sv - 1 - jnp.mod(sv - 1 - slots[None, :], w)     # (B, W)
+    pos = jnp.where((slots[None, :] >= sv) & (sv <= w), -1, pos)
+    return pos.astype(jnp.int32)

@@ -1,0 +1,423 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427) — RG-LRU + local attention.
+
+Layer pattern is (recurrent, recurrent, local-attention) repeated — the
+brief's "1:2". Each temporal block is followed by a gated-MLP block, both
+residual. 38 layers = 12 full periods (36) + a 2-recurrent tail.
+
+The RG-LRU recurrence (per channel):
+    r_t = σ(W_r x_t);  i_t = σ(W_i x_t)
+    a_t = exp(-c · softplus(Λ) · r_t)          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Decode state is O(rnn_width) per recurrent layer plus a W-sized ring cache
+per attention layer, so the family runs ``long_500k``. The width-4 temporal
+conv preceding the RG-LRU is kept (it needs a 3-token buffer in the decode
+state). Training/prefill use a sequential time scan for the recurrence but
+full-sequence (parallel) attention/MLP — the attention blocks are NOT
+scanned over time.
+
+Adaptations (DESIGN.md): rnn_width defaults to d_model (the HF config's
+lru_width); attention is MQA (kv=1) with window 2048 per the brief.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain_batch_dim
+from .attention import attention, attention_any
+from .cache import (
+    ring_cache_init,
+    ring_cache_shape,
+    ring_cache_write_prefill,
+    ring_cache_write_token,
+    ring_positions_prefill,
+    ring_positions_write_token,
+)
+from .layers import (
+    ParamDef,
+    apply_norm,
+    apply_rope,
+    cross_entropy_loss,
+    embed_defs,
+    embed_tokens,
+    mlp_apply,
+    mlp_defs,
+    norm_defs,
+    unembed,
+)
+
+Params = Dict[str, Any]
+_C_RGLRU = 8.0
+
+
+class RecurrentGemma:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        pattern = cfg.block_pattern or ("rec", "rec", "attn")
+        if pattern != ("rec", "rec", "attn"):
+            raise ValueError("RecurrentGemma expects the ('rec','rec','attn') pattern")
+        self.n_periods = cfg.n_layers // 3          # full (rec, rec, attn) groups
+        self.n_tail_rec = cfg.n_layers - 3 * self.n_periods  # leftover rec layers
+        self.rnn = cfg.rnn_width or cfg.d_model
+        self.hd = cfg.resolved_head_dim
+        self.window = cfg.sliding_window or 2048
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------ #
+    def _rec_defs(self, n: int) -> Params:
+        cfg, dt, r = self.cfg, self.dtype, self.rnn
+        d = cfg.d_model
+        return {
+            "norm": norm_defs(d, cfg.norm_kind, dt, layers=n),
+            "w_x": ParamDef((n, d, r), ("layers", "embed", "rnn"), dt),
+            "w_gate": ParamDef((n, d, r), ("layers", "embed", "rnn"), dt),
+            "conv_k": ParamDef((n, cfg.conv1d_width, r), ("layers", None, "rnn"), dt),
+            "w_rgate": ParamDef((n, r, r), ("layers", "rnn", None), dt),
+            "w_igate": ParamDef((n, r, r), ("layers", "rnn", None), dt),
+            "lam": ParamDef((n, r), ("layers", "rnn"), jnp.float32, "normal", 0.5),
+            "w_out": ParamDef((n, r, d), ("layers", "rnn", "embed"), dt),
+            "norm_mlp": norm_defs(d, cfg.norm_kind, dt, layers=n),
+            "mlp": mlp_defs(d, cfg.d_ff, cfg.mlp_kind, dt, layers=n),
+        }
+
+    def _attn_defs(self, n: int) -> Params:
+        cfg, dt, hd = self.cfg, self.dtype, self.hd
+        d = cfg.d_model
+        return {
+            "norm": norm_defs(d, cfg.norm_kind, dt, layers=n),
+            "wq": ParamDef((n, d, cfg.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wk": ParamDef((n, d, cfg.n_kv_heads, hd), ("layers", "embed", "kv_heads", "head_dim"), dt),
+            "wv": ParamDef((n, d, cfg.n_kv_heads, hd), ("layers", "embed", "kv_heads", "head_dim"), dt),
+            "wo": ParamDef((n, cfg.n_heads, hd, d), ("layers", "heads", "head_dim", "embed"), dt),
+            "norm_mlp": norm_defs(d, cfg.norm_kind, dt, layers=n),
+            "mlp": mlp_defs(d, cfg.d_ff, cfg.mlp_kind, dt, layers=n),
+        }
+
+    def param_defs(self) -> Params:
+        cfg = self.cfg
+        defs = {
+            "embed": embed_defs(cfg.vocab_size, cfg.d_model, self.dtype, tie=cfg.tie_embeddings),
+            # Stacked (rec, rec) of each period — two separate stacks so one
+            # scan covers all periods.
+            "rec_a": self._rec_defs(self.n_periods),
+            "rec_b": self._rec_defs(self.n_periods),
+            "attn": self._attn_defs(self.n_periods),
+            "norm_final": norm_defs(cfg.d_model, cfg.norm_kind, self.dtype),
+        }
+        if self.n_tail_rec:
+            defs["rec_tail"] = self._rec_defs(self.n_tail_rec)
+        return defs
+
+    # ------------------------------------------------------------------ #
+    # State                                                               #
+    # ------------------------------------------------------------------ #
+    def cache_shape(self, batch: int, max_len: int):
+        cfg = self.cfg
+        w = min(self.window, max_len) if max_len else self.window
+        n_rec = 2 * self.n_periods + self.n_tail_rec
+        f = jax.ShapeDtypeStruct
+        out = {
+            "rnn_h": f((n_rec, batch, self.rnn), jnp.float32),
+            "conv_buf": f((n_rec, batch, cfg.conv1d_width - 1, self.rnn), jnp.float32),
+            "attn": ring_cache_shape(self.n_periods, batch, w, cfg.n_kv_heads, self.hd, self.dtype),
+            "length": f((batch,), jnp.int32),
+        }
+        return out
+
+    def cache_init(self, batch: int, max_len: int):
+        cfg = self.cfg
+        w = min(self.window, max_len) if max_len else self.window
+        n_rec = 2 * self.n_periods + self.n_tail_rec
+        return {
+            "rnn_h": jnp.zeros((n_rec, batch, self.rnn), jnp.float32),
+            "conv_buf": jnp.zeros((n_rec, batch, cfg.conv1d_width - 1, self.rnn), jnp.float32),
+            "attn": ring_cache_init(self.n_periods, batch, w, cfg.n_kv_heads, self.hd, self.dtype),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    # ------------------------------------------------------------------ #
+    # RG-LRU block over a full sequence (time scan inside)                #
+    # ------------------------------------------------------------------ #
+    def _rec_block_seq(
+        self, h: jax.Array, lp: Params, h0: jax.Array, conv_buf0: jax.Array,
+        len_vec=None,
+    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """h: (B,S,D); h0: (B,R) initial recurrent state; conv_buf0 (B,c-1,R).
+        Returns (block output (B,S,D), final state, final conv buffer)."""
+        cfg = self.cfg
+        x = apply_norm(h, lp["norm"], cfg.norm_kind, cfg.norm_eps)
+        u = jnp.einsum("bsd,dr->bsr", x, lp["w_x"]).astype(jnp.float32)   # (B,S,R)
+        gate = jax.nn.gelu(
+            jnp.einsum("bsd,dr->bsr", x, lp["w_gate"]).astype(jnp.float32)
+        )
+        # causal temporal conv (width c): pad with the carried buffer
+        cw = cfg.conv1d_width
+        buf = conv_buf0.astype(jnp.float32)                               # (B,c-1,R)
+        u_pad = jnp.concatenate([buf, u], axis=1)                         # (B,S+c-1,R)
+        kern = lp["conv_k"].astype(jnp.float32)                           # (c,R)
+        conv = sum(
+            u_pad[:, i : i + u.shape[1], :] * kern[i][None, None, :] for i in range(cw)
+        )                                                                 # (B,S,R)
+        r_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", conv, lp["w_rgate"].astype(jnp.float32)))
+        i_g = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", conv, lp["w_igate"].astype(jnp.float32)))
+        log_a = -_C_RGLRU * jax.nn.softplus(lp["lam"].astype(jnp.float32))[None, None, :] * r_g
+        a = jnp.exp(log_a)
+        gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (i_g * conv)
+
+        def step(hprev, xs):
+            a_t, gx_t, t = xs
+            h_t = a_t * hprev + gx_t
+            if len_vec is not None:
+                # ragged prompts: freeze each slot's state past its length
+                h_t = jnp.where((t < len_vec)[:, None], h_t, hprev)
+            return h_t, h_t
+
+        h_fin, ys = jax.lax.scan(
+            step, h0.astype(jnp.float32),
+            (jnp.swapaxes(a, 0, 1), jnp.swapaxes(gated_x, 0, 1),
+             jnp.arange(u.shape[1], dtype=jnp.int32)),
+        )
+        rec = jnp.swapaxes(ys, 0, 1)                                      # (B,S,R)
+        out = jnp.einsum("bsr,rd->bsd", (rec * gate).astype(self.dtype), lp["w_out"])
+        if len_vec is None:
+            new_buf = u_pad[:, u_pad.shape[1] - (cw - 1) :, :]
+        else:
+            # ragged prompts: the decode-time conv buffer must hold each
+            # slot's last (cw-1) REAL inputs — u_pad[p + cw - 1] is u[p], so
+            # gather indices len_b + i for i in [0, cw-1)
+            bsz = u_pad.shape[0]
+            idx = len_vec[:, None] + jnp.arange(cw - 1, dtype=jnp.int32)[None, :]
+            new_buf = u_pad[jnp.arange(bsz)[:, None], idx]
+        return h + out, h_fin, new_buf
+
+    def _attn_block_seq(self, h, lp, positions, k_positions):
+        cfg = self.cfg
+        x = apply_norm(h, lp["norm"], cfg.norm_kind, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        out = attention_any(
+            q, k, v, q_positions=positions, k_positions=k_positions,
+            causal=True, window=self.window,
+        )
+        out = jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+        return h + out, (k, v)
+
+    def _mlp_block(self, h, norm_p, mlp_p):
+        cfg = self.cfg
+        x = apply_norm(h, norm_p, cfg.norm_kind, cfg.norm_eps)
+        return h + mlp_apply(x, mlp_p, cfg.mlp_kind)
+
+    # ------------------------------------------------------------------ #
+    # Full-sequence forward (training / prefill share this)               #
+    # ------------------------------------------------------------------ #
+    def _forward_seq(self, params, tokens, cache, write_cache: bool, remat: bool,
+                     lengths=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        h = embed_tokens(tokens, params["embed"]).astype(self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        len_vec = None if lengths is None else lengths.astype(jnp.int32)
+        k_positions = (
+            positions if len_vec is None
+            else jnp.where(positions < len_vec[:, None], positions, -1)
+        )
+        n_rec = 2 * self.n_periods + self.n_tail_rec
+        if cache is None:
+            rnn_h0 = constrain_batch_dim(jnp.zeros((n_rec, b, self.rnn), jnp.float32), 1)
+            conv0 = constrain_batch_dim(
+                jnp.zeros((n_rec, b, cfg.conv1d_width - 1, self.rnn), jnp.float32), 1
+            )
+        else:
+            rnn_h0, conv0 = cache["rnn_h"], cache["conv_buf"]
+        # recurrent states are ordered: periods' A, periods' B, tail
+        pa = self.n_periods
+
+        ring_pos_map = None
+        if write_cache:
+            w_ring = (cache["attn"]["k"].shape[2] if cache is not None
+                      else min(self.window, s))
+            ring_pos_map = ring_positions_prefill(
+                b, w_ring, s if len_vec is None else len_vec
+            )
+
+        def period_body(carry, xs):
+            h = carry
+            (ra, rb, at, h0a, c0a, h0b, c0b, kc, vc) = xs
+            h, hfa, cba = self._rec_block_seq(h, ra, h0a, c0a, len_vec)
+            h = self._mlp_block(h, ra["norm_mlp"], ra["mlp"])
+            h, hfb, cbb = self._rec_block_seq(h, rb, h0b, c0b, len_vec)
+            h = self._mlp_block(h, rb["norm_mlp"], rb["mlp"])
+            h, (k_new, v_new) = self._attn_block_seq(h, at, positions, k_positions)
+            if write_cache:
+                kc, vc = ring_cache_write_prefill(kc, vc, k_new, v_new, ring_pos_map)
+            h = self._mlp_block(h, at["norm_mlp"], at["mlp"])
+            return h, (hfa, cba, hfb, cbb, kc, vc)
+
+        if remat:
+            period_body = jax.checkpoint(
+                period_body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        kc0 = cache["attn"]["k"] if cache is not None else constrain_batch_dim(
+            jnp.zeros((self.n_periods, b, self.window, cfg.n_kv_heads, self.hd), self.dtype), 1
+        )
+        vc0 = cache["attn"]["v"] if cache is not None else constrain_batch_dim(
+            jnp.zeros_like(kc0), 1
+        )
+        h, (hfa, cba, hfb, cbb, k_all, v_all) = jax.lax.scan(
+            period_body,
+            h,
+            (
+                params["rec_a"], params["rec_b"], params["attn"],
+                rnn_h0[:pa], conv0[:pa], rnn_h0[pa : 2 * pa], conv0[pa : 2 * pa],
+                kc0, vc0,
+            ),
+        )
+        tail_states = []
+        if self.n_tail_rec:
+            for t in range(self.n_tail_rec):
+                lp = jax.tree_util.tree_map(lambda a: a[t], params["rec_tail"])
+                h, hft, cbt = self._rec_block_seq(
+                    h, lp, rnn_h0[2 * pa + t], conv0[2 * pa + t], len_vec
+                )
+                h = self._mlp_block(h, lp["norm_mlp"], lp["mlp"])
+                tail_states.append((hft, cbt))
+        h = apply_norm(h, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+
+        new_cache = None
+        if write_cache:
+            rnn_h = jnp.concatenate(
+                [hfa, hfb] + [st[0][None] for st in tail_states], axis=0
+            )
+            conv_buf = jnp.concatenate(
+                [cba, cbb] + [st[1][None] for st in tail_states], axis=0
+            )
+            new_len = (jnp.full((b,), s, jnp.int32) if len_vec is None else len_vec)
+            new_cache = {
+                "rnn_h": rnn_h,
+                "conv_buf": conv_buf,
+                "attn": {
+                    "k": k_all, "v": v_all,
+                    "pos": ring_pos_map,
+                    "length": new_len,
+                },
+                "length": new_len,
+            }
+        return h, new_cache
+
+    def forward(self, params, tokens, patch_embeds=None, remat: bool = True):
+        h, _ = self._forward_seq(params, tokens, None, write_cache=False, remat=remat)
+        logits = unembed(h, params["embed"])
+        return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, remat: bool = True):
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, tokens, cache, patch_embeds=None, lengths=None):
+        h, new_cache = self._forward_seq(
+            params, tokens, cache, write_cache=True, remat=False, lengths=lengths
+        )
+        b = tokens.shape[0]
+        if lengths is None:
+            h_last = h[:, -1, :]
+        else:
+            h_last = h[jnp.arange(b), jnp.maximum(lengths.astype(jnp.int32) - 1, 0), :]
+        logits = unembed(h_last, params["embed"]).astype(jnp.float32)
+        return logits, new_cache
+
+    # ------------------------------------------------------------------ #
+    # Decode                                                              #
+    # ------------------------------------------------------------------ #
+    def _rec_block_tok(self, h, lp, h0, conv_buf):
+        """h: (B,D) one token. Returns (out, new_state, new_conv_buf)."""
+        cfg = self.cfg
+        x = apply_norm(h, lp["norm"], cfg.norm_kind, cfg.norm_eps)
+        u = jnp.einsum("bd,dr->br", x, lp["w_x"]).astype(jnp.float32)
+        gate = jax.nn.gelu(jnp.einsum("bd,dr->br", x, lp["w_gate"]).astype(jnp.float32))
+        cw = cfg.conv1d_width
+        hist = jnp.concatenate([conv_buf.astype(jnp.float32), u[:, None, :]], axis=1)  # (B,c,R)
+        kern = lp["conv_k"].astype(jnp.float32)
+        conv = jnp.einsum("bcr,cr->br", hist, kern)
+        r_g = jax.nn.sigmoid(jnp.einsum("br,rq->bq", conv, lp["w_rgate"].astype(jnp.float32)))
+        i_g = jax.nn.sigmoid(jnp.einsum("br,rq->bq", conv, lp["w_igate"].astype(jnp.float32)))
+        a = jnp.exp(-_C_RGLRU * jax.nn.softplus(lp["lam"].astype(jnp.float32))[None, :] * r_g)
+        h_new = a * h0 + jnp.sqrt(jnp.maximum(1 - jnp.square(a), 1e-9)) * (i_g * conv)
+        out = jnp.einsum("br,rd->bd", (h_new * gate).astype(self.dtype), lp["w_out"])
+        return h + out, h_new, hist[:, 1:, :]
+
+    def _mlp_block_tok(self, h, norm_p, mlp_p):
+        cfg = self.cfg
+        x = apply_norm(h, norm_p, cfg.norm_kind, cfg.norm_eps)
+        return h + mlp_apply(x, mlp_p, cfg.mlp_kind)
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        lengths = cache["length"]                      # (B,)
+        h = embed_tokens(tokens[:, None], params["embed"])[:, 0, :].astype(self.dtype)
+        positions = lengths[:, None].astype(jnp.int32)
+        k_pos_now = ring_positions_write_token(cache["attn"]["pos"], lengths)
+        pa = self.n_periods
+
+        def period_body(h, xs):
+            (ra, rb, at, h0a, c0a, h0b, c0b, kc, vc) = xs
+            h, hfa, cba = self._rec_block_tok(h, ra, h0a, c0a)
+            h = self._mlp_block_tok(h, ra["norm_mlp"], ra["mlp"])
+            h, hfb, cbb = self._rec_block_tok(h, rb, h0b, c0b)
+            h = self._mlp_block_tok(h, rb["norm_mlp"], rb["mlp"])
+            # attention on one token
+            x = apply_norm(h, at["norm"], cfg.norm_kind, cfg.norm_eps)[:, None, :]
+            q = jnp.einsum("bsd,dhk->bshk", x, at["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", x, at["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, at["wv"])
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            kc, vc = ring_cache_write_token(kc, vc, k, v, lengths)
+            out = attention(
+                q, kc, vc, q_positions=positions, k_positions=k_pos_now,
+                causal=True, window=self.window,
+            )
+            out = jnp.einsum("bshk,hkd->bsd", out, at["wo"])[:, 0, :]
+            h = h + out
+            h = self._mlp_block_tok(h, at["norm_mlp"], at["mlp"])
+            return h, (hfa, cba, hfb, cbb, kc, vc)
+
+        h, (hfa, cba, hfb, cbb, k_all, v_all) = jax.lax.scan(
+            period_body,
+            h,
+            (
+                params["rec_a"], params["rec_b"], params["attn"],
+                cache["rnn_h"][:pa], cache["conv_buf"][:pa],
+                cache["rnn_h"][pa : 2 * pa], cache["conv_buf"][pa : 2 * pa],
+                cache["attn"]["k"], cache["attn"]["v"],
+            ),
+        )
+        tails_h, tails_c = [], []
+        for t in range(self.n_tail_rec):
+            lp = jax.tree_util.tree_map(lambda a: a[t], params["rec_tail"])
+            h, hft, cbt = self._rec_block_tok(
+                h, lp, cache["rnn_h"][2 * pa + t], cache["conv_buf"][2 * pa + t]
+            )
+            h = self._mlp_block_tok(h, lp["norm_mlp"], lp["mlp"])
+            tails_h.append(hft[None])
+            tails_c.append(cbt[None])
+        h = apply_norm(h, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        logits = unembed(h, params["embed"]).astype(jnp.float32)
+        new_cache = {
+            "rnn_h": jnp.concatenate([hfa, hfb] + tails_h, axis=0),
+            "conv_buf": jnp.concatenate([cba, cbb] + tails_c, axis=0),
+            "attn": {
+                "k": k_all, "v": v_all,
+                "pos": k_pos_now,
+                "length": cache["attn"]["length"] + 1,
+            },
+            "length": lengths + 1,
+        }
+        return logits, new_cache

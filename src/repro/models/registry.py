@@ -1,0 +1,28 @@
+"""Model registry: family → model class."""
+from __future__ import annotations
+
+from typing import Any
+
+from ..configs.base import ArchConfig
+
+MODEL_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid", "audio")
+
+
+def get_model(cfg: ArchConfig) -> Any:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from .transformer import TransformerLM
+
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        from .xlstm import XLSTM
+
+        return XLSTM(cfg)
+    if cfg.family == "hybrid":
+        from .recurrentgemma import RecurrentGemma
+
+        return RecurrentGemma(cfg)
+    if cfg.family == "audio":
+        from .whisper import Whisper
+
+        return Whisper(cfg)
+    raise KeyError(f"unknown model family {cfg.family!r}")

@@ -1,0 +1,298 @@
+"""Whisper (arXiv:2212.04356) — encoder-decoder backbone, conv frontend stub.
+
+The audio frontend (log-mel + 2×conv) is a STUB per the brief: inputs are
+precomputed frame embeddings (B, S_enc, d_model). The backbone is faithful:
+  * encoder: bidirectional self-attention + GELU MLP, LayerNorm w/ bias
+  * decoder: causal self-attention + cross-attention + GELU MLP
+  * tied embedding / unembedding (whisper ties them)
+
+Adaptations (DESIGN.md): sinusoidal positions on both stacks (whisper's
+decoder uses a learned table capped at 448 positions; the assigned
+``decode_32k`` cell needs arbitrary positions, so we use the sinusoid
+everywhere — a positional-encoding detail, not a structural one).
+
+Serving semantics: "prefill" = encoder pass + cross-KV build + decoder
+prompt prefill; "decode" = one decoder token (self-KV append, cross-KV
+reused). The paper's scheduler treats encoder+prompt work as the prefill
+phase cost N_i^p — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attention, attention_any, attention_cross
+from .cache import full_cache_init, full_cache_shape, full_cache_write, full_cache_write_token
+from .layers import (
+    ParamDef,
+    apply_norm,
+    cross_entropy_loss,
+    embed_defs,
+    embed_tokens,
+    mlp_apply,
+    mlp_defs,
+    norm_defs,
+    sinusoidal_positions,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+class Whisper:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        if not cfg.is_encoder_decoder or cfg.encoder_layers <= 0:
+            raise ValueError("Whisper requires is_encoder_decoder and encoder_layers")
+        self.hd = cfg.resolved_head_dim
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------ #
+    def _attn_defs(self, n: int, kv_heads: int) -> Params:
+        cfg, dt, hd = self.cfg, self.dtype, self.hd
+        d = cfg.d_model
+        return {
+            "wq": ParamDef((n, d, cfg.n_heads, hd), ("layers", "embed", "heads", "head_dim"), dt),
+            "wk": ParamDef((n, d, kv_heads, hd), ("layers", "embed", "kv_heads", "head_dim"), dt),
+            "wv": ParamDef((n, d, kv_heads, hd), ("layers", "embed", "kv_heads", "head_dim"), dt),
+            "wo": ParamDef((n, cfg.n_heads, hd, d), ("layers", "heads", "head_dim", "embed"), dt),
+            "bq": ParamDef((n, cfg.n_heads, hd), ("layers", "heads", "head_dim"), dt, "zeros"),
+            "bv": ParamDef((n, kv_heads, hd), ("layers", "kv_heads", "head_dim"), dt, "zeros"),
+            "bo": ParamDef((n, d), ("layers", "embed"), dt, "zeros"),
+        }
+
+    def param_defs(self) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        d, ne, nd = cfg.d_model, cfg.encoder_layers, cfg.n_layers
+        enc = {
+            "norm_attn": norm_defs(d, "layernorm", dt, layers=ne),
+            "attn": self._attn_defs(ne, cfg.n_kv_heads),
+            "norm_mlp": norm_defs(d, "layernorm", dt, layers=ne),
+            "mlp": mlp_defs(d, cfg.d_ff, "gelu", dt, layers=ne, use_bias=True),
+        }
+        dec = {
+            "norm_self": norm_defs(d, "layernorm", dt, layers=nd),
+            "self_attn": self._attn_defs(nd, cfg.n_kv_heads),
+            "norm_cross": norm_defs(d, "layernorm", dt, layers=nd),
+            "cross_attn": self._attn_defs(nd, cfg.n_kv_heads),
+            "norm_mlp": norm_defs(d, "layernorm", dt, layers=nd),
+            "mlp": mlp_defs(d, cfg.d_ff, "gelu", dt, layers=nd, use_bias=True),
+        }
+        return {
+            "embed": embed_defs(cfg.vocab_size, d, dt, tie=True),
+            "encoder": enc,
+            "decoder": dec,
+            "norm_enc_final": norm_defs(d, "layernorm", dt),
+            "norm_dec_final": norm_defs(d, "layernorm", dt),
+        }
+
+    # ------------------------------------------------------------------ #
+    def _mha(self, x_q, x_kv, lp, *, causal, q_positions=None, k_positions=None):
+        q = jnp.einsum("bsd,dhk->bshk", x_q, lp["wq"]) + lp["bq"]
+        k = jnp.einsum("bsd,dhk->bshk", x_kv, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x_kv, lp["wv"]) + lp["bv"]
+        b = q.shape[0]
+        if q_positions is None:
+            q_positions = jnp.broadcast_to(
+                jnp.arange(q.shape[1], dtype=jnp.int32)[None], (b, q.shape[1])
+            )
+        if k_positions is None:
+            k_positions = jnp.broadcast_to(
+                jnp.arange(k.shape[1], dtype=jnp.int32)[None], (b, k.shape[1])
+            )
+        out = attention_any(
+            q, k, v, q_positions=q_positions, k_positions=k_positions, causal=causal
+        )
+        return jnp.einsum("bshk,hkd->bsd", out, lp["wo"]) + lp["bo"], (k, v)
+
+    # ------------------------------------------------------------------ #
+    def encode(self, params: Params, frames: jax.Array, remat: bool = False) -> jax.Array:
+        """frames: (B, S_enc, D) stub embeddings → encoder states."""
+        cfg = self.cfg
+        b, s, d = frames.shape
+        pos = sinusoidal_positions(s, d).astype(self.dtype)
+        h = frames.astype(self.dtype) + pos[None]
+
+        def body(h, lp):
+            x = apply_norm(h, lp["norm_attn"], "layernorm", cfg.norm_eps)
+            out, _ = self._mha(x, x, lp["attn"], causal=False)
+            h = h + out
+            x = apply_norm(h, lp["norm_mlp"], "layernorm", cfg.norm_eps)
+            h = h + mlp_apply(x, lp["mlp"], "gelu")
+            return h, None
+
+        if remat:
+            # without this, backward stores every chunked-attention residual
+            # of every encoder layer — hundreds of GB at 4k×256
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, h, params["encoder"])
+        return apply_norm(h, params["norm_enc_final"], "layernorm", cfg.norm_eps)
+
+    def _decoder_full(self, params, tokens, enc_states, remat: bool):
+        cfg = self.cfg
+        b, s = tokens.shape
+        d = cfg.d_model
+        h = embed_tokens(tokens, params["embed"]).astype(self.dtype)
+        h = h + sinusoidal_positions(s, d).astype(self.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(h, lp):
+            x = apply_norm(h, lp["norm_self"], "layernorm", cfg.norm_eps)
+            out, _ = self._mha(
+                x, x, lp["self_attn"], causal=True,
+                q_positions=positions, k_positions=positions,
+            )
+            h = h + out
+            x = apply_norm(h, lp["norm_cross"], "layernorm", cfg.norm_eps)
+            out, _ = self._mha(x, enc_states, lp["cross_attn"], causal=False)
+            h = h + out
+            x = apply_norm(h, lp["norm_mlp"], "layernorm", cfg.norm_eps)
+            h = h + mlp_apply(x, lp["mlp"], "gelu")
+            return h, None
+
+        if remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, h, params["decoder"])
+        return apply_norm(h, params["norm_dec_final"], "layernorm", cfg.norm_eps)
+
+    # ------------------------------------------------------------------ #
+    def forward(self, params, batch_or_tokens, patch_embeds=None, remat: bool = True):
+        """Training forward. Accepts {'frames','tokens'} dict or tokens with
+        ``patch_embeds`` doubling as frames (uniform smoke-test interface)."""
+        if isinstance(batch_or_tokens, dict):
+            frames = batch_or_tokens["frames"]
+            tokens = batch_or_tokens["tokens"]
+        else:
+            tokens = batch_or_tokens
+            frames = patch_embeds
+        enc = self.encode(params, frames, remat=remat)
+        h = self._decoder_full(params, tokens, enc, remat)
+        logits = unembed(h, params["embed"])
+        return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, remat: bool = True):
+        logits, _ = self.forward(params, batch, remat=remat)
+        return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------------ #
+    # Serving                                                             #
+    # ------------------------------------------------------------------ #
+    def cache_shape(self, batch: int, max_len: int, enc_len: int = 1500):
+        cfg = self.cfg
+        self_c = full_cache_shape(cfg.n_layers, batch, max_len, cfg.n_kv_heads, self.hd, self.dtype)
+        f = jax.ShapeDtypeStruct
+        return {
+            "self": self_c,
+            "cross_k": f((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, self.hd), self.dtype),
+            "cross_v": f((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, self.hd), self.dtype),
+        }
+
+    def cache_init(self, batch: int, max_len: int, enc_len: int = 1500):
+        cfg = self.cfg
+        return {
+            "self": full_cache_init(cfg.n_layers, batch, max_len, cfg.n_kv_heads, self.hd, self.dtype),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, self.hd), self.dtype),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, self.hd), self.dtype),
+        }
+
+    def prefill(self, params, tokens, cache, patch_embeds=None):
+        """Encoder pass + decoder prompt prefill. ``patch_embeds`` carries the
+        stub frame embeddings (B, S_enc, D)."""
+        cfg = self.cfg
+        frames = patch_embeds
+        if frames is None:
+            raise ValueError("whisper prefill needs frame embeddings")
+        enc = self.encode(params, frames)
+        b, s = tokens.shape
+        d = cfg.d_model
+        h = embed_tokens(tokens, params["embed"]).astype(self.dtype)
+        h = h + sinusoidal_positions(s, d).astype(self.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            x = apply_norm(h, lp["norm_self"], "layernorm", cfg.norm_eps)
+            out, (k_new, v_new) = self._mha(
+                x, x, lp["self_attn"], causal=True,
+                q_positions=positions, k_positions=positions,
+            )
+            h = h + out
+            kc, vc = full_cache_write(kc, vc, k_new, v_new, jnp.int32(0))
+            x = apply_norm(h, lp["norm_cross"], "layernorm", cfg.norm_eps)
+            out, (ck, cv) = self._mha(x, enc, lp["cross_attn"], causal=False)
+            h = h + out
+            x = apply_norm(h, lp["norm_mlp"], "layernorm", cfg.norm_eps)
+            h = h + mlp_apply(x, lp["mlp"], "gelu")
+            return h, (kc, vc, ck, cv)
+
+        h, (k_all, v_all, ck_all, cv_all) = jax.lax.scan(
+            body, h, (params["decoder"], cache["self"]["k"], cache["self"]["v"])
+        )
+        h = apply_norm(h, params["norm_dec_final"], "layernorm", cfg.norm_eps)
+        logits = unembed(h[:, -1, :], params["embed"]).astype(jnp.float32)
+        new_cache = {
+            "self": {"k": k_all, "v": v_all,
+                     "length": jnp.full((b,), s, jnp.int32)},
+            "cross_k": ck_all,
+            "cross_v": cv_all,
+        }
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        lengths = cache["self"]["length"]              # (B,)
+        d = cfg.d_model
+        h = embed_tokens(tokens[:, None], params["embed"]).astype(self.dtype)
+        # sinusoid at each slot's (traced) position, via the closed form
+        posf = lengths.astype(jnp.float32)[:, None]    # (B, 1)
+        dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+        angle = posf / jnp.power(10000.0, 2 * dim / d)
+        pos_emb = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(self.dtype)
+        h = h + pos_emb[:, None, :]
+        positions = lengths[:, None].astype(jnp.int32)
+        max_len = cache["self"]["k"].shape[2]
+        idx = jnp.arange(max_len, dtype=jnp.int32)
+        k_pos_now = jnp.where(idx[None, :] <= lengths[:, None], idx[None, :], -1)
+
+        def body(h, xs):
+            lp, kc, vc, ck, cv = xs
+            x = apply_norm(h, lp["norm_self"], "layernorm", cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x, lp["self_attn"]["wq"]) + lp["self_attn"]["bq"]
+            k = jnp.einsum("bsd,dhk->bshk", x, lp["self_attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, lp["self_attn"]["wv"]) + lp["self_attn"]["bv"]
+            kc, vc = full_cache_write_token(kc, vc, k, v, lengths)
+            out = attention(
+                q, kc, vc, q_positions=positions, k_positions=k_pos_now, causal=True
+            )
+            out = jnp.einsum("bshk,hkd->bsd", out, lp["self_attn"]["wo"]) + lp["self_attn"]["bo"]
+            h = h + out
+            x = apply_norm(h, lp["norm_cross"], "layernorm", cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x, lp["cross_attn"]["wq"]) + lp["cross_attn"]["bq"]
+            out = attention_cross(q, ck, cv)
+            out = jnp.einsum("bshk,hkd->bsd", out, lp["cross_attn"]["wo"]) + lp["cross_attn"]["bo"]
+            h = h + out
+            x = apply_norm(h, lp["norm_mlp"], "layernorm", cfg.norm_eps)
+            h = h + mlp_apply(x, lp["mlp"], "gelu")
+            return h, (kc, vc)
+
+        h, (k_all, v_all) = jax.lax.scan(
+            body,
+            h,
+            (
+                params["decoder"],
+                cache["self"]["k"], cache["self"]["v"],
+                cache["cross_k"], cache["cross_v"],
+            ),
+        )
+        h = apply_norm(h, params["norm_dec_final"], "layernorm", cfg.norm_eps)
+        logits = unembed(h[:, 0, :], params["embed"]).astype(jnp.float32)
+        new_cache = {
+            "self": {"k": k_all, "v": v_all, "length": lengths + 1},
+            "cross_k": cache["cross_k"],
+            "cross_v": cache["cross_v"],
+        }
+        return logits, new_cache

@@ -1,0 +1,305 @@
+"""xLSTM (arXiv:2405.04517) — alternating mLSTM / sLSTM blocks.
+
+Recurrent decode state replaces the KV cache entirely, so per-token decode
+cost is constant in context length — this family runs the ``long_500k`` cell
+natively. Implementation notes (documented adaptations, see DESIGN.md):
+
+  * Exponential gating with the paper's max-stabilizer ``m`` (both cells).
+  * mLSTM: per-head matrix memory C ∈ R^{hd×hd}, normalizer n, scalar gates.
+  * sLSTM: per-head vector memory with block-diagonal recurrent weights
+    (one hd×hd recurrence per head, the paper's head-wise mixing).
+  * The width-4 causal convs of the reference blocks are omitted (they are
+    a local-mixing detail orthogonal to the recurrence; noted in DESIGN.md).
+  * Training runs the same per-token step function under ``lax.scan`` over
+    time (sequential form). The chunkwise-parallel training form is a
+    kernel-level optimization we document but do not need for the dry-run.
+
+The per-token step function is shared verbatim between training, prefill
+and decode, so serve/train consistency is structural.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain_batch_dim
+from .layers import (
+    ParamDef,
+    apply_norm,
+    cross_entropy_loss,
+    embed_defs,
+    embed_tokens,
+    norm_defs,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+class XLSTM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        if cfg.n_layers % 2 != 0:
+            raise ValueError("XLSTM expects an even layer count (mLSTM/sLSTM pairs)")
+        self.n_pairs = cfg.n_layers // 2
+        self.hd = cfg.resolved_head_dim or cfg.d_model // cfg.n_heads
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------ #
+    def param_defs(self) -> Params:
+        cfg, hd, dt = self.cfg, self.hd, self.dtype
+        P, H, d = self.n_pairs, cfg.n_heads, cfg.d_model
+
+        def proj(*shape_axes):
+            shape, axes = zip(*shape_axes)
+            return ParamDef((P,) + tuple(shape), ("layers",) + tuple(axes), dt)
+
+        mlstm = {
+            "norm": norm_defs(d, cfg.norm_kind, dt, layers=P),
+            "wq": proj((d, "embed"), (H, "heads"), (hd, "head_dim")),
+            "wk": proj((d, "embed"), (H, "heads"), (hd, "head_dim")),
+            "wv": proj((d, "embed"), (H, "heads"), (hd, "head_dim")),
+            "wif": proj((d, "embed"), (H, "heads"), (2, None)),   # i/f gate preacts
+            "wgate": proj((d, "embed"), (d, "rnn")),
+            "wout": proj((H, "heads"), (hd, "head_dim"), (d, "embed")),
+        }
+        slstm = {
+            "norm": norm_defs(d, cfg.norm_kind, dt, layers=P),
+            "wz": proj((d, "embed"), (H, "heads"), (hd, "head_dim")),
+            "wi": proj((d, "embed"), (H, "heads"), (hd, "head_dim")),
+            "wf": proj((d, "embed"), (H, "heads"), (hd, "head_dim")),
+            "wo": proj((d, "embed"), (H, "heads"), (hd, "head_dim")),
+            "rz": proj((H, "heads"), (hd, "head_dim"), (hd, None)),
+            "ri": proj((H, "heads"), (hd, "head_dim"), (hd, None)),
+            "rf": proj((H, "heads"), (hd, "head_dim"), (hd, None)),
+            "ro": proj((H, "heads"), (hd, "head_dim"), (hd, None)),
+            "wout": proj((H, "heads"), (hd, "head_dim"), (d, "embed")),
+        }
+        return {
+            "embed": embed_defs(cfg.vocab_size, d, dt, tie=cfg.tie_embeddings),
+            "pairs": {"mlstm": mlstm, "slstm": slstm},
+            "norm_final": norm_defs(d, cfg.norm_kind, dt),
+        }
+
+    # ------------------------------------------------------------------ #
+    # State (the "cache")                                                 #
+    # ------------------------------------------------------------------ #
+    def cache_shape(self, batch: int, max_len: int = 0):
+        cfg, hd, P, H = self.cfg, self.hd, self.n_pairs, self.cfg.n_heads
+        f = jax.ShapeDtypeStruct
+        return {
+            "m_C": f((P, batch, H, hd, hd), jnp.float32),
+            "m_n": f((P, batch, H, hd), jnp.float32),
+            "m_m": f((P, batch, H), jnp.float32),
+            "s_c": f((P, batch, H, hd), jnp.float32),
+            "s_n": f((P, batch, H, hd), jnp.float32),
+            "s_h": f((P, batch, H, hd), jnp.float32),
+            "s_m": f((P, batch, H), jnp.float32),
+            "length": f((batch,), jnp.int32),
+        }
+
+    def cache_init(self, batch: int, max_len: int = 0):
+        # Batch-shard the zero-init states when a mesh is ambient: GSPMD
+        # leaves internally-created intermediates replicated otherwise,
+        # multiplying the BPTT carry footprint by the mesh size.
+        return jax.tree_util.tree_map(
+            lambda s: constrain_batch_dim(jnp.zeros(s.shape, s.dtype), 1),
+            self.cache_shape(batch, max_len),
+        )
+
+    # ------------------------------------------------------------------ #
+    # Cells                                                               #
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _mlstm_cell(state, q, k, v, i_pre, f_pre):
+        """state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)); q,k,v (B,H,hd)."""
+        C, n, m = state
+        m_new = jnp.maximum(f_pre + m, i_pre)                     # (B,H)
+        i_g = jnp.exp(i_pre - m_new)[..., None]                   # (B,H,1)
+        f_g = jnp.exp(f_pre + m - m_new)[..., None]
+        outer = v[..., :, None] * k[..., None, :]                 # (B,H,hd,hd)
+        C = f_g[..., None] * C + i_g[..., None] * outer
+        n = f_g * n + i_g * k
+        num = jnp.einsum("bhij,bhj->bhi", C, q)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)), 1.0)[..., None]
+        h = num / den
+        return (C, n, m_new), h
+
+    @staticmethod
+    def _slstm_cell(state, z_pre, i_pre, f_pre, o_pre):
+        """state: (c, n, h, m) each (B,H,hd); gate preacts (B,H,hd)."""
+        c, n, h, m = state
+        # Head-wise scalar stabilizer from the max gate preactivation.
+        m_new = jnp.maximum(f_pre.max(-1) + m, i_pre.max(-1))
+        i_g = jnp.exp(i_pre - m_new[..., None])
+        f_g = jnp.exp(f_pre + m[..., None] - m_new[..., None])
+        z = jnp.tanh(z_pre)
+        c = f_g * c + i_g * z
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    # ------------------------------------------------------------------ #
+    # One full-depth step for one token                                   #
+    # ------------------------------------------------------------------ #
+    def _token_step(self, params: Params, cache: Dict[str, jax.Array], x: jax.Array):
+        """x: (B, D) one token's hidden; returns (new_cache, y (B, D))."""
+        cfg = self.cfg
+
+        def pair_body(h, xs):
+            (mp, sp, mC, mn, mm, sc, sn, sh, sm) = xs
+            # --- mLSTM block ------------------------------------------ #
+            xn = apply_norm(h, mp["norm"], cfg.norm_kind, cfg.norm_eps).astype(jnp.float32)
+            q = jnp.einsum("bd,dhk->bhk", xn, mp["wq"].astype(jnp.float32))
+            k = jnp.einsum("bd,dhk->bhk", xn, mp["wk"].astype(jnp.float32)) / (self.hd ** 0.5)
+            v = jnp.einsum("bd,dhk->bhk", xn, mp["wv"].astype(jnp.float32))
+            gates = jnp.einsum("bd,dhg->bhg", xn, mp["wif"].astype(jnp.float32))
+            (mC, mn, mm), hm = self._mlstm_cell((mC, mn, mm), q, k, v, gates[..., 0], gates[..., 1])
+            gate = jax.nn.silu(jnp.einsum("bd,de->be", xn, mp["wgate"].astype(jnp.float32)))
+            out = jnp.einsum("bhk,hkd->bd", hm, mp["wout"].astype(jnp.float32)) * gate
+            h = h + out.astype(h.dtype)
+            # --- sLSTM block ------------------------------------------ #
+            xn = apply_norm(h, sp["norm"], cfg.norm_kind, cfg.norm_eps).astype(jnp.float32)
+            hprev = sh  # (B,H,hd) recurrent input
+            def pre(w, r):
+                return jnp.einsum("bd,dhk->bhk", xn, w.astype(jnp.float32)) + jnp.einsum(
+                    "bhk,hkj->bhj", hprev, r.astype(jnp.float32)
+                )
+            (sc, sn, sh, sm), hs = self._slstm_cell(
+                (sc, sn, sh, sm),
+                pre(sp["wz"], sp["rz"]),
+                pre(sp["wi"], sp["ri"]),
+                pre(sp["wf"], sp["rf"]),
+                pre(sp["wo"], sp["ro"]),
+            )
+            out = jnp.einsum("bhk,hkd->bd", hs, sp["wout"].astype(jnp.float32))
+            h = h + out.astype(h.dtype)
+            return h, (mC, mn, mm, sc, sn, sh, sm)
+
+        h, new_states = jax.lax.scan(
+            pair_body,
+            x,
+            (
+                params["pairs"]["mlstm"],
+                params["pairs"]["slstm"],
+                cache["m_C"], cache["m_n"], cache["m_m"],
+                cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"],
+            ),
+        )
+        new_cache = {
+            "m_C": new_states[0], "m_n": new_states[1], "m_m": new_states[2],
+            "s_c": new_states[3], "s_n": new_states[4], "s_h": new_states[5],
+            "s_m": new_states[6],
+            "length": cache["length"] + 1,
+        }
+        return new_cache, h
+
+    # ------------------------------------------------------------------ #
+    # Public API (mirrors TransformerLM)                                  #
+    # ------------------------------------------------------------------ #
+    def forward(
+        self, params: Params, tokens: jax.Array,
+        patch_embeds: Optional[jax.Array] = None, remat: bool = True,
+        time_chunk: int = 64,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Training forward.
+
+        Memory note: a flat time scan would store the full recurrent state at
+        *every* step for the backward pass (states × seq_len — terabytes at
+        4k × 256). We scan over time *chunks* and rematerialize inside each
+        chunk, so the stored carries are states × (seq/chunk) and the
+        backward recomputes one chunk at a time (standard BPTT
+        checkpointing; chunk ≈ √seq balances storage vs recompute).
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        emb = embed_tokens(tokens, params["embed"]).astype(self.dtype)  # (B,S,D)
+        cache0 = self.cache_init(b)
+
+        chunk = min(time_chunk, s)
+        if s % chunk != 0:
+            chunk = s  # fall back to one chunk
+        n_chunks = s // chunk
+        emb_t = jnp.swapaxes(emb, 0, 1).reshape(n_chunks, chunk, b, cfg.d_model)
+
+        def chunk_body(cache, x_chunk):
+            def t_body(c, x_t):
+                c, y = self._token_step(params, c, x_t)
+                return c, y
+
+            cache, ys = jax.lax.scan(t_body, cache, x_chunk)
+            return cache, ys
+
+        if remat:
+            chunk_body = jax.checkpoint(
+                chunk_body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        _, ys = jax.lax.scan(chunk_body, cache0, emb_t)       # (n_chunks, chunk, B, D)
+        h = jnp.swapaxes(ys.reshape(s, b, cfg.d_model), 0, 1)  # (B,S,D)
+        h = apply_norm(h, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        logits = unembed(h, params["embed"])
+        return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array], remat: bool = True) -> jax.Array:
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(
+        self, params: Params, tokens: jax.Array, cache: Dict[str, jax.Array],
+        patch_embeds: Optional[jax.Array] = None,
+        lengths: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Ragged prompts: per-slot state updates freeze once t ≥ lengths[b]
+        (right-padding never touches a slot's recurrent state), and logits
+        are taken at each slot's last real token."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        emb = embed_tokens(tokens, params["embed"]).astype(self.dtype)
+        len_vec = (
+            jnp.full((b,), s, jnp.int32) if lengths is None
+            else lengths.astype(jnp.int32)
+        )
+
+        def time_body(carry, xs):
+            c, h_keep = carry
+            x_t, t = xs
+            c_new, y = self._token_step(params, c, x_t)
+            live = t < len_vec                                     # (B,)
+
+            def freeze(new, old):
+                if new.ndim == 0 or new.shape[0] != c["m_C"].shape[0]:
+                    return new  # "length" counter etc.
+                mask = live.reshape((1, b) + (1,) * (new.ndim - 2))
+                return jnp.where(mask, new, old)
+
+            c_out = {
+                k: (freeze(c_new[k], c[k]) if k != "length" else c_new[k])
+                for k in c_new
+            }
+            is_last = (t == len_vec - 1)[:, None]
+            h_keep = jnp.where(is_last, y, h_keep)
+            return (c_out, h_keep), None
+
+        h0 = jnp.zeros((b, cfg.d_model), self.dtype)
+        (cache, h_last), _ = jax.lax.scan(
+            time_body, (cache, h0),
+            (jnp.swapaxes(emb, 0, 1), jnp.arange(s, dtype=jnp.int32)),
+        )
+        cache = dict(cache)
+        cache["length"] = jnp.zeros((b,), jnp.int32) + len_vec
+        h_last = apply_norm(h_last, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        logits = unembed(h_last, params["embed"]).astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(
+        self, params: Params, tokens: jax.Array, cache: Dict[str, jax.Array],
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x = embed_tokens(tokens[:, None], params["embed"])[:, 0, :].astype(self.dtype)
+        cache, h = self._token_step(params, cache, x)
+        h = apply_norm(h, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        logits = unembed(h, params["embed"]).astype(jnp.float32)
+        return logits, cache

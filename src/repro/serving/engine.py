@@ -1,0 +1,306 @@
+"""The serving engine: continuous batching under PD Competition, with the
+paper's hybrid offline-online scheduler as the dispatch policy.
+
+This is the real-execution counterpart of ``core.simulator`` — the same
+``RequestScheduler`` (offline assignment / Algorithm 1 stealing) and
+``IterationPolicy`` (prefill-first / Lagrangian) objects drive actual jitted
+model steps:
+
+  * a *prefill stage* packs ≤ 1 new request per idle slot (Eq. 16), pads to
+    a bucket shape (the paper's levels ↔ jit compilation buckets), runs
+    ``model.prefill`` and scatters the produced KV rows into the slot cache;
+  * a *decode round* runs ``model.decode_step`` over all J slots (one token
+    per active slot), exactly the paper's iteration granularity;
+  * between rounds the iteration policy decides prefill-vs-decode using the
+    online profiler's continuously refit cost model.
+
+The engine emits the same ``ScheduleTrace`` as the simulator, so utilization
+and Gantt accounting are directly comparable, and it can checkpoint/restore
+mid-run (slot cache + queues + scheduler state) for fault tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cost_model import CostModel
+from ..core.iteration import CandidateBatch, IterationPolicy, SystemSnapshot
+from ..core.online import RequestScheduler
+from ..core.types import (
+    ClientState,
+    Request,
+    ScheduleTrace,
+    StageKind,
+    StageRecord,
+)
+from .kv_slots import SlotManager
+from .profiler import OnlineProfiler
+from .sampler import greedy
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 8
+    max_len: int = 256
+    prefill_seq_buckets: Tuple[int, ...] = (32, 64, 128)
+    prefill_req_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    eos_id: Optional[int] = None          # None → workload-driven stop
+    max_stages: int = 200_000
+    # Straggler mitigation: a prefill stage measuring > straggler_factor ×
+    # the cost model's prediction halves the packing budget for subsequent
+    # stages (smaller stages bound the blast radius of a slow node); the
+    # budget recovers by one step per on-prediction stage.
+    straggler_factor: float = 3.0
+
+
+def _bucket(x: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if x <= b:
+            return b
+    return buckets[-1]
+
+
+class Engine:
+    def __init__(
+        self,
+        model,
+        params: Tree,
+        config: EngineConfig,
+        profiler: Optional[OnlineProfiler] = None,
+        sampler: Callable = greedy,
+    ):
+        self.model = model
+        self.params = params
+        self.cfg = config
+        self.profiler = profiler or OnlineProfiler()
+        self.sampler = sampler
+        self.slots = SlotManager(model, config.n_slots, config.max_len)
+        self.pending_token = np.zeros(config.n_slots, dtype=np.int32)
+        self._budget_shift = 0            # straggler mitigation state
+        self.straggler_events = 0
+
+        self._decode_jit = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c), donate_argnums=(2,)
+        )
+        self._prefill_jit = jax.jit(
+            lambda p, t, c, l: model.prefill(p, t, c, lengths=l),
+            donate_argnums=(2,),
+        )
+
+    # ------------------------------------------------------------------ #
+    def _run_prefill_stage(self, pairs: List[Tuple[ClientState, Request]]):
+        """Execute one packed prefill; returns (duration_s, total_tokens)."""
+        reqs = [r for _, r in pairs]
+        slots = [c.cid for c, _ in pairs]
+        max_len = max(r.n_prefill for r in reqs)
+        s_pad = _bucket(max_len, self.cfg.prefill_seq_buckets)
+        n_pad = _bucket(len(reqs), self.cfg.prefill_req_buckets)
+        tokens = np.zeros((n_pad, s_pad), dtype=np.int32)
+        lengths = np.ones(n_pad, dtype=np.int32)
+        for i, r in enumerate(reqs):
+            # synthetic prompt tokens derived from the request id (demo data;
+            # a production engine receives the tokenized prompt here)
+            rng = np.random.default_rng(r.rid)
+            tokens[i, : r.n_prefill] = rng.integers(
+                1, self._vocab(), size=r.n_prefill
+            )
+            lengths[i] = r.n_prefill
+        cache = self.model.cache_init(n_pad, s_pad)
+        t0 = time.perf_counter()
+        logits, pref_cache = self._prefill_jit(
+            self.params, jnp.asarray(tokens), cache, jnp.asarray(lengths)
+        )
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        first = np.asarray(self.sampler(logits))
+        # scatter only the real rows (the batch was padded to a bucket)
+        real_cache = jax.tree_util.tree_map(
+            lambda x: x[:, : len(slots)] if x.ndim >= 3 else x[: len(slots)],
+            pref_cache,
+        )
+        self.slots.merge_prefill(real_cache, slots)
+        for i, (client, req) in enumerate(pairs):
+            self.slots.bind(client.cid, req)
+            self.slots.emitted[client.cid] = 1     # prefill samples token #1
+            self.pending_token[client.cid] = int(first[i])
+            client.current = req
+        total_tokens = sum(r.n_prefill for r in reqs)
+        self.profiler.record_prefill(total_tokens, dt)
+        # straggler mitigation (request-level stealing is Algorithm 1's job;
+        # this handles slow *stages*)
+        predicted = self.profiler.cost_model.prefill_time(total_tokens)
+        if predicted > 0 and dt > self.cfg.straggler_factor * predicted:
+            self._budget_shift = min(self._budget_shift + 1, 3)
+            self.straggler_events += 1
+        elif self._budget_shift > 0 and dt < 1.5 * predicted:
+            self._budget_shift -= 1
+        return dt, total_tokens
+
+    def _vocab(self) -> int:
+        return self.model.cfg.vocab_size
+
+    def _run_decode_round(self) -> Tuple[float, List[int]]:
+        """One decode round over all slots; returns (duration, finished slots)."""
+        tokens = jnp.asarray(self.pending_token)
+        t0 = time.perf_counter()
+        logits, self.slots.cache = self._decode_jit(
+            self.params, tokens, self.slots.cache
+        )
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        nxt = np.asarray(self.sampler(logits))
+        finished = []
+        for slot in self.slots.active_slots:
+            req = self.slots.request_of[slot]
+            self.slots.emitted[slot] += 1
+            self.pending_token[slot] = int(nxt[slot])
+            req.decoded = self.slots.emitted[slot]
+            done = (
+                self.cfg.eos_id is not None and int(nxt[slot]) == self.cfg.eos_id
+            ) or (self.cfg.eos_id is None and self.slots.emitted[slot] >= req.n_decode)
+            if done:
+                finished.append(slot)
+        n_active = len(self.slots.active_slots)
+        self.profiler.record_decode(n_active, dt)
+        return dt, finished
+
+    # ------------------------------------------------------------------ #
+    def serve(
+        self,
+        requests: Sequence[Request],
+        clients: List[ClientState],
+        request_scheduler: RequestScheduler,
+        iteration_policy: IterationPolicy,
+        policy_name: str = "",
+    ) -> ScheduleTrace:
+        """Serve a request set to completion; returns the execution trace."""
+        cfg = self.cfg
+        if len(clients) != cfg.n_slots:
+            raise ValueError("clients must match n_slots")
+        trace = ScheduleTrace(
+            num_clients=cfg.n_slots,
+            requests=list(requests),
+            policy_name=policy_name or f"engine/{iteration_policy.name}",
+        )
+        for r in requests:
+            r.reset()
+        t = 0.0
+        bin_index = -1
+
+        for _ in range(cfg.max_stages):
+            max_cap = max(
+                self.profiler.cost_model.max_level.cap_tokens >> self._budget_shift,
+                self.profiler.cost_model.level_caps[0],
+            )
+            active = [c for c in clients if c.current is not None]
+            idle = [c for c in clients if c.current is None]
+            if not active and not request_scheduler.has_pending():
+                break
+            pairs = request_scheduler.propose_batch(idle, max_cap)
+            candidate = CandidateBatch(
+                requests=[r for _, r in pairs],
+                client_ids=[c.cid for c, _ in pairs],
+            )
+            snap = SystemSnapshot(
+                n_clients=cfg.n_slots,
+                n_active=len(active),
+                n_idle=len(idle),
+                active_remaining_est=sum(
+                    max(0, (c.current.n_decode_est or 0) - c.current.decoded)
+                    for c in active
+                ),
+                pending_requests=request_scheduler.pending_count(),
+                candidate=candidate,
+                now=t,
+            )
+            t0 = time.perf_counter()
+            do_prefill = iteration_policy(snap, self.profiler.cost_model)
+            trace.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
+
+            if do_prefill and candidate:
+                request_scheduler.commit_batch(pairs)
+                bin_index += 1
+                dt, tok = self._run_prefill_stage(pairs)
+                busy = {}
+                for client, req in pairs:
+                    req.client = client.cid
+                    req.prefill_bin = bin_index
+                    req.t_prefill_start = t
+                    req.t_prefill_end = t + dt
+                    req.decoded = 1
+                    busy[client.cid] = req.rid
+                trace.stages.append(
+                    StageRecord(
+                        kind=StageKind.PREFILL,
+                        t_start=t, t_end=t + dt,
+                        bin_index=bin_index, busy=busy, tokens=tok,
+                        level=self.profiler.cost_model.level_for(
+                            min(tok, max_cap)
+                        ).index,
+                    )
+                )
+                t += dt
+                # requests with n_decode == 1 finish at prefill
+                for client, req in pairs:
+                    if self.cfg.eos_id is None and req.n_decode <= 1:
+                        req.t_done = t
+                        self.slots.release(client.cid)
+                        client.current = None
+            elif active:
+                dt, finished = self._run_decode_round()
+                busy = {
+                    c.cid: c.current.rid for c in active if c.current is not None
+                }
+                trace.stages.append(
+                    StageRecord(
+                        kind=StageKind.DECODE,
+                        t_start=t, t_end=t + dt,
+                        bin_index=max(bin_index, 0), busy=busy,
+                        tokens=len(active), rounds=1,
+                    )
+                )
+                t += dt
+                for slot in finished:
+                    req = self.slots.release(slot)
+                    req.t_done = t
+                    clients[slot].current = None
+            else:
+                if candidate:
+                    continue  # policy refused but nothing to decode: retry
+                raise RuntimeError("engine deadlock: pending but no candidate")
+        else:
+            raise RuntimeError("max_stages exceeded")
+        trace.validate()
+        return trace
+
+    # ------------------------------------------------------------------ #
+    # Checkpoint / restore (fault tolerance)                              #
+    # ------------------------------------------------------------------ #
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "cache": jax.tree_util.tree_map(np.asarray, self.slots.cache),
+            "request_of": [
+                (r.rid if r is not None else -1) for r in self.slots.request_of
+            ],
+            "emitted": list(self.slots.emitted),
+            "pending_token": self.pending_token.copy(),
+        }
+
+    def load_state_dict(self, state: Dict[str, Any], requests_by_rid) -> None:
+        self.slots.cache = jax.tree_util.tree_map(
+            jnp.asarray, state["cache"]
+        )
+        self.slots.request_of = [
+            (requests_by_rid[rid] if rid >= 0 else None)
+            for rid in state["request_of"]
+        ]
+        self.slots.emitted = list(state["emitted"])
+        self.pending_token = np.asarray(state["pending_token"], dtype=np.int32)

@@ -1,0 +1,94 @@
+"""Slot manager: the engine-side realization of the paper's "clients".
+
+J slots ↔ the paper's J parallel clients. Each slot owns one row of the
+batched KV cache (or recurrent state). The manager tracks host-side slot
+state (free/active, request binding, emitted tokens) and provides the jitted
+scatter that moves a packed prefill's cache rows into the main slot cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import Request
+
+Tree = Any
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_cache(main: Tree, pref: Tree, slots: jax.Array) -> Tree:
+    """Scatter prefill-cache rows (batch dim per leaf) into slot rows.
+
+    Leaves with a leading layer dim have batch at axis 1 ("k"/"v" and
+    recurrent states); rank-≤2 leaves ("length", ring "pos") carry batch at
+    axis 0. The prefill cache's sequence axis (axis 2 of rank-≥3 leaves) may
+    be a shorter bucket than the main cache — the target rows are zeroed and
+    the bucket prefix written, so no stale data from a previous occupant
+    survives; ring "pos" rows are padded with -1 (invalid) likewise.
+    """
+
+    def scatter(m, p):
+        p = p.astype(m.dtype)
+        if m.ndim == 1:
+            return m.at[slots].set(p)
+        if m.ndim == 2:
+            if m.shape[1] != p.shape[1]:       # ring pos, shorter bucket
+                pad = jnp.full((p.shape[0], m.shape[1] - p.shape[1]), -1, m.dtype)
+                p = jnp.concatenate([p, pad], axis=1)
+            return m.at[slots].set(p)
+        if m.shape[2:] == p.shape[2:]:
+            return m.at[:, slots].set(p)
+        # seq axis (2) shorter in the prefill bucket: zero-fill then prefix
+        z = jnp.zeros((m.shape[0], p.shape[1]) + m.shape[2:], m.dtype)
+        z = z.at[:, :, : p.shape[2]].set(p)
+        return m.at[:, slots].set(z)
+
+    return jax.tree_util.tree_map(scatter, main, pref)
+
+
+class SlotManager:
+    def __init__(self, model, n_slots: int, max_len: int):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.cache_init(n_slots, max_len)
+        self.request_of: List[Optional[Request]] = [None] * n_slots
+        self.emitted: List[int] = [0] * n_slots
+
+    # ------------------------------------------------------------------ #
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.request_of) if r is None]
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.request_of) if r is not None]
+
+    def bind(self, slot: int, request: Request) -> None:
+        if self.request_of[slot] is not None:
+            raise RuntimeError(f"slot {slot} already bound")
+        self.request_of[slot] = request
+        self.emitted[slot] = 0
+
+    def release(self, slot: int) -> Request:
+        req = self.request_of[slot]
+        if req is None:
+            raise RuntimeError(f"slot {slot} not bound")
+        self.request_of[slot] = None
+        self.emitted[slot] = 0
+        return req
+
+    def merge_prefill(self, prefill_cache: Tree, slots: Sequence[int]) -> None:
+        """Move a packed prefill's cache (batch = len(slots)) into the slot
+        cache rows."""
+        idx = jnp.asarray(list(slots), jnp.int32)
+        self.cache = _scatter_cache(self.cache, prefill_cache, idx)
+
+    def active_mask(self) -> jax.Array:
+        return jnp.asarray(
+            [r is not None for r in self.request_of], dtype=jnp.bool_
+        )

@@ -1,0 +1,59 @@
+"""Online profiler — the paper's calibration loop, live.
+
+Measures every executed stage ((tokens, seconds) pairs for prefill stages;
+(active clients, seconds) for decode rounds) and refits the linear
+``CostModel`` the iteration policy consumes. This is how the scheduler
+adapts to whatever hardware it actually runs on (the paper fit 400 groups
+offline; we fit continuously with the same least-squares model).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from ..core.cost_model import CostModel
+
+
+class OnlineProfiler:
+    def __init__(
+        self,
+        initial: Optional[CostModel] = None,
+        refit_every: int = 20,
+        max_samples: int = 2000,
+    ):
+        self.cost_model = initial or CostModel()
+        self.prefill_samples: List[Tuple[int, float]] = []
+        self.decode_samples: List[Tuple[int, float]] = []
+        self.refit_every = refit_every
+        self.max_samples = max_samples
+        self._since_fit = 0
+        self.fits = 0
+
+    def record_prefill(self, total_tokens: int, seconds: float) -> None:
+        self.prefill_samples.append((total_tokens, seconds))
+        self._tick()
+
+    def record_decode(self, n_active: int, seconds: float) -> None:
+        self.decode_samples.append((n_active, seconds))
+        self._tick()
+
+    def _tick(self) -> None:
+        self._since_fit += 1
+        if len(self.prefill_samples) > self.max_samples:
+            self.prefill_samples = self.prefill_samples[-self.max_samples :]
+        if len(self.decode_samples) > self.max_samples:
+            self.decode_samples = self.decode_samples[-self.max_samples :]
+        if (
+            self._since_fit >= self.refit_every
+            and len(set(s[0] for s in self.prefill_samples)) >= 2
+            and len(set(s[0] for s in self.decode_samples)) >= 2
+        ):
+            try:
+                self.cost_model = CostModel.fit(
+                    self.prefill_samples,
+                    self.decode_samples,
+                    level_caps=self.cost_model.level_caps,
+                )
+                self.fits += 1
+            except Exception:  # noqa: BLE001 — keep serving on a bad fit
+                pass
+            self._since_fit = 0

@@ -1,0 +1,24 @@
+"""Token samplers (jit-friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """(B, V) → (B,) argmax tokens."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_top_p(
+    logits: jax.Array, key: jax.Array, top_p: float = 0.9, temperature: float = 1.0
+) -> jax.Array:
+    """Nucleus sampling. (B, V) → (B,)."""
+    logits = logits / jnp.maximum(temperature, 1e-6)
+    sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+    sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    filtered = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(key, filtered, axis=-1).astype(jnp.int32)

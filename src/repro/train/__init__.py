@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, abstract_opt_state
+from .train_step import make_train_step, make_eval_step

@@ -1,0 +1,103 @@
+"""AdamW, implemented directly (no optax in the container).
+
+Moments are f32 regardless of param dtype; the update is computed in f32 and
+cast back (bf16 params + f32 m/v is the standard large-scale recipe — a
+separate f32 master copy is intentionally omitted; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params: Tree) -> Dict[str, Tree]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params: Tree) -> Dict[str, Tree]:
+    """ShapeDtypeStruct tree for the dry-run."""
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(f32, abstract_params),
+        "v": jax.tree_util.tree_map(f32, abstract_params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, count: jax.Array) -> jax.Array:
+    """Linear warmup to cfg.lr, then constant (simple and robust)."""
+    warm = jnp.minimum(count.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads: Tree,
+    opt_state: Dict[str, Tree],
+    params: Tree,
+    cfg: AdamWConfig,
+) -> Tuple[Tree, Dict[str, Tree], Dict[str, jax.Array]]:
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = _schedule(cfg, count)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_state = {
+        "m": jax.tree_util.tree_unflatten(treedef, new_m),
+        "v": jax.tree_util.tree_unflatten(treedef, new_v),
+        "count": count,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,118 @@
+"""Training loop with checkpoint/restart and synthetic data.
+
+The end-to-end driver behind ``repro.launch.train``: builds a model from an
+arch config, shards over the ambient mesh (or runs on CPU for smoke
+configs), and trains with AdamW + grad accumulation, checkpointing every N
+steps and resuming from the latest complete checkpoint on restart (tested by
+killing/restarting in tests/test_train.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs.base import ArchConfig
+from ..models.layers import init_params
+from ..models.registry import get_model
+from .optimizer import AdamWConfig, adamw_init
+from .train_step import make_train_step
+
+Tree = Any
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 50
+    batch: int = 8
+    seq: int = 64
+    microbatches: int = 1
+    remat: bool = False
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    save_every: int = 20
+    log_every: int = 10
+
+
+def synthetic_batches(cfg: ArchConfig, tc: TrainConfig) -> Iterator[Dict[str, jax.Array]]:
+    """Deterministic synthetic LM data: modular successor sequences
+    (tokens[t+1] = tokens[t] + stride mod V) — a static next-token mapping a
+    tiny model learns in tens of steps, so loss decrease is a crisp test."""
+    rng = np.random.default_rng(tc.seed)
+    step = 0
+    v = max(cfg.vocab_size - 1, 2)
+    while True:
+        start = rng.integers(0, v, size=(tc.batch, 1))
+        stride = rng.integers(1, 4, size=(tc.batch, 1))
+        t = np.arange(tc.seq + 1)[None, :]
+        seqs = (start + stride * t) % v + 1
+        batch = {
+            "tokens": jnp.asarray(seqs[:, :-1], jnp.int32),
+            "labels": jnp.asarray(seqs[:, 1:], jnp.int32),
+        }
+        if cfg.family == "audio":
+            frames = rng.normal(size=(tc.batch, tc.seq, cfg.d_model)).astype(np.float32)
+            batch["frames"] = jnp.asarray(frames, jnp.bfloat16)
+        if cfg.family == "vlm":
+            pe = rng.normal(size=(tc.batch, cfg.num_patch_tokens, cfg.d_model))
+            batch["patch_embeds"] = jnp.asarray(pe, jnp.bfloat16)
+        step += 1
+        yield batch
+
+
+def train(
+    cfg: ArchConfig,
+    tc: TrainConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+) -> Dict[str, Any]:
+    """Run the loop; returns summary metrics (resumes if checkpoints exist)."""
+    opt_cfg = opt_cfg or AdamWConfig(warmup_steps=10)
+    model = get_model(cfg)
+    params = init_params(jax.random.key(tc.seed), model.param_defs())
+    opt_state = adamw_init(params)
+    start_step = 0
+    mgr = None
+    if tc.checkpoint_dir:
+        mgr = CheckpointManager(tc.checkpoint_dir, save_every=tc.save_every)
+        restored, start_step, meta = mgr.resume({"params": params, "opt": opt_state})
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+
+    step_fn = jax.jit(
+        make_train_step(model, opt_cfg, microbatches=tc.microbatches, remat=tc.remat)
+    )
+    data = synthetic_batches(cfg, tc)
+    # skip already-consumed batches on resume (deterministic pipeline cursor)
+    for _ in range(start_step):
+        next(data)
+
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start_step, tc.steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if mgr is not None:
+            mgr.maybe_save(
+                step + 1,
+                {"params": params, "opt": opt_state},
+                metadata={"loss": loss, "step": step + 1},
+            )
+        if tc.log_every and (step + 1) % tc.log_every == 0:
+            print(f"step {step + 1}: loss={loss:.4f}", flush=True)
+    wall = time.perf_counter() - t0
+    return {
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+        "steps_run": len(losses),
+        "start_step": start_step,
+        "wall_s": wall,
+        "params": params,
+        "opt_state": opt_state,
+    }

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see ONE CPU device (smoke realism); the dry-run sets its own
+# XLA_FLAGS in subprocesses. Ensure src is importable regardless of cwd.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,161 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU; same kernels compile for TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import decode_attention, flash_attention, rglru_scan
+from repro.kernels.ref import (
+    decode_attention_ref,
+    flash_attention_ref,
+    rglru_scan_ref,
+)
+
+FLASH_CASES = [
+    # (B, H, KV, S, D, causal, window, dtype)
+    (2, 4, 2, 256, 64, True, 0, jnp.float32),
+    (1, 4, 4, 128, 128, True, 32, jnp.float32),
+    (2, 2, 1, 256, 64, False, 0, jnp.float32),
+    (1, 8, 2, 128, 64, True, 0, jnp.bfloat16),
+    (1, 2, 2, 64, 32, True, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_oracle(case):
+    b, h, kv, s, d, causal, w, dtype = case
+    ks = jax.random.split(jax.random.key(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=w, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=w)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+DECODE_CASES = [
+    (3, 8, 2, 512, 64, jnp.float32),
+    (2, 4, 4, 256, 128, jnp.float32),
+    (2, 8, 1, 128, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_oracle(case):
+    b, h, kv, s, d, dtype = case
+    ks = jax.random.split(jax.random.key(hash(case) % 2**31), 4)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = decode_attention(q, k, v, lengths, block_k=128)
+    ref = decode_attention_ref(q, k, v, lengths)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_decode_attention_ragged_lengths_mask_garbage():
+    """Cache rows beyond each slot's length must not affect the output."""
+    b, h, kv, s, d = 2, 4, 2, 256, 64
+    ks = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    lengths = jnp.array([100, 17], jnp.int32)
+    out1 = decode_attention(q, k, v, lengths, block_k=64)
+    # poison the invalid region
+    poison = jnp.where(
+        jnp.arange(s)[None, None, :, None] >= lengths[:, None, None, None],
+        1e9, 0.0,
+    )
+    out2 = decode_attention(q, k + poison, v + poison, lengths, block_k=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-5)
+
+
+RGLRU_CASES = [(2, 512, 256), (1, 256, 128), (3, 128, 384)]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rglru_matches_oracle(case):
+    b, s, r = case
+    ks = jax.random.split(jax.random.key(sum(case)), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, r)))
+    x = jax.random.normal(ks[1], (b, s, r))
+    h0 = jax.random.normal(ks[2], (b, r))
+    out, hf = rglru_scan(a, x, h0, block_s=128, block_r=128)
+    rout, rhf = rglru_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(rhf), rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_state_chains_across_calls():
+    """Final state of one call seeds the next (decode contract)."""
+    b, s, r = 1, 128, 128
+    ks = jax.random.split(jax.random.key(7), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, 2 * s, r)))
+    x = jax.random.normal(ks[1], (b, 2 * s, r))
+    full, hf_full = rglru_scan(a, x)
+    h1, hf1 = rglru_scan(a[:, :s], x[:, :s])
+    h2, hf2 = rglru_scan(a[:, s:], x[:, s:], hf1)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(full[:, s:]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf2), np.asarray(hf_full), rtol=1e-5, atol=1e-5)
+
+
+def test_model_attention_chunked_banded_equivalence():
+    """The model-side chunked/banded paths equal dense attention (these are
+    the functions the dry-run lowers)."""
+    from repro.models.attention import attention, banded_attention, chunked_attention
+
+    B, S, H, KV, D = 2, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.key(1), (B, S, H, D))
+    k = jax.random.normal(jax.random.key(2), (B, S, KV, D))
+    v = jax.random.normal(jax.random.key(3), (B, S, KV, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    for causal in (True, False):
+        for w in (0, 8):
+            ref = attention(q, k, v, q_positions=pos, k_positions=pos, causal=causal, window=w)
+            ch = chunked_attention(
+                q, k, v, q_positions=pos, k_positions=pos, causal=causal,
+                window=w, q_chunk=16, k_chunk=16,
+            )
+            np.testing.assert_allclose(np.asarray(ch), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    ref = attention(q, k, v, q_positions=pos, k_positions=pos, causal=True, window=8)
+    bd = banded_attention(
+        q, k, v, q_positions=pos, k_positions=pos, window=8, causal=True, q_chunk=16
+    )
+    np.testing.assert_allclose(np.asarray(bd), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_attention_grad_matches_dense():
+    """The q-block remat must not change gradients."""
+    from repro.models.attention import attention, chunked_attention
+
+    B, S, H, KV, D = 1, 32, 2, 2, 8
+    q = jax.random.normal(jax.random.key(1), (B, S, H, D))
+    k = jax.random.normal(jax.random.key(2), (B, S, KV, D))
+    v = jax.random.normal(jax.random.key(3), (B, S, KV, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+
+    def f_dense(q, k, v):
+        return jnp.sum(
+            attention(q, k, v, q_positions=pos, k_positions=pos, causal=True) ** 2
+        )
+
+    def f_chunk(q, k, v):
+        return jnp.sum(
+            chunked_attention(
+                q, k, v, q_positions=pos, k_positions=pos, causal=True,
+                q_chunk=8, k_chunk=8,
+            ) ** 2
+        )
+
+    g1 = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting shapes + finiteness, plus prefill/decode vs full-forward
+consistency for each family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models.layers import abstract_params, init_params, logical_specs
+from repro.models.registry import get_model
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    batch = {
+        "tokens": jnp.asarray(tokens),
+        "labels": jnp.asarray(np.roll(tokens, -1, axis=1)),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)
+        )
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patch_tokens, cfg.d_model)).astype(np.float32)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = init_params(jax.random.key(0), model.param_defs())
+    batch = _batch(cfg)
+    loss = model.loss(params, batch, remat=False)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    # one full train step (grads + AdamW) stays finite and changes params
+    step = make_train_step(model, AdamWConfig(lr=1e-3, warmup_steps=1), microbatches=2)
+    opt = adamw_init(params)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"]) and float(metrics["grad_norm"]) > 0
+    leaf0 = jax.tree_util.tree_leaves(params)[0]
+    leaf1 = jax.tree_util.tree_leaves(new_params)[0]
+    assert leaf0.shape == leaf1.shape
+    assert int(new_opt["count"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_serve_consistency(arch):
+    """prefill + one decode step == full forward on the extended sequence."""
+    cfg = get_smoke_config(arch)
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, dtype="float32", moe_capacity_factor=8.0)
+    model = get_model(cfg)
+    params = init_params(jax.random.key(0), model.param_defs())
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)
+    frames = None
+    if cfg.family == "audio":
+        frames = jnp.asarray(rng.normal(size=(B, 10, cfg.d_model)), jnp.float32)
+        cache = model.cache_init(B, 32, enc_len=10)
+        lp, cache = model.prefill(params, tokens, cache, patch_embeds=frames)
+        lf, _ = model.forward(params, {"frames": frames, "tokens": tokens}, remat=False)
+    elif cfg.family == "vlm":
+        frames = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patch_tokens, cfg.d_model)), jnp.float32
+        )
+        cache = model.cache_init(B, 32)
+        lp, cache = model.prefill(params, tokens, cache, patch_embeds=frames)
+        lf, _ = model.forward(params, tokens, patch_embeds=frames, remat=False)
+    else:
+        cache = model.cache_init(B, 32)
+        lp, cache = model.prefill(params, tokens, cache)
+        lf, _ = model.forward(params, tokens, remat=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lf[:, -1, :]), rtol=2e-3, atol=2e-3)
+
+    nxt = jnp.argmax(lp, -1).astype(jnp.int32)
+    ld, cache = model.decode_step(params, nxt, cache)
+    ext = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+    if cfg.family == "audio":
+        lf2, _ = model.forward(params, {"frames": frames, "tokens": ext}, remat=False)
+    elif cfg.family == "vlm":
+        lf2, _ = model.forward(params, ext, patch_embeds=frames, remat=False)
+    else:
+        lf2, _ = model.forward(params, ext, remat=False)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lf2[:, -1, :]), rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_abstract_params_match_real(arch):
+    """Dry-run stand-ins exactly mirror real parameter shapes/dtypes."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    defs = model.param_defs()
+    abstract = abstract_params(defs)
+    real = init_params(jax.random.key(0), defs)
+    flat_a = jax.tree_util.tree_leaves(abstract)
+    flat_r = jax.tree_util.tree_leaves(real)
+    assert len(flat_a) == len(flat_r)
+    for a, r in zip(flat_a, flat_r):
+        assert a.shape == r.shape and a.dtype == r.dtype
+    # logical axes rank-match every leaf
+    for axes, leaf in zip(
+        jax.tree_util.tree_leaves(
+            logical_specs(defs),
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                e is None or isinstance(e, str) for e in x
+            ),
+        ),
+        flat_r,
+    ):
+        assert len(axes) == leaf.ndim
+
+
+def test_ragged_continuous_batching_dense():
+    """Engine contract: ragged prefill lengths + per-slot decode positions."""
+    from repro.configs.base import ArchConfig
+    from repro.models.transformer import TransformerLM
+
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                     n_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32")
+    m = TransformerLM(cfg)
+    params = init_params(jax.random.key(0), m.param_defs())
+    tokens = jax.random.randint(jax.random.key(1), (3, 12), 0, 128)
+    lengths = jnp.array([12, 9, 7], jnp.int32)
+    tokens = jnp.where(jnp.arange(12)[None, :] < lengths[:, None], tokens, 0)
+    cache = m.cache_init(3, 32)
+    lp, cache = m.prefill(params, tokens, cache, lengths=lengths)
+    for b in range(3):
+        L = int(lengths[b])
+        lf, _ = m.forward(params, tokens[b : b + 1, :L], remat=False)
+        np.testing.assert_allclose(np.asarray(lp[b]), np.asarray(lf[0, -1]), rtol=1e-3, atol=1e-3)
+    toks = jnp.argmax(lp, -1).astype(jnp.int32)
+    seqs = [list(np.asarray(tokens[b, : int(lengths[b])])) for b in range(3)]
+    for _ in range(3):
+        for b in range(3):
+            seqs[b].append(int(toks[b]))
+        ld, cache = m.decode_step(params, toks, cache)
+        for b in range(3):
+            lf, _ = m.forward(params, jnp.asarray(seqs[b])[None, :], remat=False)
+            np.testing.assert_allclose(
+                np.asarray(ld[b]), np.asarray(lf[0, -1]), rtol=2e-3, atol=2e-3
+            )
+        toks = jnp.argmax(ld, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["xlstm_350m", "recurrentgemma_9b"])
+def test_ragged_continuous_batching_recurrent(arch):
+    """Recurrent families honor per-slot prompt lengths: pad tokens never
+    touch a slot's state (engine continuous-batching contract)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    model = get_model(cfg)
+    params = init_params(jax.random.key(0), model.param_defs())
+    tokens = jax.random.randint(jax.random.key(1), (3, 12), 0, cfg.vocab_size)
+    lengths = jnp.array([12, 9, 7], jnp.int32)
+    tokens = jnp.where(jnp.arange(12)[None, :] < lengths[:, None], tokens, 0)
+    cache = (model.cache_init(3) if cfg.family == "ssm" else model.cache_init(3, 32))
+    lp, cache = model.prefill(params, tokens, cache, lengths=lengths)
+    for b in range(3):
+        L = int(lengths[b])
+        lf, _ = model.forward(params, tokens[b : b + 1, :L], remat=False)
+        np.testing.assert_allclose(
+            np.asarray(lp[b]), np.asarray(lf[0, -1]), rtol=2e-3, atol=2e-3
+        )
+    toks = jnp.argmax(lp, -1).astype(jnp.int32)
+    seqs = [list(np.asarray(tokens[b, : int(lengths[b])])) for b in range(3)]
+    for _ in range(3):
+        for b in range(3):
+            seqs[b].append(int(toks[b]))
+        ld, cache = model.decode_step(params, toks, cache)
+        for b in range(3):
+            lf, _ = model.forward(params, jnp.asarray(seqs[b])[None, :], remat=False)
+            np.testing.assert_allclose(
+                np.asarray(ld[b]), np.asarray(lf[0, -1]), rtol=3e-3, atol=3e-3
+            )
+        toks = jnp.argmax(ld, -1).astype(jnp.int32)

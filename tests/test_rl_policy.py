@@ -1,0 +1,35 @@
+"""The RL iteration scheduler (paper future-work #2) trains and clears an
+untrained baseline; see EXPERIMENTS.md for its standing vs analytic rules."""
+import dataclasses
+
+import numpy as np
+
+from repro.core import PAPER_COST_MODEL, simulate
+from repro.core.rl_policy import RLPolicy, train_rl_policy
+from repro.data import (
+    PAPER_PREDICTOR_NOISE_STD,
+    PAPER_WORKLOAD_SPEC,
+    gsm8k_like_workload,
+)
+
+
+def test_rl_policy_trains_and_beats_untrained():
+    spec = dataclasses.replace(PAPER_WORKLOAD_SPEC, n_requests=200)
+
+    def mk(ep):
+        return gsm8k_like_workload(
+            spec, seed=2000 + ep, estimate_noise_std=PAPER_PREDICTOR_NOISE_STD
+        )
+
+    trained = train_rl_policy(mk, 50, PAPER_COST_MODEL, episodes=12)
+    assert np.abs(trained.q).sum() > 0  # actually learned something
+
+    reqs = gsm8k_like_workload(spec, seed=0,
+                               estimate_noise_std=PAPER_PREDICTOR_NOISE_STD)
+    tr_trained = simulate(reqs, 50, PAPER_COST_MODEL, mode="hybrid",
+                          iteration_policy=trained)
+    # untrained Q-table = argmax over zeros = always decode-leaning
+    tr_zero = simulate(reqs, 50, PAPER_COST_MODEL, mode="hybrid",
+                       iteration_policy=RLPolicy())
+    assert tr_trained.utilization >= tr_zero.utilization - 0.02
+    assert tr_trained.utilization > 0.5

@@ -39,11 +39,17 @@ def main():
     )
     cm = CostModel(level_caps=(32, 64, 128, 256))
 
-    for mode in ("baseline", "hybrid"):
+    for mode in ("baseline", "hybrid", "hybrid-paged"):
         reqs = gsm8k_like_workload(spec, seed=7, known_lengths=True)
+        layout = (
+            dict(kv_layout="paged", page_size=16, prefill_chunk=32)
+            if mode == "hybrid-paged" else {}
+        )
         eng = Engine(
             model, params,
-            EngineConfig(n_slots=8, max_len=128, prefill_seq_buckets=(32,)),
+            EngineConfig(
+                n_slots=8, max_len=128, prefill_seq_buckets=(32,), **layout
+            ),
         )
         eng.profiler.cost_model = cm
         if mode == "baseline":
@@ -55,10 +61,14 @@ def main():
             sched, pol = SortingPreemptiveScheduler(clients), LagrangianPolicy()
         tr = eng.serve(reqs, clients, sched, pol, policy_name=mode)
         s = tr.summary()
+        kv = (
+            f"  peak KV={eng.slots.peak_kv_bytes() / 1024:.0f} KiB"
+            if mode == "hybrid-paged" else ""
+        )
         print(
-            f"{mode:9s} util={s['utilization'] * 100:5.1f}%  "
+            f"{mode:12s} util={s['utilization'] * 100:5.1f}%  "
             f"wall={s['makespan_s']:6.2f}s  speed={s['generation_speed_tok_s']:6.0f} tok/s  "
-            f"prefill stages={s['num_bins']}  profiler refits={eng.profiler.fits}"
+            f"prefill stages={s['num_bins']}  profiler refits={eng.profiler.fits}{kv}"
         )
         print(ascii_gantt(tr, width=90, max_clients=8))
 

@@ -19,7 +19,8 @@ def stage_csv(trace: ScheduleTrace) -> str:
     for s in trace.stages:
         buf.write(
             f"{s.kind.value},{s.t_start:.6f},{s.t_end:.6f},{s.bin_index},"
-            f"{len(s.busy)},{s.tokens},{s.level if s.level is not None else ''}\n"
+            f"{len(s.busy) + len(s.busy_partial)},{s.tokens},"
+            f"{s.level if s.level is not None else ''}\n"
         )
     return buf.getvalue()
 
@@ -28,7 +29,7 @@ def client_accounting(trace: ScheduleTrace) -> List[dict]:
     """Per-client busy time / utilization over the makespan."""
     busy = [0.0] * trace.num_clients
     for s in trace.stages:
-        for cid in s.busy:
+        for cid in (*s.busy, *s.busy_partial):
             busy[cid] += s.duration
     span = trace.makespan or 1.0
     return [
@@ -61,7 +62,7 @@ def ascii_gantt(
         c1 = max(c0 + 1, int(s.t_end / span * width + 0.999999))
         kind = 1 if s.kind is StageKind.PREFILL else 2
         for cid in rows:
-            state = kind if cid in s.busy else 0
+            state = kind if (cid in s.busy or cid in s.busy_partial) else 0
             for col in range(c0, min(c1, width)):
                 # apportion stage duration to bucket overlap (approximate)
                 occ[cid][col][state] += s.duration / (c1 - c0)
@@ -90,7 +91,7 @@ def utilization_timeline(trace: ScheduleTrace, buckets: int = 50) -> List[float]
     for s in trace.stages:
         b0 = s.t_start / span * buckets
         b1 = s.t_end / span * buckets
-        n_busy = len(s.busy)
+        n_busy = len(s.busy) + len(s.busy_partial)
         i = int(b0)
         while i < b1 and i < buckets:
             lo = max(b0, i)

@@ -32,14 +32,32 @@ from .types import Request
 
 @dataclass
 class CandidateBatch:
-    """Prefill batch the request scheduler proposes for the idle clients."""
+    """Prefill batch the request scheduler proposes for the idle clients.
+
+    ``chunk_tokens`` is set by the chunked-prefill engine: the tokens the
+    *next stage* would actually process (one chunk per request), which may be
+    far fewer than the batch's full prompts. Policies must price the stage
+    they are deciding on, so cost comparisons use
+    ``effective_prefill_tokens`` — with whole-prompt prefill the two are
+    identical, with chunking the marginal stage is one chunk round (this is
+    what lets a Lagrangian-style rule interleave prefill work without
+    stalling decode for a whole prompt; HyGen §4)."""
 
     requests: List[Request]
     client_ids: List[int]
+    chunk_tokens: Optional[int] = None
 
     @property
     def total_prefill_tokens(self) -> int:
         return sum(r.n_prefill for r in self.requests)
+
+    @property
+    def effective_prefill_tokens(self) -> int:
+        """Tokens the next prefill stage would run: one chunk round when the
+        engine chunks, the full prompts otherwise."""
+        if self.chunk_tokens is not None:
+            return self.chunk_tokens
+        return self.total_prefill_tokens
 
     @property
     def total_decode_est(self) -> int:
@@ -119,7 +137,7 @@ class LagrangianPolicy(IterationPolicy):
     def decide_prefill(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         if snap.pending_requests <= snap.n_idle:
             return True  # drain phase: no future waiters to amortize with
-        batch_tokens = snap.candidate.total_prefill_tokens
+        batch_tokens = snap.candidate.effective_prefill_tokens
         if batch_tokens >= cost_model.max_level.cap_tokens:
             return True  # batch already fills the largest level
         c_p = cost_model.quantized_prefill_time(batch_tokens)
@@ -155,7 +173,7 @@ class BalancedLagrangianPolicy(IterationPolicy):
         # batch → the batch cannot grow by waiting
         if snap.n_idle > len(cand.requests) and snap.pending_requests > len(cand.requests):
             return True
-        batch_tokens = cand.total_prefill_tokens
+        batch_tokens = cand.effective_prefill_tokens
         if batch_tokens >= cost_model.max_level.cap_tokens:
             return True
         c_p = cost_model.quantized_prefill_time(batch_tokens)
@@ -186,7 +204,7 @@ class AmortizedPolicy(IterationPolicy):
         cand = snap.candidate
         if snap.n_idle > len(cand.requests) and snap.pending_requests > len(cand.requests):
             return True
-        if cand.total_prefill_tokens >= cost_model.max_level.cap_tokens:
+        if cand.effective_prefill_tokens >= cost_model.max_level.cap_tokens:
             return True
         t_r = cost_model.decode_round_time(max(snap.n_active, 1))
         # completion rate: active clients finishing per round
@@ -216,7 +234,7 @@ class UtilizationWeightedPolicy(IterationPolicy):
 
     def decide_prefill(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         cand = snap.candidate
-        batch_tokens = cand.total_prefill_tokens
+        batch_tokens = cand.effective_prefill_tokens
         if batch_tokens >= cost_model.max_level.cap_tokens:
             return True
         c_p = cost_model.quantized_prefill_time(batch_tokens)

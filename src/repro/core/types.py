@@ -115,6 +115,11 @@ class StageRecord:
     bin_index: int
     # Clients busy during this stage and the request they worked on.
     busy: Dict[int, int] = field(default_factory=dict)  # cid -> rid
+    # Clients running a *non-final* prefill chunk (chunked-prefill engine):
+    # they are busy for utilization accounting but the request is not yet
+    # fully prefilled — validate() counts a request's prefill at the stage
+    # where its last chunk lands (the stage that puts it in ``busy``).
+    busy_partial: Dict[int, int] = field(default_factory=dict)  # cid -> rid
     tokens: int = 0          # tokens processed in this stage
     rounds: int = 0          # decode rounds contained (decode stages only)
     level: Optional[int] = None  # prefill level index (prefill stages only)
@@ -149,7 +154,9 @@ class ScheduleTrace:
     @property
     def busy_client_time(self) -> float:
         """Σ over stages of (busy clients × stage duration)."""
-        return sum(len(s.busy) * s.duration for s in self.stages)
+        return sum(
+            (len(s.busy) + len(s.busy_partial)) * s.duration for s in self.stages
+        )
 
     @property
     def utilization(self) -> float:
@@ -210,6 +217,10 @@ class ScheduleTrace:
             t = s.t_end
         prefilled: Dict[int, int] = {}
         for s in self.stages:
+            if s.busy.keys() & s.busy_partial.keys():
+                raise AssertionError(
+                    "client both finishing and mid-chunk in one stage"
+                )
             if s.kind is StageKind.PREFILL:
                 for cid, rid in s.busy.items():
                     prefilled[rid] = prefilled.get(rid, 0) + 1

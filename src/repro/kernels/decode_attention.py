@@ -91,9 +91,17 @@ def decode_attention(
     g = h // kv
     scale = scale if scale is not None else d ** -0.5
     bk = min(block_k, s)
+    nk = -(-s // bk)                       # grid rounds up; tail block masked
     if s % bk:
-        raise ValueError(f"cache len {s} must divide block_k {bk}")
-    nk = s // bk
+        # pad K/V so the tail block's DMA stays in bounds; the padded
+        # region sits at positions >= s >= lengths, so the kernel's
+        # per-token length mask already hides it. The pad is a full-cache
+        # copy per call — serving paths should keep bucketed cache lengths
+        # a multiple of block_k (the engine's max_len buckets are); this
+        # branch exists so ad-hoc lengths work instead of erroring
+        pad = nk * bk - s
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
     qg = q.reshape(b, kv, g, d)
     len2 = lengths.reshape(b, 1).astype(jnp.int32)
 

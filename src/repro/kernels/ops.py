@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from .decode_attention import decode_attention as _decode
 from .flash_attention import flash_attention as _flash
+from .paged_decode_attention import paged_decode_attention as _paged_decode
 from .rglru import rglru_scan as _rglru
 
 
@@ -41,6 +42,17 @@ def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
     """(B, H, D) one token vs (B, KV, S, D) cache → (B, H, D)."""
     return _decode(
         q, k, v, lengths, scale=scale, block_k=block_k, interpret=_on_cpu()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           scale: Optional[float] = None):
+    """(B, H, D) one token vs (KV, P, bs, D) page pool gathered through a
+    (B, MB) block table → (B, H, D)."""
+    return _paged_decode(
+        q, k_pages, v_pages, block_tables, lengths, scale=scale,
+        interpret=_on_cpu(),
     )
 
 

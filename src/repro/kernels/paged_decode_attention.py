@@ -1,0 +1,142 @@
+"""Paged decode attention — Pallas TPU kernel for single-token GQA attention
+against a block-table-indirected page pool.
+
+The dense decode kernel streams a slot's whole (S_max, D) cache row; here a
+slot's KV lives scattered across pages of a shared pool and the kernel
+gathers them by *DMA indirection*: the block table rides in scalar-prefetch
+memory (SMEM), so the K/V BlockSpec index maps can read it and point each
+grid step's page DMA at the right pool row — the physical-page gather costs
+zero extra copies.
+
+Grid = (B, KV, pages_per_slot), page dim innermost/sequential so the online
+softmax scratch carries across a slot's pages (same structure as
+``decode_attention``). Pages past a slot's fill level are skipped with
+``pl.when`` (their DMA index clamps to page 0); the tail page is masked
+per-token against ``lengths``.
+
+Page layout is (KV, P, page_size, D): the per-step block is a contiguous
+(page_size, D) tile — sublane-aligned for page_size ≥ 8, unlike a layout
+with KV innermost whose (1, D) rows would waste 7/8 sublanes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _paged_decode_kernel(
+    tables_ref,                     # (B, MB) int32 SMEM — scalar prefetch
+    length_ref,                     # (B,) int32 SMEM — scalar prefetch
+    q_ref,                          # (1, 1, g, D)
+    k_ref,                          # (1, 1, bs, D) — one page
+    v_ref,
+    o_ref,                          # (1, 1, g, D)
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    page_size: int,
+    pages_per_slot: int,
+):
+    ib = pl.program_id(0)
+    ij = pl.program_id(2)
+
+    @pl.when(ij == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = length_ref[ib]
+    page = tables_ref[ib, ij]
+    k_start = ij * page_size
+
+    @pl.when(jnp.logical_and(k_start < length, page >= 0))
+    def _body():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale      # (g, D)
+        k = k_ref[0, 0, :, :].astype(jnp.float32)              # (bs, D)
+        v = v_ref[0, 0, :, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                      # (g, bs)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ij == pages_per_slot - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,                   # (B, H, D) — one new token per slot
+    k_pages: jax.Array,             # (KV, P, bs, D) page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,        # (B, MB) int32; -1 = unallocated
+    lengths: jax.Array,             # (B,) int32 — valid tokens per slot
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    kv, p, bs, _ = k_pages.shape
+    _, mb = block_tables.shape
+    if h % kv != 0:
+        raise ValueError(f"H={h} not divisible by KV={kv}")
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kv, g, d)
+    tables = block_tables.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, page_size=bs, pages_per_slot=mb
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ij, tb, ln: (ib, ih, 0, 0)),
+            # page DMA indirection: the block index along the pool axis is
+            # the block table entry itself (clamped for unallocated pages,
+            # whose grid steps the kernel skips)
+            pl.BlockSpec(
+                (1, 1, bs, d),
+                lambda ib, ih, ij, tb, ln: (ih, jnp.maximum(tb[ib, ij], 0), 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bs, d),
+                lambda ib, ih, ij, tb, ln: (ih, jnp.maximum(tb[ib, ij], 0), 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda ib, ih, ij, tb, ln: (ib, ih, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        interpret=interpret,
+    )(tables, lens, qg, k_pages, v_pages)
+    return out.reshape(b, h, d)

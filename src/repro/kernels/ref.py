@@ -62,6 +62,30 @@ def decode_attention_ref(
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(
+    q: jax.Array,                   # (B, H, D)
+    k_pages: jax.Array,             # (KV, P, bs, D) page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,        # (B, MB) int32; -1 = unallocated
+    lengths: jax.Array,             # (B,)
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Gather each slot's pages into a dense (B, KV, MB·bs, D) cache view and
+    defer to the dense decode oracle — unallocated pages read page 0, which
+    the length mask then hides (allocated pages always cover ``lengths``)."""
+    kv, p, bs, d = k_pages.shape
+    b, mb = block_tables.shape
+    idx = jnp.arange(mb * bs)
+    page = block_tables[:, idx // bs]                        # (B, MB·bs)
+    flat = jnp.where(page >= 0, page * bs + idx % bs, 0).reshape(-1)
+    k = k_pages.reshape(kv, p * bs, d)[:, flat].reshape(kv, b, mb * bs, d)
+    v = v_pages.reshape(kv, p * bs, d)[:, flat].reshape(kv, b, mb * bs, d)
+    return decode_attention_ref(
+        q, jnp.swapaxes(k, 0, 1), jnp.swapaxes(v, 0, 1), lengths, scale=scale
+    )
+
+
 def rglru_scan_ref(
     a: jax.Array,                   # (B, S, R)
     x: jax.Array,

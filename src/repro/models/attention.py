@@ -269,6 +269,40 @@ def attention_any(
     )
 
 
+def attention_paged(
+    q: jax.Array,                     # (B, Sq, H, D)
+    k_pages: jax.Array,               # (KV, P, bs, D) — one layer's page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,          # (B, MB) int32; -1 = unallocated
+    *,
+    q_positions: jax.Array,           # (B, Sq) int32
+    valid_lengths: jax.Array,         # (B,) int32 — valid tokens per slot,
+                                      # counted *after* this step's KV writes
+    causal: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Attention against a paged KV cache (reference path).
+
+    Gathers each slot's pages into its logical (MB·bs) sequence and masks
+    unallocated/past-length positions via the shared position-based scheme —
+    the same contract ``kernels.paged_decode_attention`` implements with
+    block-table-indirected DMA on TPU. Serves both chunked prefill (Sq =
+    chunk) and decode (Sq = 1) behind the paged cache-layout flag."""
+    from .cache import paged_gather_kv, paged_key_positions
+
+    k_ctx, v_ctx = paged_gather_kv(k_pages, v_pages, block_tables)
+    k_positions = paged_key_positions(
+        block_tables, valid_lengths, k_pages.shape[2]
+    )
+    return attention(
+        q, k_ctx, v_ctx,
+        q_positions=q_positions,
+        k_positions=k_positions,
+        causal=causal,
+        scale=scale,
+    )
+
+
 def attention_cross(
     q: jax.Array,                     # (B, Sq, H, D)
     k: jax.Array,                     # (B, Sk, KV, D)

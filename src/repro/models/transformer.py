@@ -23,12 +23,16 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..distributed.sharding import constrain_kv_for_cache, constrain_residual
-from .attention import attention, attention_any
+from .attention import attention, attention_any, attention_paged
 from .cache import (
     full_cache_init,
     full_cache_shape,
     full_cache_write,
     full_cache_write_token,
+    paged_cache_init,
+    paged_cache_shape,
+    paged_cache_write,
+    paged_cache_write_token,
     ring_cache_init,
     ring_cache_shape,
     ring_cache_write_prefill,
@@ -220,6 +224,36 @@ class TransformerLM:
         return full_cache_init(cfg.n_layers, batch, max_len, cfg.n_kv_heads, self.hd, self.dtype)
 
     # ------------------------------------------------------------------ #
+    # Serving: paged cache (block-table layout; see models.cache)         #
+    # ------------------------------------------------------------------ #
+    def _check_paged_supported(self) -> None:
+        if self.cfg.sliding_window > 0:
+            raise NotImplementedError(
+                "paged KV cache does not support sliding-window configs "
+                "(the ring cache already bounds their KV memory at W)"
+            )
+
+    def paged_cache_shape(
+        self, num_pages: int, page_size: int, n_slots: int,
+        max_pages_per_slot: int,
+    ):
+        self._check_paged_supported()
+        return paged_cache_shape(
+            self.cfg.n_layers, num_pages, page_size, self.cfg.n_kv_heads,
+            self.hd, n_slots, max_pages_per_slot, self.dtype,
+        )
+
+    def paged_cache_init(
+        self, num_pages: int, page_size: int, n_slots: int,
+        max_pages_per_slot: int,
+    ):
+        self._check_paged_supported()
+        return paged_cache_init(
+            self.cfg.n_layers, num_pages, page_size, self.cfg.n_kv_heads,
+            self.hd, n_slots, max_pages_per_slot, self.dtype,
+        )
+
+    # ------------------------------------------------------------------ #
     # Serving: prefill                                                    #
     # ------------------------------------------------------------------ #
     def prefill(
@@ -291,6 +325,93 @@ class TransformerLM:
         return logits, new_cache
 
     # ------------------------------------------------------------------ #
+    # Serving: chunked prefill into a paged cache                         #
+    # ------------------------------------------------------------------ #
+    def prefill_chunk(
+        self,
+        params: Params,
+        tokens: jax.Array,                 # (B, C) int32 — one chunk per row
+        cache: Dict[str, jax.Array],       # paged cache (the whole pool)
+        slot_ids: jax.Array,               # (B,) int32; >= n_slots → pad row
+        starts: jax.Array,                 # (B,) int32 — chunk offset in prompt
+        chunk_lens: jax.Array,             # (B,) int32 — real tokens (≤ C)
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Process one prompt chunk per row, writing K/V straight into the
+        rows' paged blocks (no throwaway cache, no padded full-row scatter).
+        Queries attend to everything the slot has accumulated — earlier
+        chunks live in the same pages. Returns the logits at each row's last
+        real chunk token (only meaningful for a prompt's final chunk) and the
+        updated pool."""
+        cfg = self.cfg
+        self._check_paged_supported()
+        b, c = tokens.shape
+        n_slots = cache["block_tables"].shape[0]
+        h = embed_tokens(tokens, params["embed"]).astype(self.dtype)
+        positions = starts[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        pos_in = (
+            jnp.broadcast_to(positions[..., None], (b, c, 3))
+            if cfg.m_rope else positions
+        )
+        tables = cache["block_tables"][jnp.clip(slot_ids, 0, n_slots - 1)]
+        new_lens = starts + chunk_lens
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            x = apply_norm(h, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+            if cfg.use_bias:
+                q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+            if cfg.qk_norm:
+                q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            if cfg.m_rope:
+                q = apply_m_rope(q, pos_in, cfg.m_rope_sections, cfg.rope_theta)
+                k = apply_m_rope(k, pos_in, cfg.m_rope_sections, cfg.rope_theta)
+            else:
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+            kc, vc = paged_cache_write(kc, vc, k, v, tables, starts, chunk_lens)
+            attn_out = attention_paged(
+                q, kc, vc, tables,
+                q_positions=positions,
+                valid_lengths=new_lens,
+                causal=True,
+            )
+            attn_out = jnp.einsum("bshk,hkd->bsd", attn_out, lp["wo"])
+            if cfg.use_bias:
+                attn_out = attn_out + lp["bo"]
+            h = h + attn_out
+            x = apply_norm(h, lp["norm_mlp"], cfg.norm_kind, cfg.norm_eps)
+            if cfg.is_moe:
+                mlp_out, _ = moe_apply(
+                    x, lp["moe"],
+                    n_experts=cfg.n_experts,
+                    top_k=cfg.experts_per_token,
+                    mlp_kind=cfg.mlp_kind,
+                    capacity_factor=cfg.moe_capacity_factor,
+                    group_size=cfg.moe_group_size,
+                )
+            else:
+                mlp_out = mlp_apply(x, lp["mlp"], cfg.mlp_kind)
+            h = h + mlp_out
+            return h, (kc, vc)
+
+        h, (k_all, v_all) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"])
+        )
+        h = apply_norm(h, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        h_last = h[jnp.arange(b), jnp.maximum(chunk_lens - 1, 0)]
+        logits = unembed(h_last, params["embed"]).astype(jnp.float32)
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = k_all, v_all
+        new_cache["length"] = cache["length"].at[slot_ids].set(
+            new_lens, mode="drop"
+        )
+        return logits, new_cache
+
+    # ------------------------------------------------------------------ #
     # Serving: one decode step                                            #
     # ------------------------------------------------------------------ #
     def decode_step(
@@ -298,8 +419,17 @@ class TransformerLM:
         params: Params,
         tokens: jax.Array,                 # (B,) int32 — last sampled token
         cache: Dict[str, jax.Array],
+        active: Optional[jax.Array] = None,   # (B,) bool — paged cache only
     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-        """Append one token per slot; returns (logits (B,V) f32, cache)."""
+        """Append one token per slot; returns (logits (B,V) f32, cache).
+
+        The cache layout is detected from the pytree: a ``block_tables`` key
+        selects the paged path. ``active`` masks which slots may write —
+        mandatory for paged caches, where an idle slot's stale block table
+        could alias pages now owned by another slot (dense rows absorb idle
+        writes harmlessly, so the mask is ignored there)."""
+        if "block_tables" in cache:
+            return self._decode_step_paged(params, tokens, cache, active)
         cfg = self.cfg
         b = tokens.shape[0]
         lengths = cache["length"]                     # (B,) per-slot lengths
@@ -377,4 +507,80 @@ class TransformerLM:
         new_cache["length"] = lengths + 1
         if ring:
             new_cache["pos"] = k_pos_now
+        return logits, new_cache
+
+    def _decode_step_paged(
+        self,
+        params: Params,
+        tokens: jax.Array,                 # (B,) int32
+        cache: Dict[str, jax.Array],       # paged cache; B = n_slots
+        active: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        b = tokens.shape[0]
+        tables = cache["block_tables"]
+        lengths = cache["length"]
+        if active is None:
+            active = jnp.ones((b,), jnp.bool_)
+        grow = active.astype(jnp.int32)
+        positions = lengths[:, None].astype(jnp.int32)
+        if cfg.m_rope:
+            pos_in = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+        else:
+            pos_in = positions
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            x = apply_norm(h, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+            if cfg.use_bias:
+                q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+            if cfg.qk_norm:
+                q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            if cfg.m_rope:
+                q = apply_m_rope(q, pos_in, cfg.m_rope_sections, cfg.rope_theta)
+                k = apply_m_rope(k, pos_in, cfg.m_rope_sections, cfg.rope_theta)
+            else:
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+            kc, vc = paged_cache_write_token(kc, vc, k, v, tables, lengths, active)
+            # post-write valid counts: active slots gained one token at
+            # position ``lengths``; inactive slots' outputs are ignored
+            attn_out = attention_paged(
+                q, kc, vc, tables,
+                q_positions=positions,
+                valid_lengths=lengths + grow,
+                causal=True,
+            )
+            attn_out = jnp.einsum("bshk,hkd->bsd", attn_out, lp["wo"])
+            if cfg.use_bias:
+                attn_out = attn_out + lp["bo"]
+            h = h + attn_out
+            x = apply_norm(h, lp["norm_mlp"], cfg.norm_kind, cfg.norm_eps)
+            if cfg.is_moe:
+                mlp_out, _ = moe_apply(
+                    x, lp["moe"],
+                    n_experts=cfg.n_experts,
+                    top_k=cfg.experts_per_token,
+                    mlp_kind=cfg.mlp_kind,
+                    capacity_factor=cfg.moe_capacity_factor,
+                    group_size=cfg.moe_group_size,
+                )
+            else:
+                mlp_out = mlp_apply(x, lp["mlp"], cfg.mlp_kind)
+            h = h + mlp_out
+            return h, (kc, vc)
+
+        h = embed_tokens(tokens[:, None], params["embed"]).astype(self.dtype)
+        h, (k_all, v_all) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"])
+        )
+        h = apply_norm(h, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        logits = unembed(h[:, 0, :], params["embed"]).astype(jnp.float32)
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = k_all, v_all
+        new_cache["length"] = lengths + grow
         return logits, new_cache

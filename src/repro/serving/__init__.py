@@ -1,4 +1,4 @@
 from .engine import Engine, EngineConfig
-from .kv_slots import SlotManager
+from .kv_slots import BlockAllocator, PagedSlotManager, SlotManager
 from .profiler import OnlineProfiler
 from .sampler import greedy, sample_top_p

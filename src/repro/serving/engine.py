@@ -14,6 +14,16 @@ model steps:
   * between rounds the iteration policy decides prefill-vs-decode using the
     online profiler's continuously refit cost model.
 
+With ``kv_layout="paged"`` the execution layer swaps to a paged KV pool
+(``PagedSlotManager`` + block tables) and *chunked prefill*: prompts are
+split into ``prefill_chunk``-token chunks written directly into the slot's
+pages by ``model.prefill_chunk`` — no per-prefill throwaway cache, no padded
+full-row scatter — and the iteration policy prices inserting *one chunk
+round* (``CandidateBatch.chunk_tokens``) instead of a whole prompt, so
+decode rounds interleave between a long prompt's chunks instead of stalling
+behind it. KV memory is pages-in-use rather than n_slots × max_len, with
+admission control against the page pool.
+
 The engine emits the same ``ScheduleTrace`` as the simulator, so utilization
 and Gantt accounting are directly comparable, and it can checkpoint/restore
 mid-run (slot cache + queues + scheduler state) for fault tolerance.
@@ -39,7 +49,7 @@ from ..core.types import (
     StageKind,
     StageRecord,
 )
-from .kv_slots import SlotManager
+from .kv_slots import PagedSlotManager, SlotManager
 from .profiler import OnlineProfiler
 from .sampler import greedy
 
@@ -59,13 +69,43 @@ class EngineConfig:
     # stages (smaller stages bound the blast radius of a slow node); the
     # budget recovers by one step per on-prediction stage.
     straggler_factor: float = 3.0
+    # KV layout. "dense" preallocates one max_len row per slot and prefills
+    # whole (padded) prompts; "paged" shares a pool of page_size-token pages
+    # through block tables and prefills in prefill_chunk-token chunks written
+    # directly into the slot's pages — decode rounds can interleave between a
+    # long prompt's chunks, and KV memory is pages-in-use, not
+    # n_slots × max_len. num_pages=None sizes the pool to full capacity;
+    # smaller pools trade memory for admission backpressure.
+    kv_layout: str = "dense"              # "dense" | "paged"
+    page_size: int = 16
+    prefill_chunk: int = 32
+    num_pages: Optional[int] = None
 
 
 def _bucket(x: int, buckets: Sequence[int]) -> int:
     for b in buckets:
         if x <= b:
             return b
-    return buckets[-1]
+    raise ValueError(
+        f"value {x} exceeds the largest bucket {buckets[-1]}; a request "
+        f"padded into it would silently overflow the batch — raise the "
+        f"bucket table (EngineConfig.prefill_seq_buckets / "
+        f"prefill_req_buckets) to cover the workload"
+    )
+
+
+@dataclasses.dataclass
+class _ChunkState:
+    """One slot's in-flight chunked prefill (paged layout only)."""
+
+    slot: int
+    req: Request
+    prompt: np.ndarray
+    done: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.req.n_prefill - self.done
 
 
 class Engine:
@@ -82,20 +122,58 @@ class Engine:
         self.cfg = config
         self.profiler = profiler or OnlineProfiler()
         self.sampler = sampler
-        self.slots = SlotManager(model, config.n_slots, config.max_len)
+        if config.kv_layout == "paged":
+            self.slots: Any = PagedSlotManager(
+                model, config.n_slots, config.max_len,
+                config.page_size, config.num_pages,
+            )
+            self._decode_jit = jax.jit(
+                lambda p, t, c, m: model.decode_step(p, t, c, active=m),
+                donate_argnums=(2,),
+            )
+            self._chunk_jit = jax.jit(
+                lambda p, t, c, s, st, ln: model.prefill_chunk(p, t, c, s, st, ln),
+                donate_argnums=(2,),
+            )
+        elif config.kv_layout == "dense":
+            self.slots = SlotManager(model, config.n_slots, config.max_len)
+            self._decode_jit = jax.jit(
+                lambda p, t, c: model.decode_step(p, t, c), donate_argnums=(2,)
+            )
+            self._prefill_jit = jax.jit(
+                lambda p, t, c, l: model.prefill(p, t, c, lengths=l),
+                donate_argnums=(2,),
+            )
+        else:
+            raise ValueError(f"unknown kv_layout {config.kv_layout!r}")
         self.pending_token = np.zeros(config.n_slots, dtype=np.int32)
         self._budget_shift = 0            # straggler mitigation state
         self.straggler_events = 0
-
-        self._decode_jit = jax.jit(
-            lambda p, t, c: model.decode_step(p, t, c), donate_argnums=(2,)
-        )
-        self._prefill_jit = jax.jit(
-            lambda p, t, c, l: model.prefill(p, t, c, lengths=l),
-            donate_argnums=(2,),
-        )
+        self._chunking: Dict[int, _ChunkState] = {}
+        # rid -> every token this engine sampled for it (parity testing and
+        # the place a production engine would stream detokenized output from)
+        self.generated: Dict[int, List[int]] = {}
 
     # ------------------------------------------------------------------ #
+    def _prompt_tokens(self, req: Request) -> np.ndarray:
+        """Synthetic prompt tokens derived from the request id (demo data; a
+        production engine receives the tokenized prompt here)."""
+        rng = np.random.default_rng(req.rid)
+        return rng.integers(
+            1, self._vocab(), size=req.n_prefill
+        ).astype(np.int32)
+
+    def _observe_prefill(self, total_tokens: int, dt: float) -> None:
+        """Feed the profiler and run straggler mitigation (request-level
+        stealing is Algorithm 1's job; this handles slow *stages*)."""
+        self.profiler.record_prefill(total_tokens, dt)
+        predicted = self.profiler.cost_model.prefill_time(total_tokens)
+        if predicted > 0 and dt > self.cfg.straggler_factor * predicted:
+            self._budget_shift = min(self._budget_shift + 1, 3)
+            self.straggler_events += 1
+        elif self._budget_shift > 0 and dt < 1.5 * predicted:
+            self._budget_shift -= 1
+
     def _run_prefill_stage(self, pairs: List[Tuple[ClientState, Request]]):
         """Execute one packed prefill; returns (duration_s, total_tokens)."""
         reqs = [r for _, r in pairs]
@@ -106,12 +184,7 @@ class Engine:
         tokens = np.zeros((n_pad, s_pad), dtype=np.int32)
         lengths = np.ones(n_pad, dtype=np.int32)
         for i, r in enumerate(reqs):
-            # synthetic prompt tokens derived from the request id (demo data;
-            # a production engine receives the tokenized prompt here)
-            rng = np.random.default_rng(r.rid)
-            tokens[i, : r.n_prefill] = rng.integers(
-                1, self._vocab(), size=r.n_prefill
-            )
+            tokens[i, : r.n_prefill] = self._prompt_tokens(r)
             lengths[i] = r.n_prefill
         cache = self.model.cache_init(n_pad, s_pad)
         t0 = time.perf_counter()
@@ -131,29 +204,134 @@ class Engine:
             self.slots.bind(client.cid, req)
             self.slots.emitted[client.cid] = 1     # prefill samples token #1
             self.pending_token[client.cid] = int(first[i])
+            self.generated.setdefault(req.rid, []).append(int(first[i]))
             client.current = req
         total_tokens = sum(r.n_prefill for r in reqs)
-        self.profiler.record_prefill(total_tokens, dt)
-        # straggler mitigation (request-level stealing is Algorithm 1's job;
-        # this handles slow *stages*)
-        predicted = self.profiler.cost_model.prefill_time(total_tokens)
-        if predicted > 0 and dt > self.cfg.straggler_factor * predicted:
-            self._budget_shift = min(self._budget_shift + 1, 3)
-            self.straggler_events += 1
-        elif self._budget_shift > 0 and dt < 1.5 * predicted:
-            self._budget_shift -= 1
+        self._observe_prefill(total_tokens, dt)
         return dt, total_tokens
 
     def _vocab(self) -> int:
         return self.model.cfg.vocab_size
 
+    # ------------------------------------------------------------------ #
+    # Chunked prefill (paged layout)                                      #
+    # ------------------------------------------------------------------ #
+    def _tokens_bound(self, req: Request) -> int:
+        """KV tokens a request can touch over its lifetime: prompt plus the
+        decode bound (known output length when the workload drives stops, the
+        slot capacity otherwise). Decode round k writes KV position
+        n_prefill + k - 1 and the last round only samples, hence the -1."""
+        if self.cfg.eos_id is None:
+            tokens = req.n_prefill + max(req.n_decode - 1, 0)
+        else:
+            tokens = self.cfg.max_len
+        return min(tokens, self.cfg.max_len)
+
+    def _pages_needed(self, req: Request) -> int:
+        return self.slots.allocator.pages_for(self._tokens_bound(req))
+
+    def _admissible(
+        self, pairs: List[Tuple[ClientState, Request]]
+    ) -> List[Tuple[ClientState, Request]]:
+        """Trim a proposed batch to what the page pool can host.
+
+        Admission stops at the first request that doesn't fit — letting
+        smaller later requests jump a page-starved head would starve it
+        indefinitely (every freed page gets snapped up), breaking the FCFS
+        order the scheduler promises. Blocking admission instead makes the
+        free pool grow monotonically as decoders finish, so the head always
+        gets in eventually."""
+        out = []
+        free = self.slots.allocator.num_free
+        for client, req in pairs:
+            need = self._pages_needed(req)
+            if need > self.slots.allocator.num_pages:
+                raise ValueError(
+                    f"request {req.rid} needs {need} pages but the pool only "
+                    f"has {self.slots.allocator.num_pages}; raise "
+                    f"EngineConfig.num_pages"
+                )
+            if need > free:
+                break
+            out.append((client, req))
+            free -= need
+        return out
+
+    def _start_chunked_batch(
+        self, pairs: List[Tuple[ClientState, Request]], bin_index: int, now: float
+    ) -> None:
+        for client, req in pairs:
+            self.slots.reserve(client.cid, self._tokens_bound(req))
+            self._chunking[client.cid] = _ChunkState(
+                slot=client.cid, req=req, prompt=self._prompt_tokens(req)
+            )
+            req.client = client.cid
+            req.prefill_bin = bin_index
+            req.t_prefill_start = now
+
+    def _next_chunk_tokens(self) -> int:
+        return sum(
+            min(self.cfg.prefill_chunk, st.remaining)
+            for st in self._chunking.values()
+        )
+
+    def _run_chunk_round(self):
+        """One chunk round over every mid-prefill slot; returns
+        (duration, chunk_tokens, finished_slots, busy, busy_partial)."""
+        states = [self._chunking[s] for s in sorted(self._chunking)]
+        c = self.cfg.prefill_chunk
+        n_pad = _bucket(len(states), self.cfg.prefill_req_buckets)
+        tokens = np.zeros((n_pad, c), dtype=np.int32)
+        # pad rows point one past the last slot: their (len-0) writes drop
+        slot_ids = np.full(n_pad, self.cfg.n_slots, dtype=np.int32)
+        starts = np.zeros(n_pad, dtype=np.int32)
+        lens = np.zeros(n_pad, dtype=np.int32)
+        for i, st in enumerate(states):
+            n = min(c, st.remaining)
+            tokens[i, :n] = st.prompt[st.done : st.done + n]
+            slot_ids[i] = st.slot
+            starts[i] = st.done
+            lens[i] = n
+        t0 = time.perf_counter()
+        logits, self.slots.cache = self._chunk_jit(
+            self.params, jnp.asarray(tokens), self.slots.cache,
+            jnp.asarray(slot_ids), jnp.asarray(starts), jnp.asarray(lens),
+        )
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        first = np.asarray(self.sampler(logits))
+        busy: Dict[int, int] = {}
+        busy_partial: Dict[int, int] = {}
+        finished: List[int] = []
+        chunk_tokens = int(lens.sum())
+        for i, st in enumerate(states):
+            slot = st.slot
+            st.done += int(lens[i])
+            if st.done >= st.req.n_prefill:
+                self.slots.bind(slot, st.req)
+                self.slots.emitted[slot] = 1       # final chunk samples token #1
+                self.pending_token[slot] = int(first[i])
+                self.generated.setdefault(st.req.rid, []).append(int(first[i]))
+                busy[slot] = st.req.rid
+                finished.append(slot)
+                del self._chunking[slot]
+            else:
+                busy_partial[slot] = st.req.rid
+        self._observe_prefill(chunk_tokens, dt)
+        return dt, chunk_tokens, finished, busy, busy_partial
+
     def _run_decode_round(self) -> Tuple[float, List[int]]:
         """One decode round over all slots; returns (duration, finished slots)."""
         tokens = jnp.asarray(self.pending_token)
         t0 = time.perf_counter()
-        logits, self.slots.cache = self._decode_jit(
-            self.params, tokens, self.slots.cache
-        )
+        if self.cfg.kv_layout == "paged":
+            logits, self.slots.cache = self._decode_jit(
+                self.params, tokens, self.slots.cache, self.slots.active_mask()
+            )
+        else:
+            logits, self.slots.cache = self._decode_jit(
+                self.params, tokens, self.slots.cache
+            )
         logits.block_until_ready()
         dt = time.perf_counter() - t0
         nxt = np.asarray(self.sampler(logits))
@@ -162,6 +340,7 @@ class Engine:
             req = self.slots.request_of[slot]
             self.slots.emitted[slot] += 1
             self.pending_token[slot] = int(nxt[slot])
+            self.generated.setdefault(req.rid, []).append(int(nxt[slot]))
             req.decoded = self.slots.emitted[slot]
             done = (
                 self.cfg.eos_id is not None and int(nxt[slot]) == self.cfg.eos_id
@@ -192,8 +371,12 @@ class Engine:
         )
         for r in requests:
             r.reset()
+        # per-serve output record (rids repeat across workloads; in-flight
+        # _chunking state is deliberately NOT cleared — it's the resume path)
+        self.generated = {}
         t = 0.0
         bin_index = -1
+        paged = cfg.kv_layout == "paged"
 
         for _ in range(cfg.max_stages):
             max_cap = max(
@@ -201,14 +384,35 @@ class Engine:
                 self.profiler.cost_model.level_caps[0],
             )
             active = [c for c in clients if c.current is not None]
-            idle = [c for c in clients if c.current is None]
-            if not active and not request_scheduler.has_pending():
+            idle = [
+                c for c in clients
+                if c.current is None and c.cid not in self._chunking
+            ]
+            if (
+                not active and not self._chunking
+                and not request_scheduler.has_pending()
+            ):
                 break
             pairs = request_scheduler.propose_batch(idle, max_cap)
-            candidate = CandidateBatch(
-                requests=[r for _, r in pairs],
-                client_ids=[c.cid for c, _ in pairs],
-            )
+            if paged and pairs:
+                pairs = self._admissible(pairs)
+            if paged:
+                # the candidate stage is one chunk round: continuations of
+                # any in-flight prefills plus first chunks of new admissions
+                # (idle slots keep admitting while long prompts chunk)
+                cont = sorted(self._chunking)
+                candidate = CandidateBatch(
+                    requests=[self._chunking[s].req for s in cont]
+                    + [r for _, r in pairs],
+                    client_ids=cont + [c.cid for c, _ in pairs],
+                    chunk_tokens=self._next_chunk_tokens()
+                    + sum(min(cfg.prefill_chunk, r.n_prefill) for _, r in pairs),
+                )
+            else:
+                candidate = CandidateBatch(
+                    requests=[r for _, r in pairs],
+                    client_ids=[c.cid for c, _ in pairs],
+                )
             snap = SystemSnapshot(
                 n_clients=cfg.n_slots,
                 n_active=len(active),
@@ -225,7 +429,35 @@ class Engine:
             do_prefill = iteration_policy(snap, self.profiler.cost_model)
             trace.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
 
-            if do_prefill and candidate:
+            if do_prefill and candidate and paged:
+                if pairs:
+                    request_scheduler.commit_batch(pairs)
+                    bin_index += 1
+                    self._start_chunked_batch(pairs, bin_index, t)
+                dt, tok, finished, busy, busy_partial = self._run_chunk_round()
+                trace.stages.append(
+                    StageRecord(
+                        kind=StageKind.PREFILL,
+                        t_start=t, t_end=t + dt,
+                        bin_index=max(bin_index, 0),
+                        busy=busy, busy_partial=busy_partial, tokens=tok,
+                        level=self.profiler.cost_model.level_for(
+                            min(tok, max_cap)
+                        ).index,
+                    )
+                )
+                t += dt
+                for slot in finished:
+                    req = self.slots.request_of[slot]
+                    clients[slot].current = req
+                    req.t_prefill_end = t
+                    req.decoded = 1
+                    # requests with n_decode == 1 finish at prefill
+                    if self.cfg.eos_id is None and req.n_decode <= 1:
+                        req.t_done = t
+                        self.slots.release(slot)
+                        clients[slot].current = None
+            elif do_prefill and candidate:
                 request_scheduler.commit_batch(pairs)
                 bin_index += 1
                 dt, tok = self._run_prefill_stage(pairs)
@@ -285,6 +517,15 @@ class Engine:
     # Checkpoint / restore (fault tolerance)                              #
     # ------------------------------------------------------------------ #
     def state_dict(self) -> Dict[str, Any]:
+        # in-flight chunked prefills, as fixed-shape per-slot arrays so the
+        # checkpoint tree structure is stable across saves (a mid-chunk slot
+        # holds pages but is not yet bound — without this a restore would
+        # strand its pages and forget the half-prefilled request)
+        chunk_rid = np.full(self.cfg.n_slots, -1, np.int32)
+        chunk_done = np.zeros(self.cfg.n_slots, np.int32)
+        for slot, st in self._chunking.items():
+            chunk_rid[slot] = st.req.rid
+            chunk_done[slot] = st.done
         return {
             "cache": jax.tree_util.tree_map(np.asarray, self.slots.cache),
             "request_of": [
@@ -292,9 +533,19 @@ class Engine:
             ],
             "emitted": list(self.slots.emitted),
             "pending_token": self.pending_token.copy(),
+            # straggler-mitigation state: a restored engine must remember it
+            # was throttling, or one slow node re-eats the full blast radius
+            "budget_shift": self._budget_shift,
+            "straggler_events": self.straggler_events,
+            "chunk_rid": chunk_rid,
+            "chunk_done": chunk_done,
         }
 
     def load_state_dict(self, state: Dict[str, Any], requests_by_rid) -> None:
+        """Restore engine state. To *resume* serving afterwards, pass the
+        request scheduler only the requests that had not yet started —
+        restored in-flight work (bound slots, mid-chunk prefills) continues
+        from engine state, and re-queueing it would prefill it twice."""
         self.slots.cache = jax.tree_util.tree_map(
             jnp.asarray, state["cache"]
         )
@@ -304,3 +555,18 @@ class Engine:
         ]
         self.slots.emitted = list(state["emitted"])
         self.pending_token = np.asarray(state["pending_token"], dtype=np.int32)
+        self._budget_shift = int(state.get("budget_shift", 0))
+        self.straggler_events = int(state.get("straggler_events", 0))
+        self._chunking = {}
+        chunk_rid = np.asarray(state.get("chunk_rid", []))
+        chunk_done = np.asarray(state.get("chunk_done", []))
+        for slot, rid in enumerate(chunk_rid):
+            if rid >= 0:
+                req = requests_by_rid[int(rid)]
+                self._chunking[slot] = _ChunkState(
+                    slot=slot, req=req, prompt=self._prompt_tokens(req),
+                    done=int(chunk_done[slot]),
+                )
+        if self.cfg.kv_layout == "paged":
+            # the device block table is the durable page-ownership record
+            self.slots.sync_from_device()

@@ -1,9 +1,20 @@
-"""Slot manager: the engine-side realization of the paper's "clients".
+"""Slot managers: the engine-side realization of the paper's "clients".
 
-J slots ↔ the paper's J parallel clients. Each slot owns one row of the
-batched KV cache (or recurrent state). The manager tracks host-side slot
-state (free/active, request binding, emitted tokens) and provides the jitted
-scatter that moves a packed prefill's cache rows into the main slot cache.
+J slots ↔ the paper's J parallel clients. Two KV ownership models:
+
+  * ``SlotManager`` — each slot owns one dense row of the batched KV cache
+    (or recurrent state), preallocated at ``max_len``. Simple, but KV memory
+    is n_slots × max_len regardless of what the slots actually hold, and
+    every prefill scatters whole padded rows into place.
+  * ``PagedSlotManager`` — slots own *pages* of a shared pool, handed out by
+    a host-side ``BlockAllocator`` and resolved through a device block table
+    (see models.cache paged layout). KV memory is pages-in-use; prefills
+    write chunks straight into the slot's pages (serving.engine's chunked
+    path), so there is no throwaway prefill cache and no padded row scatter.
+
+Both track the same host-side slot state (free/active, request binding,
+emitted tokens) behind the same interface, so the engine treats them
+uniformly.
 """
 from __future__ import annotations
 
@@ -92,3 +103,171 @@ class SlotManager:
         return jnp.asarray(
             [r is not None for r in self.request_of], dtype=jnp.bool_
         )
+
+
+# --------------------------------------------------------------------------- #
+# Paged layout                                                                #
+# --------------------------------------------------------------------------- #
+class BlockAllocator:
+    """Host-side free-list allocator for the paged KV pool.
+
+    Pure bookkeeping — page contents live on device; this hands out page ids
+    and guarantees no two slots ever share a page. LIFO reuse keeps recently
+    freed (cache-warm) pages hot."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.page_size))
+
+    def can_allocate(self, n_pages: int) -> bool:
+        return n_pages <= len(self._free)
+
+    def allocate(self, n_pages: int) -> List[int]:
+        if not self.can_allocate(n_pages):
+            raise RuntimeError(
+                f"page pool exhausted: want {n_pages}, have {len(self._free)} "
+                f"of {self.num_pages}"
+            )
+        out = self._free[-n_pages:][::-1]
+        del self._free[-n_pages:]
+        return out
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 0 <= p < self.num_pages:
+                raise ValueError(f"page {p} out of range")
+        live = set(self._free)
+        if any(p in live for p in pages):
+            raise RuntimeError("double free of KV page")
+        self._free.extend(pages)
+
+    def reset(self, in_use: Sequence[int] = ()) -> None:
+        """Rebuild the free list from a known set of in-use pages (checkpoint
+        restore)."""
+        used = set(in_use)
+        self._free = [p for p in range(self.num_pages - 1, -1, -1) if p not in used]
+
+
+class PagedSlotManager:
+    """SlotManager counterpart for the paged cache layout.
+
+    ``reserve`` hands a slot enough pages for its whole request up front
+    (prompt + decode bound), so decode can never fail mid-flight; admission
+    control in the engine checks ``allocator.can_allocate`` first. Block
+    table rows are mirrored to the device cache on reserve/release."""
+
+    def __init__(
+        self,
+        model,
+        n_slots: int,
+        max_len: int,
+        page_size: int,
+        num_pages: Optional[int] = None,
+    ):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.max_pages_per_slot = -(-max_len // page_size)
+        self.num_pages = (
+            num_pages if num_pages is not None
+            else n_slots * self.max_pages_per_slot
+        )
+        self.cache = model.paged_cache_init(
+            self.num_pages, page_size, n_slots, self.max_pages_per_slot
+        )
+        self.allocator = BlockAllocator(self.num_pages, page_size)
+        self.tables: List[List[int]] = [[] for _ in range(n_slots)]
+        self.request_of: List[Optional[Request]] = [None] * n_slots
+        self.emitted: List[int] = [0] * n_slots
+        self.peak_pages = 0
+
+    # -- same read interface as SlotManager ---------------------------- #
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.request_of) if r is None]
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.request_of) if r is not None]
+
+    def bind(self, slot: int, request: Request) -> None:
+        if self.request_of[slot] is not None:
+            raise RuntimeError(f"slot {slot} already bound")
+        self.request_of[slot] = request
+        self.emitted[slot] = 0
+
+    def active_mask(self) -> jax.Array:
+        return jnp.asarray(
+            [r is not None for r in self.request_of], dtype=jnp.bool_
+        )
+
+    # -- page ownership ------------------------------------------------ #
+    def reserve(self, slot: int, n_tokens: int) -> None:
+        """Give ``slot`` pages covering ``n_tokens`` and mirror its block
+        table row to the device."""
+        if self.tables[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        n_tokens = min(n_tokens, self.max_len)
+        pages = self.allocator.allocate(self.allocator.pages_for(n_tokens))
+        self.tables[slot] = pages
+        self.peak_pages = max(self.peak_pages, self.allocator.num_used)
+        row = np.full((self.max_pages_per_slot,), -1, np.int32)
+        row[: len(pages)] = pages
+        self.cache["block_tables"] = (
+            self.cache["block_tables"].at[slot].set(jnp.asarray(row))
+        )
+
+    def release(self, slot: int) -> Request:
+        req = self.request_of[slot]
+        if req is None:
+            raise RuntimeError(f"slot {slot} not bound")
+        self.request_of[slot] = None
+        self.emitted[slot] = 0
+        self.free_pages_of(slot)
+        return req
+
+    def free_pages_of(self, slot: int) -> None:
+        if self.tables[slot]:
+            self.allocator.free(self.tables[slot])
+            self.tables[slot] = []
+        self.cache["block_tables"] = self.cache["block_tables"].at[slot].set(-1)
+        self.cache["length"] = self.cache["length"].at[slot].set(0)
+
+    def sync_from_device(self) -> None:
+        """Rebuild host tables + allocator from the device block table
+        (checkpoint restore path — the device array is the durable record)."""
+        bt = np.asarray(self.cache["block_tables"])
+        self.tables = [[int(p) for p in row if p >= 0] for row in bt]
+        self.allocator.reset([p for row in self.tables for p in row])
+        self.peak_pages = max(self.peak_pages, self.allocator.num_used)
+
+    # -- accounting ---------------------------------------------------- #
+    def kv_bytes_in_use(self) -> int:
+        """Bytes of KV pool actually owned by slots right now."""
+        return self.allocator.num_used * (
+            self.kv_bytes_capacity() // self.allocator.num_pages
+        )
+
+    def kv_bytes_capacity(self) -> int:
+        return self.cache["k"].nbytes + self.cache["v"].nbytes
+
+    def peak_kv_bytes(self) -> int:
+        """High-water mark of slot-owned KV bytes over the run."""
+        if self.allocator.num_pages == 0:
+            return 0
+        return self.peak_pages * (self.kv_bytes_capacity() // self.allocator.num_pages)

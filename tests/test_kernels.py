@@ -5,10 +5,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import decode_attention, flash_attention, rglru_scan
+from repro.kernels.ops import (
+    decode_attention,
+    flash_attention,
+    paged_decode_attention,
+    rglru_scan,
+)
 from repro.kernels.ref import (
     decode_attention_ref,
     flash_attention_ref,
+    paged_decode_attention_ref,
     rglru_scan_ref,
 )
 
@@ -75,6 +81,80 @@ def test_decode_attention_ragged_lengths_mask_garbage():
         1e9, 0.0,
     )
     out2 = decode_attention(q, k + poison, v + poison, lengths, block_k=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_non_divisible_cache_len():
+    """Cache lengths that don't divide block_k round the grid up and mask the
+    tail block (the old code raised — with an inverted message at that)."""
+    b, h, kv, s, d = 2, 4, 2, 200, 64
+    ks = jax.random.split(jax.random.key(3), 4)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    lengths = jnp.array([200, 37], jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_k=64)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+PAGED_CASES = [
+    # (B, H, KV, pages, page_size, MB, D, dtype)
+    (3, 8, 2, 24, 16, 8, 64, jnp.float32),
+    (2, 4, 4, 12, 8, 6, 128, jnp.float32),
+    (2, 8, 1, 10, 32, 4, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_decode_attention_matches_oracle(case):
+    b, h, kv, p, bs, mb, d, dtype = case
+    # seed from the int fields only: hash() of a dtype object is id-based
+    # and would make inputs differ across pytest processes
+    ks = jax.random.split(jax.random.key(sum(case[:-1])), 4)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k_pages = jax.random.normal(ks[1], (kv, p, bs, d), dtype)
+    v_pages = jax.random.normal(ks[2], (kv, p, bs, d), dtype)
+    # shuffled physical pages: the kernel must follow the table, not the pool
+    rng = np.random.default_rng(sum(case[:-1]))
+    perm = rng.permutation(p)
+    lengths = rng.integers(1, mb * bs + 1, size=b)
+    tables = np.full((b, mb), -1, np.int32)
+    used = 0
+    for i in range(b):
+        need = -(-int(lengths[i]) // bs)
+        assert used + need <= p, "case under-provisions pages"
+        tables[i, :need] = perm[used : used + need]
+        used += need
+    out = paged_decode_attention(
+        q, k_pages, v_pages, jnp.asarray(tables), jnp.asarray(lengths)
+    )
+    ref = paged_decode_attention_ref(
+        q, k_pages, v_pages, jnp.asarray(tables), jnp.asarray(lengths)
+    )
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_paged_decode_attention_ignores_unallocated_pages():
+    """Poisoning pages no table points at must not change any output."""
+    b, h, kv, p, bs, mb, d = 2, 4, 2, 10, 16, 4, 64
+    ks = jax.random.split(jax.random.key(9), 4)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k_pages = jax.random.normal(ks[1], (kv, p, bs, d))
+    v_pages = jax.random.normal(ks[2], (kv, p, bs, d))
+    tables = jnp.asarray([[4, 2, -1, -1], [7, -1, -1, -1]], jnp.int32)
+    lengths = jnp.asarray([30, 9], jnp.int32)
+    out1 = paged_decode_attention(q, k_pages, v_pages, tables, lengths)
+    owned = {4, 2, 7}
+    poison = jnp.asarray(
+        [[1e9 if i not in owned else 0.0] for i in range(p)]
+    ).reshape(1, p, 1, 1)
+    out2 = paged_decode_attention(
+        q, k_pages + poison, v_pages + poison, tables, lengths
+    )
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-5)
 
 

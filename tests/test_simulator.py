@@ -1,6 +1,9 @@
 """Simulator behaviour: invariants, mode ordering, paper reproduction bands,
 and hypothesis properties over random workloads."""
 import pytest
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CostModel, PAPER_COST_MODEL, simulate, theoretical_lower_bound

@@ -1,0 +1,128 @@
+"""Machine-readable benchmark output.
+
+Every benchmark writes a ``BENCH_<name>.json`` artifact next to its stdout
+CSV so the perf trajectory can be tracked per PR (CI uploads these files).
+The schema is deliberately flat: a ``meta`` block (benchmark name, smoke
+flag, device) plus a ``metrics`` dict of scalars — easy to diff, easy to
+plot, no parser needed beyond ``json.load``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+
+def decode_latency_percentiles(trace) -> Dict[str, float]:
+    """p50/p95 per-token decode latency (seconds) from a ScheduleTrace.
+
+    A fused decode stage of R rounds contributes R samples of
+    ``duration / R`` — the per-iteration latency every token in that stage
+    experienced (tokens inside a fused horizon are not individually timed;
+    the host only sees the horizon boundary, which is the point).
+    """
+    samples = []
+    for s in trace.stages:
+        if s.kind.value == "decode" and s.rounds > 0:
+            samples.extend([s.duration / s.rounds] * s.rounds)
+    if not samples:
+        return {"p50_token_latency_s": 0.0, "p95_token_latency_s": 0.0}
+    return {
+        "p50_token_latency_s": float(np.percentile(samples, 50)),
+        "p95_token_latency_s": float(np.percentile(samples, 95)),
+    }
+
+
+def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
+    """The shared serving-benchmark metric set for one engine run."""
+    out_tokens = sum(r.n_decode for r in trace.requests)
+    m = {
+        "throughput_tok_s": out_tokens / wall_s,
+        "wall_s": wall_s,
+        "output_tokens": out_tokens,
+        "decode_dispatches": eng.decode_dispatches,
+        "dispatches_per_token": (
+            eng.decode_dispatches / max(eng.decoded_tokens, 1)
+        ),
+    }
+    m.update(decode_latency_percentiles(trace))
+    if eng.cfg.kv_layout == "paged":
+        m["peak_kv_bytes"] = eng.slots.peak_kv_bytes()
+        m["kv_capacity_bytes"] = eng.slots.kv_bytes_capacity()
+    else:
+        cap = eng.slots.cache["k"].nbytes + eng.slots.cache["v"].nbytes
+        m["peak_kv_bytes"] = cap
+        m["kv_capacity_bytes"] = cap
+    return m
+
+
+def run_serving_benchmark(cfg: Dict, **engine_kwargs):
+    """Shared serving-benchmark harness: build an engine from a config dict
+    (keys: arch, spec, n_slots, max_len, seq_buckets, level_caps), warm the
+    jit caches on a same-shape workload (seed 12), then time a full serve of
+    the measured workload (seed 11). Returns (engine, metrics). Keeping the
+    protocol in one place means every benchmark measures the same thing."""
+    import time
+
+    from repro.core import (
+        CostModel,
+        GlobalQueueScheduler,
+        PrefillFirstPolicy,
+        build_clients,
+    )
+    from repro.data import gsm8k_like_workload
+    from repro.models.layers import init_params
+    from repro.models.transformer import TransformerLM
+    from repro.serving.engine import Engine, EngineConfig
+
+    model = TransformerLM(cfg["arch"])
+    params = init_params(jax.random.key(0), model.param_defs())
+    reqs = gsm8k_like_workload(cfg["spec"], seed=11, known_lengths=True)
+    eng = Engine(
+        model, params,
+        EngineConfig(
+            n_slots=cfg["n_slots"], max_len=cfg["max_len"],
+            prefill_seq_buckets=cfg["seq_buckets"], **engine_kwargs,
+        ),
+    )
+    eng.profiler.cost_model = CostModel(level_caps=cfg["level_caps"])
+    clients = build_clients(cfg["n_slots"], reqs, None)
+    warm = gsm8k_like_workload(cfg["spec"], seed=12, known_lengths=True)
+    eng.serve(warm, build_clients(cfg["n_slots"], warm, None),
+              GlobalQueueScheduler(warm), PrefillFirstPolicy())
+    t0 = time.perf_counter()
+    trace = eng.serve(
+        reqs, clients, GlobalQueueScheduler(reqs), PrefillFirstPolicy()
+    )
+    wall = time.perf_counter() - t0
+    trace.validate()
+    return eng, engine_metrics(eng, trace, wall)
+
+
+def emit_json(
+    name: str,
+    metrics: Dict,
+    smoke: bool = False,
+    out_dir: Optional[str] = None,
+) -> str:
+    """Write ``BENCH_<name>.json`` (to ``out_dir``, $BENCH_OUT_DIR, or cwd)
+    and return the path."""
+    out_dir = out_dir or os.environ.get("BENCH_OUT_DIR") or "."
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "meta": {
+            "bench": name,
+            "smoke": smoke,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+        },
+        "metrics": metrics,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

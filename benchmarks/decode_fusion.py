@@ -1,0 +1,99 @@
+"""Fused multi-step decode vs the per-token baseline.
+
+Sweeps the fixed decode horizon K ∈ {1, 2, 4, 8, 16} over a mixed
+prompt/decode workload (short chatty prompts next to longer documents,
+decode-heavy outputs — the regime where dispatch overhead, not FLOPs, bounds
+decode throughput) and measures what fusing K iterations into one on-device
+loop buys:
+
+  * throughput — output tokens / s of engine wall-clock;
+  * dispatches per decoded token — the quantity the subsystem minimizes
+    (K=1 pays one host↔device round trip per token; K=8 pays ⌈1/8⌉);
+  * p50/p95 per-token decode latency;
+  * exact token parity against the K=1 baseline (fusion must never change
+    results — it only changes how often the host gets to look).
+
+Run:  PYTHONPATH=src python -m benchmarks.decode_fusion [--smoke] [--out DIR]
+Prints ``name,value,unit`` CSV and writes BENCH_decode_fusion.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import ArchConfig
+from repro.data import WorkloadSpec
+
+from .bench_io import emit_json, run_serving_benchmark
+
+HORIZONS = (1, 2, 4, 8, 16)
+
+FULL = dict(
+    arch=ArchConfig(
+        name="bench", family="dense", n_layers=2, d_model=128, n_heads=8,
+        n_kv_heads=4, d_ff=256, vocab_size=512,
+    ),
+    spec=WorkloadSpec(
+        n_requests=24, input_mean=40, input_std=25, output_mean=48,
+        output_std=20, output_max=80, input_max=96,
+    ),
+    n_slots=8, max_len=192, seq_buckets=(32, 64, 96),
+    level_caps=(64, 128, 256),
+)
+SMOKE = dict(
+    arch=ArchConfig(
+        name="bench-smoke", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256,
+    ),
+    spec=WorkloadSpec(
+        n_requests=8, input_mean=14, input_std=6, output_mean=20,
+        output_std=8, output_max=28, input_max=24,
+    ),
+    n_slots=4, max_len=64, seq_buckets=(32,),
+    level_caps=(32, 64, 128),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, not minutes)")
+    ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    args = ap.parse_args()
+    cfg = SMOKE if args.smoke else FULL
+
+    results = {}
+    streams = {}
+    for k in HORIZONS:
+        eng, m = run_serving_benchmark(cfg, decode_horizon=k)
+        results[k] = m
+        streams[k] = eng.generated
+
+    base = streams[HORIZONS[0]]
+    parity = all(
+        streams[k].keys() == base.keys()
+        and all(streams[k][r] == base[r] for r in base)
+        for k in HORIZONS[1:]
+    )
+
+    print("name,value,unit")
+    for k in HORIZONS:
+        m = results[k]
+        print(f"k{k}_throughput,{m['throughput_tok_s']:.1f},tok/s")
+        print(f"k{k}_dispatches_per_token,{m['dispatches_per_token']:.4f},1/tok")
+        print(f"k{k}_p50_token_latency,{m['p50_token_latency_s'] * 1e3:.3f},ms")
+        print(f"k{k}_p95_token_latency,{m['p95_token_latency_s'] * 1e3:.3f},ms")
+    print(f"token_parity,{int(parity)},bool")
+    speedup = results[8]["throughput_tok_s"] / results[1]["throughput_tok_s"]
+    print(f"k8_vs_k1_speedup,{speedup:.3f},x")
+
+    payload = {f"k{k}": results[k] for k in HORIZONS}
+    payload["token_parity"] = bool(parity)
+    payload["k8_vs_k1_speedup"] = speedup
+    path = emit_json("decode_fusion", payload, smoke=args.smoke, out_dir=args.out)
+    print(f"# wrote {path}")
+    if not parity:
+        raise SystemExit("token parity violated between horizons")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,74 +12,58 @@ The mixed workload (short conversational prompts next to long-document
 prompts, short replies) is the shape the dense layout over-allocates worst
 on — every 30-token prompt still owns a max_len row.
 
-Run: PYTHONPATH=src python -m benchmarks.paged_vs_dense
-Prints ``name,value,unit`` CSV.
+Run: PYTHONPATH=src python -m benchmarks.paged_vs_dense [--smoke] [--out DIR]
+Prints ``name,value,unit`` CSV and writes BENCH_paged_vs_dense.json.
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import numpy as np
+import argparse
 
 from repro.configs.base import ArchConfig
-from repro.core import CostModel, GlobalQueueScheduler, PrefillFirstPolicy, build_clients
-from repro.data import WorkloadSpec, gsm8k_like_workload
-from repro.models.layers import init_params
-from repro.models.transformer import TransformerLM
-from repro.serving.engine import Engine, EngineConfig
+from repro.data import WorkloadSpec
 
-ARCH = ArchConfig(
-    name="bench", family="dense", n_layers=2, d_model=128, n_heads=8,
-    n_kv_heads=4, d_ff=256, vocab_size=512,
+from .bench_io import emit_json, run_serving_benchmark
+
+FULL = dict(
+    arch=ArchConfig(
+        name="bench", family="dense", n_layers=2, d_model=128, n_heads=8,
+        n_kv_heads=4, d_ff=256, vocab_size=512,
+    ),
+    # mixed prompt lengths: N(60, 45) clipped to [1, 180], short outputs
+    spec=WorkloadSpec(
+        n_requests=24, input_mean=60, input_std=45, output_mean=12,
+        output_std=6, output_max=20, input_max=180,
+    ),
+    n_slots=8, max_len=208, seq_buckets=(64, 128, 192),
+    level_caps=(64, 128, 256), prefill_chunk=48,
 )
-# mixed prompt lengths: N(60, 45) clipped to [1, 180], short outputs
-SPEC = WorkloadSpec(
-    n_requests=24, input_mean=60, input_std=45, output_mean=12,
-    output_std=6, output_max=20, input_max=180,
+SMOKE = dict(
+    arch=ArchConfig(
+        name="bench-smoke", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256,
+    ),
+    spec=WorkloadSpec(
+        n_requests=8, input_mean=24, input_std=16, output_mean=8,
+        output_std=4, output_max=12, input_max=56,
+    ),
+    n_slots=4, max_len=80, seq_buckets=(32, 64),
+    level_caps=(32, 64, 128), prefill_chunk=24,
 )
-N_SLOTS, MAX_LEN = 8, 208
-CM = CostModel(level_caps=(64, 128, 256))
-
-
-def _run(layout: str, **kw):
-    model = TransformerLM(ARCH)
-    params = init_params(jax.random.key(0), model.param_defs())
-    reqs = gsm8k_like_workload(SPEC, seed=11, known_lengths=True)
-    eng = Engine(
-        model, params,
-        EngineConfig(
-            n_slots=N_SLOTS, max_len=MAX_LEN,
-            prefill_seq_buckets=(64, 128, 192), kv_layout=layout, **kw,
-        ),
-    )
-    eng.profiler.cost_model = CM
-    clients = build_clients(N_SLOTS, reqs, None)
-    # warm the jit caches so compile time doesn't pollute the comparison
-    warm = gsm8k_like_workload(SPEC, seed=12, known_lengths=True)
-    eng.serve(warm, build_clients(N_SLOTS, warm, None),
-              GlobalQueueScheduler(warm), PrefillFirstPolicy())
-    t0 = time.perf_counter()
-    trace = eng.serve(reqs, clients, GlobalQueueScheduler(reqs), PrefillFirstPolicy())
-    wall = time.perf_counter() - t0
-    trace.validate()
-    out_tokens = sum(r.n_decode for r in reqs)
-    if layout == "paged":
-        peak = eng.slots.peak_kv_bytes()
-        cap = eng.slots.kv_bytes_capacity()
-    else:
-        peak = cap = eng.slots.cache["k"].nbytes + eng.slots.cache["v"].nbytes
-    return eng, {
-        "throughput_tok_s": out_tokens / wall,
-        "wall_s": wall,
-        "kv_capacity_bytes": cap,
-        "kv_peak_bytes": peak,
-    }
 
 
 def main() -> None:
-    eng_d, dense = _run("dense")
-    eng_p, paged = _run("paged", page_size=16, prefill_chunk=48)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, not minutes)")
+    ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    args = ap.parse_args()
+    cfg = SMOKE if args.smoke else FULL
+
+    eng_d, dense = run_serving_benchmark(cfg, kv_layout="dense")
+    eng_p, paged = run_serving_benchmark(
+        cfg, kv_layout="paged", page_size=16,
+        prefill_chunk=cfg["prefill_chunk"],
+    )
     parity = all(
         eng_d.generated[r] == eng_p.generated[r] for r in eng_d.generated
     )
@@ -87,12 +71,22 @@ def main() -> None:
     for name, m in (("dense", dense), ("paged", paged)):
         print(f"{name}_throughput,{m['throughput_tok_s']:.1f},tok/s")
         print(f"{name}_kv_capacity,{m['kv_capacity_bytes']},bytes")
-        print(f"{name}_kv_peak,{m['kv_peak_bytes']},bytes")
+        print(f"{name}_kv_peak,{m['peak_kv_bytes']},bytes")
+        print(f"{name}_dispatches_per_token,{m['dispatches_per_token']:.4f},1/tok")
+        print(f"{name}_p50_token_latency,{m['p50_token_latency_s'] * 1e3:.3f},ms")
+        print(f"{name}_p95_token_latency,{m['p95_token_latency_s'] * 1e3:.3f},ms")
     print(f"token_parity,{int(parity)},bool")
-    print(
-        "kv_peak_ratio,"
-        f"{paged['kv_peak_bytes'] / dense['kv_peak_bytes']:.3f},paged/dense"
-    )
+    kv_ratio = paged["peak_kv_bytes"] / dense["peak_kv_bytes"]
+    print(f"kv_peak_ratio,{kv_ratio:.3f},paged/dense")
+
+    payload = {
+        "dense": dense, "paged": paged,
+        "token_parity": bool(parity), "kv_peak_ratio": kv_ratio,
+    }
+    path = emit_json("paged_vs_dense", payload, smoke=args.smoke, out_dir=args.out)
+    print(f"# wrote {path}")
+    if not parity:
+        raise SystemExit("token parity violated between layouts")
 
 
 if __name__ == "__main__":

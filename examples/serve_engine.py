@@ -5,6 +5,13 @@ transformer on this machine) under the vLLM-style baseline and the paper's
 hybrid scheduler, with the online profiler calibrating the cost model live —
 the whole paper stack against real compute.
 
+Decode is *fused*: ``EngineConfig.max_decode_horizon`` (default 8) lets the
+policy commit up to K decode iterations to one on-device dispatch — sampling
+included — instead of one host round-trip per token; pass
+``decode_horizon=K`` to pin the horizon, or ``max_decode_horizon=1`` for the
+per-token baseline. Token streams are identical either way (the per-mode
+``dispatches/token`` column is what changes).
+
     PYTHONPATH=src python examples/serve_engine.py
 """
 import jax
@@ -65,10 +72,12 @@ def main():
             f"  peak KV={eng.slots.peak_kv_bytes() / 1024:.0f} KiB"
             if mode == "hybrid-paged" else ""
         )
+        dpt = eng.decode_dispatches / max(eng.decoded_tokens, 1)
         print(
             f"{mode:12s} util={s['utilization'] * 100:5.1f}%  "
             f"wall={s['makespan_s']:6.2f}s  speed={s['generation_speed_tok_s']:6.0f} tok/s  "
-            f"prefill stages={s['num_bins']}  profiler refits={eng.profiler.fits}{kv}"
+            f"prefill stages={s['num_bins']}  dispatches/token={dpt:.3f}  "
+            f"profiler refits={eng.profiler.fits}{kv}"
         )
         print(ascii_gantt(tr, width=90, max_clients=8))
 

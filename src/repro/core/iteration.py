@@ -80,12 +80,70 @@ class SystemSnapshot:
     now: float                        # current sim/wall time (seconds)
 
 
+@dataclass(frozen=True)
+class Decision:
+    """One iteration-level scheduling decision.
+
+    ``prefill`` chooses the stage kind (the paper's binary choice);
+    ``horizon`` is how many decode iterations to commit to one fused
+    on-device dispatch when ``prefill`` is False. Horizon 1 reproduces the
+    per-token baseline (one host sync per decoded token)."""
+
+    prefill: bool
+    horizon: int = 1
+
+
 class IterationPolicy:
     name = "base"
 
     def decide_prefill(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         """True → insert a prefill stage now; False → run a decode round."""
         raise NotImplementedError
+
+    def decode_horizon(
+        self, snap: SystemSnapshot, cost_model: CostModel, k_max: int = 1
+    ) -> int:
+        """Decode iterations to fuse into the next dispatch (1 ≤ K ≤ k_max).
+
+        Default: the Lagrangian-style marginal rule shared by every policy.
+        Fusing one more iteration saves amortized dispatch cost
+        d/dK [C_dispatch·(1−1/K)] = C_dispatch/K², but commits the engine one
+        round longer before it can reconsider — if prefill-ready work exists
+        (or can appear when a slot frees mid-horizon), that delay costs an
+        expected  w·t_round/2  of stalled prefill, with w the admission
+        pressure (pending work per client slot). Equating the marginals
+        prices the horizon in closed form:
+
+            K* = sqrt(2·C_dispatch / (w·t_round))
+
+        With no pending work there is nothing to preempt for (w→0, K*→∞) and
+        the horizon saturates at ``k_max``; under heavy admission pressure
+        K*→1 recovers the paper's per-iteration granularity.
+        """
+        if k_max <= 1:
+            return 1
+        # Prefill-ready work = queued requests OR an already-materialized
+        # candidate (e.g. a long prompt's remaining chunks after the queue
+        # drained) — either one makes delaying the next decision costly.
+        waiters = max(snap.pending_requests, len(snap.candidate.requests))
+        if waiters <= 0:
+            return k_max
+        w = min(1.0, waiters / max(snap.n_clients, 1))
+        t_round = cost_model.decode_round_time(max(snap.n_active, 1))
+        if t_round <= 0 or cost_model.decode_dispatch <= 0:
+            return 1
+        k_star = (2.0 * cost_model.decode_dispatch / (w * t_round)) ** 0.5
+        return max(1, min(k_max, int(k_star)))
+
+    def decide(
+        self, snap: SystemSnapshot, cost_model: CostModel, k_max: int = 1
+    ) -> Decision:
+        """Stage choice plus the decode horizon to run if decoding."""
+        if self(snap, cost_model):
+            return Decision(prefill=True)
+        return Decision(
+            prefill=False, horizon=self.decode_horizon(snap, cost_model, k_max)
+        )
 
     def __call__(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         # Progress guarantees, shared by all policies:

@@ -97,11 +97,20 @@ def full_cache_write_token(
     k_new: jax.Array,         # (B, 1, KV, D)
     v_new: jax.Array,
     positions: jax.Array,     # (B,) int32 — per-slot write positions
+    active: Optional[jax.Array] = None,   # (B,) bool — rows allowed to write
 ) -> Tuple[jax.Array, jax.Array]:
-    b = k_layer.shape[0]
+    b, s_max = k_layer.shape[:2]
     rows = jnp.arange(b)
-    k_layer = k_layer.at[rows, positions].set(k_new[:, 0].astype(k_layer.dtype))
-    v_layer = v_layer.at[rows, positions].set(v_new[:, 0].astype(v_layer.dtype))
+    if active is not None:
+        # inactive rows write at S_max → dropped by the scatter (the fused
+        # decode loop keeps finished slots as no-ops instead of early-exiting)
+        positions = jnp.where(active, positions, s_max)
+    k_layer = k_layer.at[rows, positions].set(
+        k_new[:, 0].astype(k_layer.dtype), mode="drop"
+    )
+    v_layer = v_layer.at[rows, positions].set(
+        v_new[:, 0].astype(v_layer.dtype), mode="drop"
+    )
     return k_layer, v_layer
 
 
@@ -111,21 +120,33 @@ def ring_cache_write_token(
     k_new: jax.Array,         # (B, 1, KV, D)
     v_new: jax.Array,
     positions: jax.Array,     # (B,) int32 — absolute token positions
+    active: Optional[jax.Array] = None,   # (B,) bool — rows allowed to write
 ) -> Tuple[jax.Array, jax.Array]:
     b, w = k_layer.shape[:2]
     rows = jnp.arange(b)
     slots = jnp.mod(positions, w)
-    k_layer = k_layer.at[rows, slots].set(k_new[:, 0].astype(k_layer.dtype))
-    v_layer = v_layer.at[rows, slots].set(v_new[:, 0].astype(v_layer.dtype))
+    if active is not None:
+        slots = jnp.where(active, slots, w)   # OOB → dropped
+    k_layer = k_layer.at[rows, slots].set(
+        k_new[:, 0].astype(k_layer.dtype), mode="drop"
+    )
+    v_layer = v_layer.at[rows, slots].set(
+        v_new[:, 0].astype(v_layer.dtype), mode="drop"
+    )
     return k_layer, v_layer
 
 
-def ring_positions_write_token(pos: jax.Array, positions: jax.Array) -> jax.Array:
+def ring_positions_write_token(
+    pos: jax.Array, positions: jax.Array,
+    active: Optional[jax.Array] = None,
+) -> jax.Array:
     """Update the (B, W) slot→absolute-position map for one token per slot."""
     b, w = pos.shape
     rows = jnp.arange(b)
     slots = jnp.mod(positions, w)
-    return pos.at[rows, slots].set(positions.astype(pos.dtype))
+    if active is not None:
+        slots = jnp.where(active, slots, w)   # OOB → dropped
+    return pos.at[rows, slots].set(positions.astype(pos.dtype), mode="drop")
 
 
 def ring_cache_write_prefill(

@@ -419,20 +419,27 @@ class TransformerLM:
         params: Params,
         tokens: jax.Array,                 # (B,) int32 — last sampled token
         cache: Dict[str, jax.Array],
-        active: Optional[jax.Array] = None,   # (B,) bool — paged cache only
+        active: Optional[jax.Array] = None,   # (B,) bool
     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Append one token per slot; returns (logits (B,V) f32, cache).
 
         The cache layout is detected from the pytree: a ``block_tables`` key
-        selects the paged path. ``active`` masks which slots may write —
-        mandatory for paged caches, where an idle slot's stale block table
-        could alias pages now owned by another slot (dense rows absorb idle
-        writes harmlessly, so the mask is ignored there)."""
+        selects the paged path. ``active`` masks which slots may write and
+        advance — mandatory for paged caches (an idle slot's stale block
+        table could alias pages now owned by another slot) and load-bearing
+        inside the fused multi-step loop, where a slot that hit its stop
+        condition mid-horizon must become a no-op (no KV write, no length
+        growth) instead of forcing the whole batch to exit. ``active=None``
+        keeps the legacy all-slots-advance dense behavior."""
         if "block_tables" in cache:
             return self._decode_step_paged(params, tokens, cache, active)
         cfg = self.cfg
         b = tokens.shape[0]
         lengths = cache["length"]                     # (B,) per-slot lengths
+        grow = (
+            jnp.ones((b,), jnp.int32) if active is None
+            else active.astype(jnp.int32)
+        )
         h = embed_tokens(tokens[:, None], params["embed"]).astype(self.dtype)  # (B,1,D)
         positions = lengths[:, None].astype(jnp.int32)            # (B, 1)
         if cfg.m_rope:
@@ -441,14 +448,16 @@ class TransformerLM:
             pos_in = positions
 
         ring = cfg.sliding_window > 0
-        # Post-write key positions (same for every layer): each slot's new
-        # token sits at its own ``lengths[b]``.
+        # Post-write key positions (same for every layer): each active slot's
+        # new token sits at its own ``lengths[b]``; masked slots gain nothing.
         if ring:
-            k_pos_now = ring_positions_write_token(cache["pos"], lengths)
+            k_pos_now = ring_positions_write_token(cache["pos"], lengths, active)
         else:
             max_len = cache["k"].shape[2]
             idx = jnp.arange(max_len, dtype=jnp.int32)
-            k_pos_now = jnp.where(idx[None, :] <= lengths[:, None], idx[None, :], -1)
+            k_pos_now = jnp.where(
+                idx[None, :] < (lengths + grow)[:, None], idx[None, :], -1
+            )
 
         def body(h, xs):
             lp, kc, vc = xs
@@ -468,9 +477,9 @@ class TransformerLM:
                 q = apply_rope(q, positions, cfg.rope_theta)
                 k = apply_rope(k, positions, cfg.rope_theta)
             if ring:
-                kc, vc = ring_cache_write_token(kc, vc, k, v, lengths)
+                kc, vc = ring_cache_write_token(kc, vc, k, v, lengths, active)
             else:
-                kc, vc = full_cache_write_token(kc, vc, k, v, lengths)
+                kc, vc = full_cache_write_token(kc, vc, k, v, lengths, active)
             attn_out = attention(
                 q, kc, vc,
                 q_positions=positions,
@@ -504,7 +513,7 @@ class TransformerLM:
         logits = unembed(h[:, 0, :], params["embed"]).astype(jnp.float32)
         new_cache = dict(cache)
         new_cache["k"], new_cache["v"] = k_all, v_all
-        new_cache["length"] = lengths + 1
+        new_cache["length"] = lengths + grow
         if ring:
             new_cache["pos"] = k_pos_now
         return logits, new_cache
@@ -584,3 +593,65 @@ class TransformerLM:
         new_cache["k"], new_cache["v"] = k_all, v_all
         new_cache["length"] = lengths + grow
         return logits, new_cache
+
+    # ------------------------------------------------------------------ #
+    # Serving: fused multi-step decode                                    #
+    # ------------------------------------------------------------------ #
+    def decode_steps(
+        self,
+        params: Params,
+        tokens: jax.Array,                 # (B,) int32 — last sampled token
+        cache: Dict[str, jax.Array],       # dense or paged layout
+        *,
+        num_steps: int,                    # static — the fused horizon K
+        sampler,                           # serving.sampler.Sampler object
+        active: jax.Array,                 # (B,) bool — slots decoding now
+        budgets: jax.Array,                # (B,) int32 — max tokens to emit
+        rids: jax.Array,                   # (B,) int32 — request ids
+        token_idx0: jax.Array,             # (B,) int32 — next token's index
+        base_key: Optional[jax.Array] = None,  # typed PRNG key (stochastic)
+        eos_id: Optional[int] = None,      # static
+    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
+        """Run K decode iterations in ONE device dispatch: attention, KV
+        append, and token sampling all stay on device; the host sees nothing
+        until the horizon boundary. Works for both cache layouts (dispatch on
+        ``block_tables`` happens inside ``decode_step``).
+
+        Each iteration feeds the previous iteration's sampled token back in.
+        A slot stops when it has emitted ``budgets[b]`` tokens or samples
+        ``eos_id``; from then on it is a no-op (masked KV write, frozen
+        length) rather than an early exit, so one finished slot never stalls
+        the rest of the batch. Stochastic samplers draw per-row keys folded
+        from ``(base_key, rid, token index)`` — a request's stream is
+        invariant to the horizon K, the slot it occupies, and its batch
+        neighbours, which is what makes fused and per-token decode exactly
+        token-identical.
+
+        Returns ``(token_block (K, B) int32 with -1 where a slot emitted
+        nothing that iteration, emitted (B,) int32, active_out (B,) bool,
+        last_token (B,) int32, cache)``.
+        """
+        from ..serving.sampler import fold_row_keys
+
+        def body(carry, _):
+            cur, act, counts, cache = carry
+            logits, cache = self.decode_step(params, cur, cache, active=act)
+            if base_key is None:
+                nxt = sampler(logits)
+            else:
+                keys = fold_row_keys(base_key, rids, token_idx0 + counts)
+                nxt = sampler(logits, keys)
+            nxt = jnp.where(act, nxt, cur)          # frozen slots keep theirs
+            counts = counts + act.astype(jnp.int32)
+            new_act = act & (counts < budgets)
+            if eos_id is not None:
+                new_act = new_act & (nxt != eos_id)
+            emitted_tok = jnp.where(act, nxt, -1)
+            return (nxt, new_act, counts, cache), emitted_tok
+
+        b = tokens.shape[0]
+        carry0 = (tokens, active, jnp.zeros((b,), jnp.int32), cache)
+        (last_tok, active_out, emitted, cache), token_block = jax.lax.scan(
+            body, carry0, None, length=num_steps
+        )
+        return token_block, emitted, active_out, last_tok, cache

@@ -1,4 +1,11 @@
 from .engine import Engine, EngineConfig
 from .kv_slots import BlockAllocator, PagedSlotManager, SlotManager
 from .profiler import OnlineProfiler
-from .sampler import greedy, sample_top_p
+from .sampler import (
+    GreedySampler,
+    Sampler,
+    TopPSampler,
+    fold_row_keys,
+    greedy,
+    sample_top_p,
+)

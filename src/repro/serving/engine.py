@@ -24,6 +24,19 @@ decode rounds interleave between a long prompt's chunks instead of stalling
 behind it. KV memory is pages-in-use rather than n_slots × max_len, with
 admission control against the page pool.
 
+Decode runs as *fused multi-step stages*: instead of paying one host↔device
+round trip per decoded token (dispatch → ``block_until_ready`` → host argmax
+→ re-upload), the engine commits to a decode *horizon* of K iterations and
+dispatches ONE jitted call (``model.decode_steps``) that loops attention +
+KV append + on-device sampling, keeping ``pending_token`` and per-slot stop
+state device-resident and syncing to host only at the horizon boundary. The
+iteration policy prices K from the cost model (amortized dispatch cost vs
+the expected regret of delaying a prefill insertion mid-horizon), and the
+online profiler learns per-horizon timings so K adapts to the hardware. A
+slot that hits its stop condition mid-horizon becomes a no-op inside the
+fused loop rather than forcing an early exit. ``max_decode_horizon=1``
+reproduces the legacy per-token loop exactly.
+
 The engine emits the same ``ScheduleTrace`` as the simulator, so utilization
 and Gantt accounting are directly comparable, and it can checkpoint/restore
 mid-run (slot cache + queues + scheduler state) for fault tolerance.
@@ -51,7 +64,7 @@ from ..core.types import (
 )
 from .kv_slots import PagedSlotManager, SlotManager
 from .profiler import OnlineProfiler
-from .sampler import greedy
+from .sampler import fold_row_keys, greedy
 
 Tree = Any
 
@@ -80,6 +93,19 @@ class EngineConfig:
     page_size: int = 16
     prefill_chunk: int = 32
     num_pages: Optional[int] = None
+    # Fused decode. Each decode stage runs one on-device loop of K
+    # iterations (one dispatch, one host sync). ``max_decode_horizon`` caps
+    # the policy-priced K; 1 reproduces the per-token baseline exactly.
+    # ``decode_horizon`` pins K instead of asking the policy (benchmarks /
+    # ablations). Horizons are bucketed down to powers of two so at most
+    # log2(K_max)+1 jit variants ever compile, and capped by the largest
+    # remaining decode budget so the drain tail never runs all-no-op rounds.
+    max_decode_horizon: int = 8
+    decode_horizon: Optional[int] = None
+    # PRNG seed for stochastic samplers. Token streams are reproducible as a
+    # pure function of (seed, request id, token index) — independent of
+    # horizon grouping, slot placement, batch composition, or KV layout.
+    sample_seed: int = 0
 
 
 def _bucket(x: int, buckets: Sequence[int]) -> int:
@@ -108,6 +134,20 @@ class _ChunkState:
         return self.req.n_prefill - self.done
 
 
+def _fused_decode(
+    model, sampler, eos_id,
+    num_steps, params, tokens, cache, active, budgets, rids, token_idx0,
+    base_key,
+):
+    """Jit target for the fused decode stage (module-level so the partial
+    closing over (model, sampler, eos_id) hashes stably across calls)."""
+    return model.decode_steps(
+        params, tokens, cache,
+        num_steps=num_steps, sampler=sampler, active=active, budgets=budgets,
+        rids=rids, token_idx0=token_idx0, base_key=base_key, eos_id=eos_id,
+    )
+
+
 class Engine:
     def __init__(
         self,
@@ -127,26 +167,44 @@ class Engine:
                 model, config.n_slots, config.max_len,
                 config.page_size, config.num_pages,
             )
-            self._decode_jit = jax.jit(
-                lambda p, t, c, m: model.decode_step(p, t, c, active=m),
-                donate_argnums=(2,),
-            )
             self._chunk_jit = jax.jit(
                 lambda p, t, c, s, st, ln: model.prefill_chunk(p, t, c, s, st, ln),
                 donate_argnums=(2,),
             )
         elif config.kv_layout == "dense":
             self.slots = SlotManager(model, config.n_slots, config.max_len)
-            self._decode_jit = jax.jit(
-                lambda p, t, c: model.decode_step(p, t, c), donate_argnums=(2,)
-            )
             self._prefill_jit = jax.jit(
                 lambda p, t, c, l: model.prefill(p, t, c, lengths=l),
                 donate_argnums=(2,),
             )
         else:
             raise ValueError(f"unknown kv_layout {config.kv_layout!r}")
+        # Stochastic samplers draw per-row keys folded from this base key;
+        # greedy engines carry no key (None short-circuits key plumbing).
+        self._base_key = (
+            jax.random.key(config.sample_seed)
+            if getattr(sampler, "stochastic", False) else None
+        )
+        # ONE decode path for both layouts and every horizon: a fused
+        # K-iteration on-device loop (K static → one executable per horizon
+        # bucket). The cache is donated, so K-step decode updates it in
+        # place; tokens stay on device until the horizon boundary.
+        self._fused_jit = jax.jit(
+            functools.partial(
+                _fused_decode, model, sampler, config.eos_id
+            ),
+            static_argnums=(0,),
+            donate_argnums=(3,),
+        )
         self.pending_token = np.zeros(config.n_slots, dtype=np.int32)
+        # Device-side copy of pending tokens, carried between consecutive
+        # decode stages so back-to-back horizons never re-upload (None →
+        # stale, rebuild from the host array; prefills invalidate it).
+        self._dev_pending: Optional[jax.Array] = None
+        # dispatch accounting (the quantity this subsystem optimizes; each
+        # dispatch implies exactly one host sync at its horizon boundary)
+        self.decode_dispatches = 0
+        self.decoded_tokens = 0
         self._budget_shift = 0            # straggler mitigation state
         self.straggler_events = 0
         self._chunking: Dict[int, _ChunkState] = {}
@@ -162,6 +220,20 @@ class Engine:
         return rng.integers(
             1, self._vocab(), size=req.n_prefill
         ).astype(np.int32)
+
+    def _sample_first(self, logits, rids: Sequence[int]) -> np.ndarray:
+        """Sample each prefill row's first token (token index 0 of its
+        request). Per-row keys fold (seed, rid, 0) — the same derivation the
+        fused decode loop uses for later indices, so the stream is seamless."""
+        if self._base_key is None:
+            return np.asarray(self.sampler(logits))
+        n_pad = logits.shape[0]
+        rid_vec = np.full(n_pad, -1, np.int32)     # pad rows sample garbage
+        rid_vec[: len(rids)] = rids
+        keys = fold_row_keys(
+            self._base_key, jnp.asarray(rid_vec), jnp.zeros(n_pad, jnp.int32)
+        )
+        return np.asarray(self.sampler(logits, keys))
 
     def _observe_prefill(self, total_tokens: int, dt: float) -> None:
         """Feed the profiler and run straggler mitigation (request-level
@@ -193,7 +265,8 @@ class Engine:
         )
         logits.block_until_ready()
         dt = time.perf_counter() - t0
-        first = np.asarray(self.sampler(logits))
+        first = self._sample_first(logits, [r.rid for r in reqs])
+        self._dev_pending = None          # prefill rewrites pending tokens
         # scatter only the real rows (the batch was padded to a bucket)
         real_cache = jax.tree_util.tree_map(
             lambda x: x[:, : len(slots)] if x.ndim >= 3 else x[: len(slots)],
@@ -299,7 +372,8 @@ class Engine:
         )
         logits.block_until_ready()
         dt = time.perf_counter() - t0
-        first = np.asarray(self.sampler(logits))
+        first = self._sample_first(logits, [st.req.rid for st in states])
+        self._dev_pending = None          # prefill rewrites pending tokens
         busy: Dict[int, int] = {}
         busy_partial: Dict[int, int] = {}
         finished: List[int] = []
@@ -320,36 +394,86 @@ class Engine:
         self._observe_prefill(chunk_tokens, dt)
         return dt, chunk_tokens, finished, busy, busy_partial
 
-    def _run_decode_round(self) -> Tuple[float, List[int]]:
-        """One decode round over all slots; returns (duration, finished slots)."""
-        tokens = jnp.asarray(self.pending_token)
+    def _choose_horizon(self, policy_horizon: int) -> int:
+        """Final decode horizon, capped by the largest remaining per-slot
+        budget (no all-no-op tail rounds). A pinned ``decode_horizon`` is
+        honored exactly (ablations must measure the K they asked for); the
+        policy-driven path buckets down to a power of two so at most
+        log2(K_max)+1 jit variants ever compile."""
+        cfg = self.cfg
+        rem = max(
+            (self._decode_budget(s) for s in self.slots.active_slots),
+            default=1,
+        )
+        if cfg.decode_horizon is not None:
+            k = max(1, min(cfg.decode_horizon, rem))
+            # run the pinned K exactly while budgets allow; bucket only the
+            # drain tail (rem < K), else every distinct tail value would
+            # compile a fresh executable inside a measured region
+            return k if k == cfg.decode_horizon else 1 << (k.bit_length() - 1)
+        k = max(1, min(policy_horizon, cfg.max_decode_horizon, rem))
+        return 1 << (k.bit_length() - 1)
+
+    def _decode_budget(self, slot: int) -> int:
+        """Tokens this slot may still emit: its known output budget, or (eos
+        mode) the KV capacity left — round r writes position
+        n_prefill + emitted - 1, which must stay below max_len."""
+        req = self.slots.request_of[slot]
+        emitted = self.slots.emitted[slot]
+        if self.cfg.eos_id is None:
+            return max(1, req.n_decode - emitted)
+        return max(1, self.cfg.max_len - (req.n_prefill + emitted - 1))
+
+    def _run_decode_stage(self, k: int) -> Tuple[float, List[int], int]:
+        """One fused decode stage of ``k`` iterations over all active slots:
+        ONE device dispatch, ONE host sync at the horizon boundary. Returns
+        (duration, finished slots, tokens emitted)."""
+        cfg = self.cfg
+        slots = self.slots.active_slots
+        active = np.zeros(cfg.n_slots, dtype=bool)
+        budgets = np.zeros(cfg.n_slots, dtype=np.int32)
+        rids = np.zeros(cfg.n_slots, dtype=np.int32)
+        emit0 = np.zeros(cfg.n_slots, dtype=np.int32)
+        for slot in slots:
+            active[slot] = True
+            budgets[slot] = self._decode_budget(slot)
+            rids[slot] = self.slots.request_of[slot].rid
+            emit0[slot] = self.slots.emitted[slot]
+        pending = (
+            self._dev_pending if self._dev_pending is not None
+            else jnp.asarray(self.pending_token)
+        )
         t0 = time.perf_counter()
-        if self.cfg.kv_layout == "paged":
-            logits, self.slots.cache = self._decode_jit(
-                self.params, tokens, self.slots.cache, self.slots.active_mask()
+        token_block, emitted_k, active_out, last_tok, self.slots.cache = (
+            self._fused_jit(
+                k, self.params, pending, self.slots.cache,
+                jnp.asarray(active), jnp.asarray(budgets), jnp.asarray(rids),
+                jnp.asarray(emit0), self._base_key,
             )
-        else:
-            logits, self.slots.cache = self._decode_jit(
-                self.params, tokens, self.slots.cache
-            )
-        logits.block_until_ready()
+        )
+        # the ONE host sync for this horizon: everything the scheduler needs
+        block = np.asarray(token_block)                    # (K, n_slots)
+        emitted_k = np.asarray(emitted_k)
+        active_out = np.asarray(active_out)
         dt = time.perf_counter() - t0
-        nxt = np.asarray(self.sampler(logits))
-        finished = []
-        for slot in self.slots.active_slots:
+        self._dev_pending = last_tok      # stays device-resident across stages
+        self.decode_dispatches += 1
+        finished: List[int] = []
+        total = 0
+        for slot in slots:
+            cnt = int(emitted_k[slot])
             req = self.slots.request_of[slot]
-            self.slots.emitted[slot] += 1
-            self.pending_token[slot] = int(nxt[slot])
-            self.generated.setdefault(req.rid, []).append(int(nxt[slot]))
+            toks = block[:cnt, slot]
+            self.slots.emitted[slot] += cnt
+            self.pending_token[slot] = int(toks[-1])
+            self.generated.setdefault(req.rid, []).extend(int(x) for x in toks)
             req.decoded = self.slots.emitted[slot]
-            done = (
-                self.cfg.eos_id is not None and int(nxt[slot]) == self.cfg.eos_id
-            ) or (self.cfg.eos_id is None and self.slots.emitted[slot] >= req.n_decode)
-            if done:
+            total += cnt
+            if not bool(active_out[slot]):
                 finished.append(slot)
-        n_active = len(self.slots.active_slots)
-        self.profiler.record_decode(n_active, dt)
-        return dt, finished
+        self.decoded_tokens += total
+        self.profiler.record_decode(len(slots), dt, rounds=k)
+        return dt, finished, total
 
     # ------------------------------------------------------------------ #
     def serve(
@@ -374,6 +498,8 @@ class Engine:
         # per-serve output record (rids repeat across workloads; in-flight
         # _chunking state is deliberately NOT cleared — it's the resume path)
         self.generated = {}
+        self.decode_dispatches = 0
+        self.decoded_tokens = 0
         t = 0.0
         bin_index = -1
         paged = cfg.kv_layout == "paged"
@@ -426,7 +552,11 @@ class Engine:
                 now=t,
             )
             t0 = time.perf_counter()
-            do_prefill = iteration_policy(snap, self.profiler.cost_model)
+            decision = iteration_policy.decide(
+                snap, self.profiler.cost_model,
+                k_max=cfg.decode_horizon or cfg.max_decode_horizon,
+            )
+            do_prefill = decision.prefill
             trace.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
 
             if do_prefill and candidate and paged:
@@ -487,7 +617,8 @@ class Engine:
                         self.slots.release(client.cid)
                         client.current = None
             elif active:
-                dt, finished = self._run_decode_round()
+                k = self._choose_horizon(decision.horizon)
+                dt, finished, tokens = self._run_decode_stage(k)
                 busy = {
                     c.cid: c.current.rid for c in active if c.current is not None
                 }
@@ -496,7 +627,7 @@ class Engine:
                         kind=StageKind.DECODE,
                         t_start=t, t_end=t + dt,
                         bin_index=max(bin_index, 0), busy=busy,
-                        tokens=len(active), rounds=1,
+                        tokens=tokens, rounds=k,
                     )
                 )
                 t += dt
@@ -549,12 +680,17 @@ class Engine:
         self.slots.cache = jax.tree_util.tree_map(
             jnp.asarray, state["cache"]
         )
+        # rids arrive as arrays from the checkpoint reader — int() them
+        # before hashing (a bound slot used to crash the restore here)
         self.slots.request_of = [
-            (requests_by_rid[rid] if rid >= 0 else None)
+            (requests_by_rid[int(rid)] if int(rid) >= 0 else None)
             for rid in state["request_of"]
         ]
-        self.slots.emitted = list(state["emitted"])
-        self.pending_token = np.asarray(state["pending_token"], dtype=np.int32)
+        self.slots.emitted = [int(e) for e in state["emitted"]]
+        # np.array (not asarray): checkpoint leaves can be read-only views,
+        # and the engine writes pending tokens in place every decode stage
+        self.pending_token = np.array(state["pending_token"], dtype=np.int32)
+        self._dev_pending = None          # rebuild from the restored host copy
         self._budget_shift = int(state.get("budget_shift", 0))
         self.straggler_events = int(state.get("straggler_events", 0))
         self._chunking = {}

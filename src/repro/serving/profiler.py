@@ -1,10 +1,12 @@
 """Online profiler — the paper's calibration loop, live.
 
 Measures every executed stage ((tokens, seconds) pairs for prefill stages;
-(active clients, seconds) for decode rounds) and refits the linear
-``CostModel`` the iteration policy consumes. This is how the scheduler
-adapts to whatever hardware it actually runs on (the paper fit 400 groups
-offline; we fit continuously with the same least-squares model).
+(active clients, fused rounds, seconds) triples for decode stages) and
+refits the linear ``CostModel`` the iteration policy consumes. This is how
+the scheduler adapts to whatever hardware it actually runs on (the paper fit
+400 groups offline; we fit continuously with the same least-squares model) —
+and how the per-dispatch cost that prices the fused decode horizon becomes
+identifiable, once stages of differing horizons have been observed.
 """
 from __future__ import annotations
 
@@ -22,7 +24,8 @@ class OnlineProfiler:
     ):
         self.cost_model = initial or CostModel()
         self.prefill_samples: List[Tuple[int, float]] = []
-        self.decode_samples: List[Tuple[int, float]] = []
+        # (n_active, rounds, seconds) per decode stage
+        self.decode_samples: List[Tuple[int, int, float]] = []
         self.refit_every = refit_every
         self.max_samples = max_samples
         self._since_fit = 0
@@ -32,8 +35,11 @@ class OnlineProfiler:
         self.prefill_samples.append((total_tokens, seconds))
         self._tick()
 
-    def record_decode(self, n_active: int, seconds: float) -> None:
-        self.decode_samples.append((n_active, seconds))
+    def record_decode(self, n_active: int, seconds: float, rounds: int = 1) -> None:
+        """One decode *stage*: ``rounds`` fused iterations over ``n_active``
+        clients in ``seconds``. Mixed horizons are what lets the fit separate
+        per-dispatch cost from per-round compute (see ``CostModel.fit``)."""
+        self.decode_samples.append((n_active, rounds, seconds))
         self._tick()
 
     def _tick(self) -> None:
@@ -52,6 +58,7 @@ class OnlineProfiler:
                     self.prefill_samples,
                     self.decode_samples,
                     level_caps=self.cost_model.level_caps,
+                    decode_dispatch=self.cost_model.decode_dispatch,
                 )
                 self.fits += 1
             except Exception:  # noqa: BLE001 — keep serving on a bad fit

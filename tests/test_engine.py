@@ -38,12 +38,26 @@ def model_and_params():
     return model, params
 
 
-def _engine(model, params):
+def _engine(model, params, **kw):
     eng = Engine(
         model, params,
-        EngineConfig(n_slots=4, max_len=64, prefill_seq_buckets=(32,)),
+        EngineConfig(n_slots=4, max_len=64, prefill_seq_buckets=(32,), **kw),
     )
     eng.profiler.cost_model = CM
+    return eng
+
+
+def _frozen_engine(model, params, **kw):
+    """Engine with the cost model pinned (no online refits): scheduling
+    decisions become a deterministic function of the workload, so trace-shape
+    assertions (num_bins, utilization) can't flake on machine-load noise."""
+    from repro.serving.profiler import OnlineProfiler
+
+    eng = Engine(
+        model, params,
+        EngineConfig(n_slots=4, max_len=64, prefill_seq_buckets=(32,), **kw),
+        profiler=OnlineProfiler(initial=CM, refit_every=10**9),
+    )
     return eng
 
 
@@ -63,7 +77,7 @@ def test_engine_hybrid_beats_baseline(model_and_params):
     results = {}
     for mode in ("baseline", "hybrid"):
         reqs = gsm8k_like_workload(SPEC, seed=1, known_lengths=True)
-        eng = _engine(model, params)
+        eng = _frozen_engine(model, params)
         if mode == "baseline":
             clients = build_clients(4, reqs, None)
             sched, pol = GlobalQueueScheduler(reqs), PrefillFirstPolicy()

@@ -16,24 +16,68 @@ import jax
 import numpy as np
 
 
-def decode_latency_percentiles(trace) -> Dict[str, float]:
-    """p50/p95 per-token decode latency (seconds) from a ScheduleTrace.
+def _decode_latency_samples(trace, burst_only: bool = False):
+    """Per-token decode latency samples (inter-token gaps) from a trace.
 
-    A fused decode stage of R rounds contributes R samples of
-    ``duration / R`` — the per-iteration latency every token in that stage
-    experienced (tokens inside a fused horizon are not individually timed;
-    the host only sees the horizon boundary, which is the point).
+    The honest per-token latency a decoding request experiences is the time
+    between its consecutive tokens — *including* any preempting prefill
+    stage that froze it in between (the alternating engine's whole cost
+    lives in those gaps, not inside its decode stages). Stages tile the
+    timeline, so for each (slot, rid) pair the gap between two stages that
+    decoded it is the sum of everything in between: its first token of a
+    stage costs ``t_end - previous t_end - (R-1)·duration/R``, the other
+    R-1 fused tokens ``duration/R`` each (tokens inside a fused horizon are
+    not individually timed; the host only sees the horizon boundary, which
+    is the point). Mixed stages are one round; slots whose *first* token
+    emitted there (``prefilled``) start their clock rather than sample it.
+    ``burst_only`` keeps only stages that ran while prefill work was in
+    flight — the latency slice the mixed-step path is supposed to protect.
     """
     samples = []
+    last_end: Dict[tuple, float] = {}      # (cid, rid) -> t_end of last decode
     for s in trace.stages:
-        if s.kind.value == "decode" and s.rounds > 0:
-            samples.extend([s.duration / s.rounds] * s.rounds)
+        if s.kind.value == "prefill":
+            # a completed prefill samples token #1 — the inter-token clock
+            # starts here, exactly as MIXED stages do via ``prefilled``
+            # (without this the first decode gap after an alternating-mode
+            # prefill would be under-reported and the two modes would not
+            # be measured the same way)
+            for cid, rid in s.busy.items():
+                last_end[(cid, rid)] = s.t_end
+            continue
+        if s.kind.value not in ("decode", "mixed"):
+            continue
+        rounds = max(s.rounds, 1)
+        per = s.duration / rounds
+        take = not burst_only or s.burst
+        for cid, rid in s.busy.items():
+            if s.kind.value == "mixed" and cid in s.prefilled:
+                last_end[(cid, rid)] = s.t_end     # token #1: clock starts
+                continue
+            prev = last_end.get((cid, rid))
+            if take:
+                first = per if prev is None else s.t_end - prev - (rounds - 1) * per
+                samples.append(max(first, 0.0))
+                samples.extend([per] * (rounds - 1))
+            last_end[(cid, rid)] = s.t_end
+    return samples
+
+
+def decode_latency_percentiles(trace) -> Dict[str, float]:
+    """p50/p95 per-token decode latency (seconds) from a ScheduleTrace."""
+    samples = _decode_latency_samples(trace)
     if not samples:
         return {"p50_token_latency_s": 0.0, "p95_token_latency_s": 0.0}
     return {
         "p50_token_latency_s": float(np.percentile(samples, 50)),
         "p95_token_latency_s": float(np.percentile(samples, 95)),
     }
+
+
+def burst_decode_latency_p95(trace) -> float:
+    """p95 per-token decode latency (seconds) during prefill bursts only."""
+    samples = _decode_latency_samples(trace, burst_only=True)
+    return float(np.percentile(samples, 95)) if samples else 0.0
 
 
 def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
@@ -47,6 +91,9 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
         "dispatches_per_token": (
             eng.decode_dispatches / max(eng.decoded_tokens, 1)
         ),
+        "mixed_rounds": eng.mixed_rounds,
+        "prefill_stall_time_s": eng.prefill_stall_time,
+        "p95_burst_token_latency_s": burst_decode_latency_p95(trace),
     }
     m.update(decode_latency_percentiles(trace))
     if eng.cfg.kv_layout == "paged":
@@ -59,12 +106,30 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
     return m
 
 
-def run_serving_benchmark(cfg: Dict, **engine_kwargs):
+def run_serving_benchmark(
+    cfg: Dict,
+    workload_factory=None,
+    scheduler_factory=None,
+    policy_factory=None,
+    warm_seed: int = 12,
+    **engine_kwargs,
+):
     """Shared serving-benchmark harness: build an engine from a config dict
     (keys: arch, spec, n_slots, max_len, seq_buckets, level_caps), warm the
     jit caches on a same-shape workload (seed 12), then time a full serve of
-    the measured workload (seed 11). Returns (engine, metrics). Keeping the
-    protocol in one place means every benchmark measures the same thing."""
+    the measured workload (seed 11). Returns (engine, metrics, trace).
+    Keeping the protocol in one place means every benchmark measures the
+    same thing.
+
+    ``workload_factory(seed)`` / ``scheduler_factory(requests)`` /
+    ``policy_factory()`` override the default GSM8K-shaped workload on a
+    FCFS queue under prefill-first (e.g. Poisson arrivals through an
+    ``ArrivalQueueScheduler`` in ``benchmarks/mixed_batch.py``).
+    ``warm_seed=11`` warms on the measured workload itself — every jit
+    shape the timed serve will hit compiles in the warm pass, which
+    latency-percentile benchmarks need (one compile blip dwarfs every real
+    stage).
+    """
     import time
 
     from repro.core import (
@@ -78,9 +143,18 @@ def run_serving_benchmark(cfg: Dict, **engine_kwargs):
     from repro.models.transformer import TransformerLM
     from repro.serving.engine import Engine, EngineConfig
 
+    if workload_factory is None:
+        workload_factory = lambda seed: gsm8k_like_workload(  # noqa: E731
+            cfg["spec"], seed=seed, known_lengths=True
+        )
+    if scheduler_factory is None:
+        scheduler_factory = GlobalQueueScheduler
+    if policy_factory is None:
+        policy_factory = PrefillFirstPolicy
+
     model = TransformerLM(cfg["arch"])
     params = init_params(jax.random.key(0), model.param_defs())
-    reqs = gsm8k_like_workload(cfg["spec"], seed=11, known_lengths=True)
+    reqs = workload_factory(11)
     eng = Engine(
         model, params,
         EngineConfig(
@@ -90,16 +164,21 @@ def run_serving_benchmark(cfg: Dict, **engine_kwargs):
     )
     eng.profiler.cost_model = CostModel(level_caps=cfg["level_caps"])
     clients = build_clients(cfg["n_slots"], reqs, None)
-    warm = gsm8k_like_workload(cfg["spec"], seed=12, known_lengths=True)
+    warm = workload_factory(warm_seed)
     eng.serve(warm, build_clients(cfg["n_slots"], warm, None),
-              GlobalQueueScheduler(warm), PrefillFirstPolicy())
+              scheduler_factory(warm), policy_factory())
+    if engine_kwargs.get("kv_layout") == "paged":
+        # the online refit can shift policy decisions between the warm and
+        # measured serves onto a jit variant the warm pass never hit —
+        # compile every variant now, not inside the timed region
+        eng.warm_serving_shapes()
     t0 = time.perf_counter()
     trace = eng.serve(
-        reqs, clients, GlobalQueueScheduler(reqs), PrefillFirstPolicy()
+        reqs, clients, scheduler_factory(reqs), policy_factory()
     )
     wall = time.perf_counter() - t0
     trace.validate()
-    return eng, engine_metrics(eng, trace, wall)
+    return eng, engine_metrics(eng, trace, wall), trace
 
 
 def emit_json(

@@ -64,7 +64,7 @@ def main() -> None:
     results = {}
     streams = {}
     for k in HORIZONS:
-        eng, m = run_serving_benchmark(cfg, decode_horizon=k)
+        eng, m, _ = run_serving_benchmark(cfg, decode_horizon=k)
         results[k] = m
         streams[k] = eng.generated
 

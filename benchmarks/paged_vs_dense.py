@@ -59,8 +59,8 @@ def main() -> None:
     args = ap.parse_args()
     cfg = SMOKE if args.smoke else FULL
 
-    eng_d, dense = run_serving_benchmark(cfg, kv_layout="dense")
-    eng_p, paged = run_serving_benchmark(
+    eng_d, dense, _ = run_serving_benchmark(cfg, kv_layout="dense")
+    eng_p, paged, _ = run_serving_benchmark(
         cfg, kv_layout="paged", page_size=16,
         prefill_chunk=cfg["prefill_chunk"],
     )

@@ -244,3 +244,8 @@ ALL_BENCHES = [
     bench_beyond_paper_policies,
     bench_beyond_hundred_cases,
 ]
+
+# Multi-simulation sweeps skipped by ``benchmarks.run --smoke`` (each runs
+# 50–100 full paper-scale simulations; the single-case tables cover the
+# same code paths in seconds).
+SLOW_BENCHES = {"bench_hundred_cases", "bench_beyond_hundred_cases"}

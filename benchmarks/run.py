@@ -1,21 +1,50 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV and
+# writes the machine-readable BENCH_paper_tables.json artifact (same schema
+# as every other benchmark: bench_io.emit_json), so the perf trajectory
+# tracks the paper-reproduction numbers alongside the engine benchmarks.
 from __future__ import annotations
 
+import argparse
 import sys
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="run only the fast single-simulation tables (CI budget)",
+    )
+    ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    args = ap.parse_args()
+
     from . import paper_tables
+    from .bench_io import emit_json
+
+    benches = paper_tables.ALL_BENCHES
+    if args.smoke:
+        benches = [
+            b for b in benches
+            if b.__name__ not in paper_tables.SLOW_BENCHES
+        ]
 
     print("name,us_per_call,derived")
     failures = 0
-    for bench in paper_tables.ALL_BENCHES:
+    metrics = {}
+    for bench in benches:
         try:
             for name, us, derived in bench():
                 print(f'{name},{us:.1f},"{derived}"', flush=True)
+                metrics[name] = {"us_per_call": us, "derived": derived}
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f'{bench.__name__},-1,"FAILED: {type(e).__name__}: {e}"', flush=True)
+            metrics[bench.__name__] = {
+                "us_per_call": -1.0,
+                "derived": f"FAILED: {type(e).__name__}: {e}",
+            }
+    metrics["failures"] = failures
+    path = emit_json("paper_tables", metrics, smoke=args.smoke, out_dir=args.out)
+    print(f"# wrote {path}")
     if failures:
         sys.exit(1)
 

@@ -12,6 +12,13 @@ included — instead of one host round-trip per token; pass
 per-token baseline. Token streams are identical either way (the per-mode
 ``dispatches/token`` column is what changes).
 
+The paged modes contrast the two scheduling shapes: ``hybrid-paged-alt``
+alternates prefill chunk rounds with decode stages (decoders freeze behind
+every chunk — the ``stall`` column), while ``hybrid-paged`` (mixed-step, the
+default) co-dispatches prefill chunks inside decode rounds under the
+policy's ``prefill_share`` pricing, so the stall is ~0 and stages show as
+'M' in the Gantt. Token streams are identical across all modes.
+
     PYTHONPATH=src python examples/serve_engine.py
 """
 import jax
@@ -46,12 +53,17 @@ def main():
     )
     cm = CostModel(level_caps=(32, 64, 128, 256))
 
-    for mode in ("baseline", "hybrid", "hybrid-paged"):
+    for mode in ("baseline", "hybrid", "hybrid-paged-alt", "hybrid-paged"):
         reqs = gsm8k_like_workload(spec, seed=7, known_lengths=True)
-        layout = (
-            dict(kv_layout="paged", page_size=16, prefill_chunk=32)
-            if mode == "hybrid-paged" else {}
-        )
+        if mode == "hybrid-paged":
+            layout = dict(kv_layout="paged", page_size=16, prefill_chunk=32)
+        elif mode == "hybrid-paged-alt":
+            layout = dict(
+                kv_layout="paged", page_size=16, prefill_chunk=32,
+                mixed_schedule=False,
+            )
+        else:
+            layout = {}
         eng = Engine(
             model, params,
             EngineConfig(
@@ -70,13 +82,15 @@ def main():
         s = tr.summary()
         kv = (
             f"  peak KV={eng.slots.peak_kv_bytes() / 1024:.0f} KiB"
-            if mode == "hybrid-paged" else ""
+            if mode.startswith("hybrid-paged") else ""
         )
         dpt = eng.decode_dispatches / max(eng.decoded_tokens, 1)
         print(
-            f"{mode:12s} util={s['utilization'] * 100:5.1f}%  "
+            f"{mode:16s} util={s['utilization'] * 100:5.1f}%  "
             f"wall={s['makespan_s']:6.2f}s  speed={s['generation_speed_tok_s']:6.0f} tok/s  "
             f"prefill stages={s['num_bins']}  dispatches/token={dpt:.3f}  "
+            f"mixed rounds={s['mixed_rounds']}  "
+            f"stall={s['prefill_stall_time_s']:.3f}s  "
             f"profiler refits={eng.profiler.fits}{kv}"
         )
         print(ascii_gantt(tr, width=90, max_clients=8))

@@ -26,6 +26,7 @@ from .online import (
     StaticBacklogScheduler,
     SortingPreemptiveScheduler,
     GlobalQueueScheduler,
+    ArrivalQueueScheduler,
     build_clients,
 )
 from .iteration import (

@@ -19,7 +19,7 @@ profiler to adapt the model to whatever hardware it actually runs on.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +52,22 @@ class CostModel:
     # 3-parameter fit below). The default is a typical single-process
     # dispatch+sync cost, refined online.
     decode_dispatch: float = 2e-3
+    # Mixed-batch (continuous-batching) timing model: one mixed round that
+    # decodes n_d rows while co-processing n_p prefill-chunk tokens in the
+    # same dispatch costs
+    #
+    #     t(n_d, n_p) = mixed_overhead
+    #                   + mixed_decode_per_row · n_d
+    #                   + mixed_prefill_per_token · n_p
+    #
+    # (separable: round overhead + per-decode-row + per-prefill-token). The
+    # ``None`` defaults derive the mixed constants from the stage-level
+    # model — a mixed round is a decode round whose duration inflates
+    # linearly with the piggybacked prefill tokens — until the profiler's
+    # fit (``mixed_samples`` below) replaces them with measured values.
+    mixed_overhead: Optional[float] = None
+    mixed_decode_per_row: Optional[float] = None
+    mixed_prefill_per_token: Optional[float] = None
     level_caps: Tuple[int, ...] = (512, 1024, 2048, 3072, 4096, 5000)
 
     def __post_init__(self) -> None:
@@ -82,6 +98,44 @@ class CostModel:
             return 0.0
         return self.decode_dispatch + rounds * self.decode_round_time(
             n_active_clients
+        )
+
+    # ------------------------------------------------------------------ #
+    # Mixed-batch model (continuous batching: prefill inside decode)     #
+    # ------------------------------------------------------------------ #
+    @property
+    def mixed_overhead_time(self) -> float:
+        return (
+            self.mixed_overhead
+            if self.mixed_overhead is not None else self.decode_overhead
+        )
+
+    @property
+    def mixed_decode_row_time(self) -> float:
+        return (
+            self.mixed_decode_per_row
+            if self.mixed_decode_per_row is not None else self.decode_per_token
+        )
+
+    @property
+    def mixed_prefill_token_time(self) -> float:
+        """Decode-latency inflation per co-scheduled prefill token — the
+        marginal price the ``prefill_share`` policies trade against."""
+        return (
+            self.mixed_prefill_per_token
+            if self.mixed_prefill_per_token is not None
+            else self.prefill_per_token
+        )
+
+    def mixed_round_time(self, n_decode: int, n_prefill_tokens: int) -> float:
+        """One mixed round: ``n_decode`` decode rows plus ``n_prefill_tokens``
+        prefill-chunk tokens in a single dispatch."""
+        if n_decode <= 0 and n_prefill_tokens <= 0:
+            return 0.0
+        return (
+            self.mixed_overhead_time
+            + self.mixed_decode_row_time * max(n_decode, 0)
+            + self.mixed_prefill_token_time * max(n_prefill_tokens, 0)
         )
 
     # ------------------------------------------------------------------ #
@@ -137,11 +191,32 @@ class CostModel:
     # Calibration (the paper's 400-group linear fit; engine profiler)    #
     # ------------------------------------------------------------------ #
     @staticmethod
+    def fit_mixed_params(
+        mixed_samples: Sequence[Tuple[int, int, float]],
+    ) -> Optional[Tuple[float, float, float]]:
+        """Separable mixed-batch fit → (overhead, per_decode_row,
+        per_prefill_token), or None when the samples cannot identify the
+        model (fewer than 3, or no variation in one of the regressors —
+        lstsq on a collinear column returns a silently wrong minimum-norm
+        solution)."""
+        if len(mixed_samples) < 3:
+            return None
+        nd = np.asarray([s[0] for s in mixed_samples], dtype=np.float64)
+        npf = np.asarray([s[1] for s in mixed_samples], dtype=np.float64)
+        ym = np.asarray([s[2] for s in mixed_samples], dtype=np.float64)
+        if len(set(nd.tolist())) < 2 or len(set(npf.tolist())) < 2:
+            return None
+        a = np.vstack([np.ones_like(nd), nd, npf]).T
+        (oh, row, tok), *_ = np.linalg.lstsq(a, ym, rcond=None)
+        return float(max(oh, 0.0)), float(max(row, 0.0)), float(max(tok, 0.0))
+
+    @staticmethod
     def fit(
         prefill_samples: Sequence[Tuple[int, float]],
         decode_samples: Sequence[Tuple],
         level_caps: Sequence[int] = (512, 1024, 2048, 3072, 4096, 5000),
         decode_dispatch: float = 2e-3,
+        mixed_samples: Sequence[Tuple[int, int, float]] = (),
     ) -> "CostModel":
         """Least-squares fit of measured stage samples → CostModel.
 
@@ -157,6 +232,13 @@ class CostModel:
         the dispatch column is collinear with the overhead column, so the fit
         degrades to the paper's 2-parameter per-round model and keeps
         ``decode_dispatch`` at the caller-provided prior.
+
+        ``mixed_samples``: (n_decode_rows, n_prefill_tokens, seconds) triples
+        from mixed-step stages. With enough variation in *both* regressors
+        (≥ 3 samples, ≥ 2 distinct values each) the separable model
+        ``t(n_d, n_p) = overhead + per_row·n_d + per_token·n_p`` is fit and
+        the share-pricing policy adapts online; otherwise the mixed constants
+        stay derived from the stage-level model.
         """
 
         def linfit(samples: Sequence[Tuple[int, float]]) -> Tuple[float, float]:
@@ -187,12 +269,20 @@ class CostModel:
         else:
             # normalize to per-round times and fit the 2-parameter model
             d_slope, d_int = linfit(list(zip(n.tolist(), (y / k).tolist())))
+
+        m_oh = m_row = m_tok = None
+        mixed_fit = CostModel.fit_mixed_params(mixed_samples)
+        if mixed_fit is not None:
+            m_oh, m_row, m_tok = mixed_fit
         return CostModel(
             prefill_per_token=p_slope,
             prefill_overhead=p_int,
             decode_per_token=d_slope,
             decode_overhead=d_int,
             decode_dispatch=decode_dispatch,
+            mixed_overhead=m_oh,
+            mixed_decode_per_row=m_row,
+            mixed_prefill_per_token=m_tok,
             level_caps=tuple(level_caps),
         )
 

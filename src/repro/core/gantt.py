@@ -46,8 +46,9 @@ def ascii_gantt(
 ) -> str:
     """Downsampled ASCII Gantt.
 
-    '#' = decoding, 'P' = in prefill, '.' = idle. One row per (sampled)
-    client; columns are equal time buckets. A bucket shows the dominant state.
+    '#' = decoding, 'P' = in prefill, 'M' = mixed (decode + piggybacked
+    prefill chunks), '.' = idle. One row per (sampled) client; columns are
+    equal time buckets. A bucket shows the dominant state.
     """
     if not trace.stages:
         return "(empty trace)"
@@ -55,18 +56,23 @@ def ascii_gantt(
     n = trace.num_clients
     step = every_nth_client or max(1, n // max_clients)
     rows = list(range(0, n, step))
-    # occupancy[cid][col] in {0 idle, 1 prefill, 2 decode} by dominant time
-    occ = {cid: [[0.0, 0.0, 0.0] for _ in range(width)] for cid in rows}
+    # occupancy[cid][col] in {0 idle, 1 prefill, 2 decode, 3 mixed}
+    occ = {cid: [[0.0, 0.0, 0.0, 0.0] for _ in range(width)] for cid in rows}
     for s in trace.stages:
         c0 = int(s.t_start / span * width)
         c1 = max(c0 + 1, int(s.t_end / span * width + 0.999999))
-        kind = 1 if s.kind is StageKind.PREFILL else 2
+        if s.kind is StageKind.PREFILL:
+            kind = 1
+        elif s.kind is StageKind.MIXED:
+            kind = 3
+        else:
+            kind = 2
         for cid in rows:
             state = kind if (cid in s.busy or cid in s.busy_partial) else 0
             for col in range(c0, min(c1, width)):
                 # apportion stage duration to bucket overlap (approximate)
                 occ[cid][col][state] += s.duration / (c1 - c0)
-    chars = {0: ".", 1: "P", 2: "#"}
+    chars = {0: ".", 1: "P", 2: "#", 3: "M"}
     out = io.StringIO()
     out.write(
         f"Gantt [{trace.policy_name}] makespan={span:.2f}s "
@@ -75,10 +81,13 @@ def ascii_gantt(
     )
     for cid in rows:
         line = "".join(
-            chars[max(range(3), key=lambda k: occ[cid][col][k])] for col in range(width)
+            chars[max(range(4), key=lambda k: occ[cid][col][k])] for col in range(width)
         )
         out.write(f"c{cid:>4} |{line}|\n")
-    out.write(f"       {'':<1}('#'=decode  'P'=prefill  '.'=idle; {step} clients/row)\n")
+    out.write(
+        f"       {'':<1}('#'=decode  'P'=prefill  'M'=mixed  '.'=idle; "
+        f"{step} clients/row)\n"
+    )
     return out.getvalue()
 
 

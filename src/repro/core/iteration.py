@@ -87,10 +87,20 @@ class Decision:
     ``prefill`` chooses the stage kind (the paper's binary choice);
     ``horizon`` is how many decode iterations to commit to one fused
     on-device dispatch when ``prefill`` is False. Horizon 1 reproduces the
-    per-token baseline (one host sync per decoded token)."""
+    per-token baseline (one host sync per decoded token).
+
+    ``chunk_tokens`` carries the *mixed-step* split: how many prefill-chunk
+    tokens to co-schedule inside the next decode round (one unified
+    dispatch — prefill piggybacks on decode instead of preempting it). It
+    is only set when the engine offers a mixed budget; > 0 means "run a
+    mixed round with this share", 0 falls through to pure (fused) decode.
+    The binary ``prefill`` choice is the degenerate case: share = whole
+    budget when there is nothing to decode, share = 0 when there is nothing
+    to prefill."""
 
     prefill: bool
     horizon: int = 1
+    chunk_tokens: int = 0
 
 
 class IterationPolicy:
@@ -135,10 +145,82 @@ class IterationPolicy:
         k_star = (2.0 * cost_model.decode_dispatch / (w * t_round)) ** 0.5
         return max(1, min(k_max, int(k_star)))
 
+    def prefill_share(
+        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+    ) -> int:
+        """Prefill-chunk tokens to co-schedule into the next *mixed* round
+        (0 ≤ share ≤ budget) — the Lagrangian turned from a binary stage
+        switch into a continuous knob.
+
+        In a mixed batch nothing stalls: co-scheduling n prefill tokens
+        merely inflates the round by t_p·n (every active decoder waits that
+        much longer for its next token), while the waiting prompts' time to
+        first token shrinks as their P outstanding tokens flow at n per
+        round. The marginal decode-latency cost of the n-th chunk token is
+        flat, n_active·t_p; the marginal queueing gain is diminishing,
+        w·P·t_0/n² (finishing P tokens takes P·t_0/n + P·t_p seconds of
+        round overhead, weighted by the admission pressure w = waiters per
+        slot). Equating the marginals prices the share in closed form:
+
+            n* = sqrt(w · P · t_0 / (n_active · t_p))
+
+        with t_0 the pure-decode round time and t_p the cost model's fitted
+        per-prefill-token inflation. With no active decoders there is no
+        latency to protect (n*→∞ — take the whole budget); under heavy
+        decode load with a trickle of prefill work n*→0 and the engine runs
+        pure fused decode. The paper's binary choice survives as the two
+        saturated ends of this knob.
+        """
+        if budget <= 0:
+            return 0
+        if snap.n_active == 0:
+            return budget                  # nothing decoding — nothing to inflate
+        waiters = max(snap.pending_requests, len(snap.candidate.requests))
+        if waiters <= 0:
+            return 0
+        w = min(1.0, waiters / max(snap.n_clients, 1))
+        t0 = cost_model.mixed_round_time(snap.n_active, 0)
+        tp = cost_model.mixed_prefill_token_time
+        if tp <= 0:
+            # a noisy fit can clamp the mixed slope to exactly 0 — fall
+            # back to the stage-level slope rather than pricing chunk
+            # tokens as free (which would take the max share every round)
+            tp = cost_model.prefill_per_token
+        if t0 <= 0:
+            t0 = cost_model.decode_round_time(snap.n_active)
+        p_out = max(
+            snap.candidate.total_prefill_tokens,
+            snap.candidate.effective_prefill_tokens,
+        )
+        if t0 <= 0 or tp <= 0:
+            return budget
+        n_star = (w * p_out * t0 / (snap.n_active * tp)) ** 0.5
+        return min(budget, int(n_star))
+
     def decide(
-        self, snap: SystemSnapshot, cost_model: CostModel, k_max: int = 1
+        self,
+        snap: SystemSnapshot,
+        cost_model: CostModel,
+        k_max: int = 1,
+        mixed_budget: Optional[int] = None,
     ) -> Decision:
-        """Stage choice plus the decode horizon to run if decoding."""
+        """Stage choice plus the decode horizon to run if decoding.
+
+        ``mixed_budget`` switches to mixed-step semantics: instead of the
+        binary prefill-vs-decode choice the policy prices the prefill-token
+        share of one unified dispatch (``chunk_tokens``); 0 falls back to a
+        pure fused-decode stage at the priced horizon."""
+        if mixed_budget is not None:
+            share = min(
+                self.prefill_share(snap, cost_model, mixed_budget),
+                mixed_budget,
+            )
+            if share > 0:
+                return Decision(prefill=False, horizon=1, chunk_tokens=share)
+            return Decision(
+                prefill=False,
+                horizon=self.decode_horizon(snap, cost_model, k_max),
+            )
         if self(snap, cost_model):
             return Decision(prefill=True)
         return Decision(
@@ -162,6 +244,13 @@ class PrefillFirstPolicy(IterationPolicy):
     def decide_prefill(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         return True
 
+    def prefill_share(
+        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+    ) -> int:
+        # mixed-step analogue of "prefill whenever possible": take the
+        # whole chunk budget every round, regardless of latency inflation
+        return max(budget, 0)
+
 
 class DecodeFirstPolicy(IterationPolicy):
     """Anti-baseline for ablations: only prefill when forced."""
@@ -170,6 +259,12 @@ class DecodeFirstPolicy(IterationPolicy):
 
     def decide_prefill(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         return False
+
+    def prefill_share(
+        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+    ) -> int:
+        # only co-schedule prefill when there is nothing to decode at all
+        return max(budget, 0) if snap.n_active == 0 else 0
 
 
 class LagrangianPolicy(IterationPolicy):
@@ -329,6 +424,13 @@ class DynamicBatchPolicy(IterationPolicy):
             return True
         return self.inner.decide_prefill(snap, cost_model)
 
+    def prefill_share(
+        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+    ) -> int:
+        if snap.pending_requests <= snap.n_idle:
+            return max(budget, 0)          # drain phase: admit immediately
+        return self.inner.prefill_share(snap, cost_model, budget)
+
 
 class TimedPolicy(IterationPolicy):
     """Decorator measuring per-decision wall time (the <5 ms claim)."""
@@ -344,8 +446,33 @@ class TimedPolicy(IterationPolicy):
         self.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
         return out
 
+    def decide(
+        self,
+        snap: SystemSnapshot,
+        cost_model: CostModel,
+        k_max: int = 1,
+        mixed_budget: Optional[int] = None,
+    ) -> Decision:
+        # time the full engine-facing decision: under mixed-step scheduling
+        # the binary __call__ path never runs, so without this override a
+        # mixed serve would record no decision times at all
+        t0 = time.perf_counter()
+        out = self.inner.decide(snap, cost_model, k_max, mixed_budget)
+        self.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
+        return out
+
     def decide_prefill(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         return self.inner.decide_prefill(snap, cost_model)
+
+    def decode_horizon(
+        self, snap: SystemSnapshot, cost_model: CostModel, k_max: int = 1
+    ) -> int:
+        return self.inner.decode_horizon(snap, cost_model, k_max)
+
+    def prefill_share(
+        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+    ) -> int:
+        return self.inner.prefill_share(snap, cost_model, budget)
 
 
 POLICIES = {

@@ -240,6 +240,54 @@ class GlobalQueueScheduler(RequestScheduler):
         self._queue.remove(request)
 
 
+class ArrivalQueueScheduler(GlobalQueueScheduler):
+    """FCFS queue where a request only becomes schedulable once its
+    ``arrival`` time has passed (open-loop online traffic, e.g. Poisson
+    arrivals — ``benchmarks/mixed_batch.py``).
+
+    The executor publishes its stage clock through ``set_now`` before every
+    batch proposal; ``peek`` then surfaces only arrived requests, and
+    ``next_arrival`` lets an idle engine fast-forward through an empty gap
+    instead of spinning or deadlocking. ``has_pending`` counts *all*
+    undelivered requests (including future arrivals) so the serve loop does
+    not drain early."""
+
+    def __init__(self, requests: Sequence[Request]):
+        super().__init__(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        self.now = 0.0
+
+    def set_now(self, now: float) -> None:
+        if now > self.now:
+            self.now = now
+
+    def pending_count(self) -> int:
+        """Only *arrived* requests count as schedulable pressure — the
+        policies price waiter pressure (w in prefill_share, the Lagrangian
+        C_d) against work they could actually admit now, and a queue of
+        far-future arrivals would inflate it. ``has_pending`` still counts
+        everything so the serve loop does not drain early."""
+        n = 0
+        for r in self._queue:              # arrival-sorted: stop at the
+            if r.arrival > self.now:       # first future request instead
+                break                      # of scanning the whole queue
+            n += 1
+        return n
+
+    def peek(self, client: ClientState, claimed: Set[int]) -> Optional[Request]:
+        for r in self._queue:
+            if r.arrival > self.now:
+                break                      # queue is arrival-sorted
+            if r.rid not in claimed:
+                return r
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        for r in self._queue:
+            if r.arrival > self.now:
+                return r.arrival
+        return None
+
+
 def build_clients(
     n_clients: int,
     requests: Sequence[Request],

@@ -28,10 +28,17 @@ class Phase(enum.Enum):
 
 
 class StageKind(enum.Enum):
-    """PD-Competition stage type — the system runs exactly one at a time."""
+    """PD-Competition stage type — the system runs exactly one at a time.
+
+    ``MIXED`` is the continuous-batching stage the mixed-step engine path
+    dispatches: one decode round for every active slot *plus* a budget of
+    prefill-chunk tokens co-processed in the same call, so prefill
+    piggybacks on decode instead of preempting it.
+    """
 
     PREFILL = "prefill"
     DECODE = "decode"
+    MIXED = "mixed"
 
 
 @dataclass
@@ -123,6 +130,15 @@ class StageRecord:
     tokens: int = 0          # tokens processed in this stage
     rounds: int = 0          # decode rounds contained (decode stages only)
     level: Optional[int] = None  # prefill level index (prefill stages only)
+    # Mixed stages: prefill-chunk tokens co-processed with the decode round
+    # (tokens - chunk_tokens = decode tokens emitted), and the requests whose
+    # *final* chunk landed here (validate counts their prefill at this stage;
+    # a mixed stage's ``busy`` also holds slots that were merely decoding).
+    chunk_tokens: int = 0
+    prefilled: Dict[int, int] = field(default_factory=dict)  # cid -> rid
+    # True when prefill work was pending or in flight while this stage ran —
+    # the "during a prefill burst" tag the latency benchmarks slice on.
+    burst: bool = False
 
     @property
     def duration(self) -> float:
@@ -138,6 +154,10 @@ class ScheduleTrace:
     requests: List[Request] = field(default_factory=list)
     decision_times_ms: List[float] = field(default_factory=list)
     policy_name: str = ""
+    # Executor-side counters that have no stage-level representation (the
+    # engine fills e.g. mixed_rounds / prefill_stall_time_s); merged into
+    # ``summary()`` so serve() results carry them without schema changes.
+    meta: Dict[str, float] = field(default_factory=dict)
 
     @property
     def makespan(self) -> float:
@@ -145,11 +165,27 @@ class ScheduleTrace:
 
     @property
     def total_prefill_time(self) -> float:
-        return sum(s.duration for s in self.stages if s.kind is StageKind.PREFILL)
+        """Wall-clock spent on prefill work; a MIXED stage contributes its
+        duration weighted by the chunk-token share of the batch."""
+        out = 0.0
+        for s in self.stages:
+            if s.kind is StageKind.PREFILL:
+                out += s.duration
+            elif s.kind is StageKind.MIXED and s.tokens > 0:
+                out += s.duration * s.chunk_tokens / s.tokens
+        return out
 
     @property
     def total_decode_time(self) -> float:
-        return sum(s.duration for s in self.stages if s.kind is StageKind.DECODE)
+        """Wall-clock spent on decode work (MIXED stages weighted by their
+        decode-token share)."""
+        out = 0.0
+        for s in self.stages:
+            if s.kind is StageKind.DECODE:
+                out += s.duration
+            elif s.kind is StageKind.MIXED and s.tokens > 0:
+                out += s.duration * (s.tokens - s.chunk_tokens) / s.tokens
+        return out
 
     @property
     def busy_client_time(self) -> float:
@@ -199,6 +235,7 @@ class ScheduleTrace:
             )
             if self.decision_times_ms
             else 0.0,
+            **self.meta,
         }
 
     def validate(self) -> None:
@@ -223,6 +260,11 @@ class ScheduleTrace:
                 )
             if s.kind is StageKind.PREFILL:
                 for cid, rid in s.busy.items():
+                    prefilled[rid] = prefilled.get(rid, 0) + 1
+            elif s.kind is StageKind.MIXED:
+                # a mixed stage's ``busy`` mixes decoders with finishing
+                # prefills — only ``prefilled`` names completed prefills
+                for cid, rid in s.prefilled.items():
                     prefilled[rid] = prefilled.get(rid, 0) + 1
         for r in self.requests:
             if prefilled.get(r.rid, 0) != 1:
@@ -250,6 +292,7 @@ class ScheduleTrace:
                         "tokens": s.tokens,
                         "rounds": s.rounds,
                         "level": s.level,
+                        "chunk_tokens": s.chunk_tokens,
                     }
                     for s in self.stages
                 ],

@@ -110,14 +110,7 @@ class TransformerLM:
     ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, jax.Array]]:
         cfg = self.cfg
         x = apply_norm(h, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
-        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
-        if cfg.use_bias:
-            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
-        if cfg.qk_norm:
-            q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
-            k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        q, k, v = self._qkv_block(x, lp)
         if cfg.m_rope:
             q = apply_m_rope(q, positions, cfg.m_rope_sections, cfg.rope_theta)
             k = apply_m_rope(k, positions, cfg.m_rope_sections, cfg.rope_theta)
@@ -358,14 +351,7 @@ class TransformerLM:
         def body(h, xs):
             lp, kc, vc = xs
             x = apply_norm(h, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
-            q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
-            k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
-            v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
-            if cfg.use_bias:
-                q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
-            if cfg.qk_norm:
-                q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
-                k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            q, k, v = self._qkv_block(x, lp)
             if cfg.m_rope:
                 q = apply_m_rope(q, pos_in, cfg.m_rope_sections, cfg.rope_theta)
                 k = apply_m_rope(k, pos_in, cfg.m_rope_sections, cfg.rope_theta)
@@ -382,20 +368,7 @@ class TransformerLM:
             attn_out = jnp.einsum("bshk,hkd->bsd", attn_out, lp["wo"])
             if cfg.use_bias:
                 attn_out = attn_out + lp["bo"]
-            h = h + attn_out
-            x = apply_norm(h, lp["norm_mlp"], cfg.norm_kind, cfg.norm_eps)
-            if cfg.is_moe:
-                mlp_out, _ = moe_apply(
-                    x, lp["moe"],
-                    n_experts=cfg.n_experts,
-                    top_k=cfg.experts_per_token,
-                    mlp_kind=cfg.mlp_kind,
-                    capacity_factor=cfg.moe_capacity_factor,
-                    group_size=cfg.moe_group_size,
-                )
-            else:
-                mlp_out = mlp_apply(x, lp["mlp"], cfg.mlp_kind)
-            h = h + mlp_out
+            h = self._mlp_block(h + attn_out, lp)
             return h, (kc, vc)
 
         h, (k_all, v_all) = jax.lax.scan(
@@ -410,6 +383,173 @@ class TransformerLM:
             new_lens, mode="drop"
         )
         return logits, new_cache
+
+    # ------------------------------------------------------------------ #
+    # Serving: unified mixed prefill+decode dispatch (paged layout)       #
+    # ------------------------------------------------------------------ #
+    def _qkv_block(self, x, lp):
+        """Shared q/k/v projection + qk-norm for the serving bodies."""
+        cfg = self.cfg
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+        if cfg.use_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        return q, k, v
+
+    def _mlp_block(self, h, lp):
+        cfg = self.cfg
+        x = apply_norm(h, lp["norm_mlp"], cfg.norm_kind, cfg.norm_eps)
+        if cfg.is_moe:
+            mlp_out, _ = moe_apply(
+                x, lp["moe"],
+                n_experts=cfg.n_experts,
+                top_k=cfg.experts_per_token,
+                mlp_kind=cfg.mlp_kind,
+                capacity_factor=cfg.moe_capacity_factor,
+                group_size=cfg.moe_group_size,
+            )
+        else:
+            mlp_out = mlp_apply(x, lp["mlp"], cfg.mlp_kind)
+        return h + mlp_out
+
+    def mixed_step(
+        self,
+        params: Params,
+        dec_tokens: jax.Array,             # (J,) int32 — pending token/slot
+        cache: Dict[str, jax.Array],       # paged cache (the whole pool)
+        chunk_tokens: jax.Array,           # (R, C) int32 — one chunk per row
+        chunk_slots: jax.Array,            # (R,) int32; >= n_slots → pad row
+        chunk_starts: jax.Array,           # (R,) int32 — offset in prompt
+        chunk_lens: jax.Array,             # (R,) int32 — real tokens (≤ C)
+        *,
+        sampler,                           # serving.sampler.Sampler object
+        dec_active: jax.Array,             # (J,) bool — slots decoding now
+        rids: jax.Array,                   # (J+R,) int32 — request ids
+        token_idx: jax.Array,              # (J+R,) int32 — sampled token index
+        sample_rows: jax.Array,            # (J+R,) bool — rows that sample
+        base_key: Optional[jax.Array] = None,  # typed PRNG key (stochastic)
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Process one *mixed* batch — a decode round over all J slots plus
+        R ragged prefill-chunk rows — in ONE device dispatch over the paged
+        KV pool.
+
+        The two sub-batches keep their native shapes and run through a
+        single layer scan: the chunk rows use exactly ``prefill_chunk``'s
+        row-form page writes and chunk attention, the decode lanes exactly
+        the paged ``decode_step`` math with ``dec_active`` masking. A mid-
+        prefill slot is never bound, so the sub-batches touch disjoint
+        slots and the mixed round is mathematically the sequential
+        chunk-round-then-decode-round computation fused into one dispatch
+        — prefill stops preempting decode because there is no separate
+        prefill stage left to preempt it with.
+
+        Sampling happens on device for every row flagged in ``sample_rows``
+        (decode lanes first, then chunk rows: a prompt's final chunk emits
+        its first output token in the same call), with per-row keys folded
+        from ``(base_key, rid, token_idx)`` so streams stay a pure function
+        of (seed, rid, token index) regardless of batch composition.
+        Returns ``(sampled (J+R,) int32 with -1 on non-sampling rows,
+        cache)``.
+        """
+        cfg = self.cfg
+        self._check_paged_supported()
+        j = dec_tokens.shape[0]
+        r, c = chunk_tokens.shape
+        n_slots = cache["block_tables"].shape[0]
+        lengths = cache["length"]
+        grow = dec_active.astype(jnp.int32)
+
+        # decode-lane geometry (paged decode_step)
+        dec_pos = lengths[:, None].astype(jnp.int32)            # (J, 1)
+        dec_pos_in = (
+            jnp.broadcast_to(dec_pos[..., None], (j, 1, 3))
+            if cfg.m_rope else dec_pos
+        )
+        dec_tables = cache["block_tables"]
+
+        # chunk-row geometry (prefill_chunk)
+        ch_pos = chunk_starts[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        ch_pos_in = (
+            jnp.broadcast_to(ch_pos[..., None], (r, c, 3))
+            if cfg.m_rope else ch_pos
+        )
+        ch_tables = cache["block_tables"][jnp.clip(chunk_slots, 0, n_slots - 1)]
+        ch_new_lens = chunk_starts + chunk_lens
+
+        def body(carry, xs):
+            h_d, h_c = carry
+            lp, kc, vc = xs
+            # projections for both sub-batches
+            x_d = apply_norm(h_d, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
+            q_d, k_d, v_d = self._qkv_block(x_d, lp)
+            x_c = apply_norm(h_c, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
+            q_c, k_c, v_c = self._qkv_block(x_c, lp)
+            if cfg.m_rope:
+                q_d = apply_m_rope(q_d, dec_pos_in, cfg.m_rope_sections, cfg.rope_theta)
+                k_d = apply_m_rope(k_d, dec_pos_in, cfg.m_rope_sections, cfg.rope_theta)
+                q_c = apply_m_rope(q_c, ch_pos_in, cfg.m_rope_sections, cfg.rope_theta)
+                k_c = apply_m_rope(k_c, ch_pos_in, cfg.m_rope_sections, cfg.rope_theta)
+            else:
+                q_d = apply_rope(q_d, dec_pos, cfg.rope_theta)
+                k_d = apply_rope(k_d, dec_pos, cfg.rope_theta)
+                q_c = apply_rope(q_c, ch_pos, cfg.rope_theta)
+                k_c = apply_rope(k_c, ch_pos, cfg.rope_theta)
+            # all page writes land before either attention reads — the
+            # sub-batches own disjoint slots, so write order is irrelevant
+            kc, vc = paged_cache_write(
+                kc, vc, k_c, v_c, ch_tables, chunk_starts, chunk_lens
+            )
+            kc, vc = paged_cache_write_token(
+                kc, vc, k_d, v_d, dec_tables, lengths, dec_active
+            )
+            attn_c = attention_paged(
+                q_c, kc, vc, ch_tables,
+                q_positions=ch_pos, valid_lengths=ch_new_lens, causal=True,
+            )
+            attn_d = attention_paged(
+                q_d, kc, vc, dec_tables,
+                q_positions=dec_pos, valid_lengths=lengths + grow, causal=True,
+            )
+            attn_d = jnp.einsum("bshk,hkd->bsd", attn_d, lp["wo"])
+            attn_c = jnp.einsum("bshk,hkd->bsd", attn_c, lp["wo"])
+            if cfg.use_bias:
+                attn_d = attn_d + lp["bo"]
+                attn_c = attn_c + lp["bo"]
+            h_d = self._mlp_block(h_d + attn_d, lp)
+            h_c = self._mlp_block(h_c + attn_c, lp)
+            return (h_d, h_c), (kc, vc)
+
+        h_d = embed_tokens(dec_tokens[:, None], params["embed"]).astype(self.dtype)
+        h_c = embed_tokens(chunk_tokens, params["embed"]).astype(self.dtype)
+        (h_d, h_c), (k_all, v_all) = jax.lax.scan(
+            body, (h_d, h_c), (params["blocks"], cache["k"], cache["v"])
+        )
+        h_d = apply_norm(h_d, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        h_c = apply_norm(h_c, params["norm_final"], cfg.norm_kind, cfg.norm_eps)
+        h_last = jnp.concatenate(
+            [h_d[:, 0], h_c[jnp.arange(r), jnp.maximum(chunk_lens - 1, 0)]]
+        )
+        logits = unembed(h_last, params["embed"]).astype(jnp.float32)
+        if base_key is None:
+            nxt = sampler(logits)
+        else:
+            from ..serving.sampler import fold_row_keys
+
+            keys = fold_row_keys(base_key, rids, token_idx)
+            nxt = sampler(logits, keys)
+        sampled = jnp.where(sample_rows, nxt, -1)
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = k_all, v_all
+        # decode lanes grow their slot by one; chunk rows set start+len
+        # (disjoint slots; pad rows scatter out of range and drop)
+        new_cache["length"] = (lengths + grow).at[chunk_slots].set(
+            ch_new_lens, mode="drop"
+        )
+        return sampled, new_cache
 
     # ------------------------------------------------------------------ #
     # Serving: one decode step                                            #
@@ -462,14 +602,7 @@ class TransformerLM:
         def body(h, xs):
             lp, kc, vc = xs
             x = apply_norm(h, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
-            q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
-            k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
-            v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
-            if cfg.use_bias:
-                q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
-            if cfg.qk_norm:
-                q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
-                k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            q, k, v = self._qkv_block(x, lp)
             if cfg.m_rope:
                 q = apply_m_rope(q, pos_in, cfg.m_rope_sections, cfg.rope_theta)
                 k = apply_m_rope(k, pos_in, cfg.m_rope_sections, cfg.rope_theta)
@@ -490,20 +623,7 @@ class TransformerLM:
             attn_out = jnp.einsum("bshk,hkd->bsd", attn_out, lp["wo"])
             if cfg.use_bias:
                 attn_out = attn_out + lp["bo"]
-            h = h + attn_out
-            x = apply_norm(h, lp["norm_mlp"], cfg.norm_kind, cfg.norm_eps)
-            if cfg.is_moe:
-                mlp_out, _ = moe_apply(
-                    x, lp["moe"],
-                    n_experts=cfg.n_experts,
-                    top_k=cfg.experts_per_token,
-                    mlp_kind=cfg.mlp_kind,
-                    capacity_factor=cfg.moe_capacity_factor,
-                    group_size=cfg.moe_group_size,
-                )
-            else:
-                mlp_out = mlp_apply(x, lp["mlp"], cfg.mlp_kind)
-            h = h + mlp_out
+            h = self._mlp_block(h + attn_out, lp)
             return h, (kc, vc)
 
         h, (k_all, v_all) = jax.lax.scan(
@@ -541,14 +661,7 @@ class TransformerLM:
         def body(h, xs):
             lp, kc, vc = xs
             x = apply_norm(h, lp["norm_attn"], cfg.norm_kind, cfg.norm_eps)
-            q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
-            k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
-            v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
-            if cfg.use_bias:
-                q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
-            if cfg.qk_norm:
-                q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
-                k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            q, k, v = self._qkv_block(x, lp)
             if cfg.m_rope:
                 q = apply_m_rope(q, pos_in, cfg.m_rope_sections, cfg.rope_theta)
                 k = apply_m_rope(k, pos_in, cfg.m_rope_sections, cfg.rope_theta)
@@ -567,20 +680,7 @@ class TransformerLM:
             attn_out = jnp.einsum("bshk,hkd->bsd", attn_out, lp["wo"])
             if cfg.use_bias:
                 attn_out = attn_out + lp["bo"]
-            h = h + attn_out
-            x = apply_norm(h, lp["norm_mlp"], cfg.norm_kind, cfg.norm_eps)
-            if cfg.is_moe:
-                mlp_out, _ = moe_apply(
-                    x, lp["moe"],
-                    n_experts=cfg.n_experts,
-                    top_k=cfg.experts_per_token,
-                    mlp_kind=cfg.mlp_kind,
-                    capacity_factor=cfg.moe_capacity_factor,
-                    group_size=cfg.moe_group_size,
-                )
-            else:
-                mlp_out = mlp_apply(x, lp["mlp"], cfg.mlp_kind)
-            h = h + mlp_out
+            h = self._mlp_block(h + attn_out, lp)
             return h, (kc, vc)
 
         h = embed_tokens(tokens[:, None], params["embed"]).astype(self.dtype)

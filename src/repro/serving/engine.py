@@ -24,6 +24,20 @@ decode rounds interleave between a long prompt's chunks instead of stalling
 behind it. KV memory is pages-in-use rather than n_slots × max_len, with
 admission control against the page pool.
 
+With ``mixed_schedule=True`` (the default for paged layouts) the
+prefill-stage / decode-stage *alternation disappears*: whenever prefill work
+is pending alongside active decoders, the engine dispatches ONE mixed batch
+per iteration (``model.mixed_step``) containing the decode tokens of every
+active slot plus a policy-priced share of prefill-chunk tokens written
+straight into the paged pool — prefill piggybacks on decode instead of
+preempting it. The iteration policy's ``prefill_share`` prices the marginal
+chunk token (decode-latency inflation per co-scheduled prefill token, from
+the cost model's separable mixed fit t(n_decode, n_prefill_tokens)) instead
+of making the paper's binary stage choice, and ``prefill_stall_time`` — the
+wall-clock decoders spend frozen behind preempting prefills — goes to ~0 by
+construction. Iterations with no prefill in view still take the fused
+multi-step decode fast path below.
+
 Decode runs as *fused multi-step stages*: instead of paying one host↔device
 round trip per decoded token (dispatch → ``block_until_ready`` → host argmax
 → re-upload), the engine commits to a decode *horizon* of K iterations and
@@ -102,6 +116,27 @@ class EngineConfig:
     # remaining decode budget so the drain tail never runs all-no-op rounds.
     max_decode_horizon: int = 8
     decode_horizon: Optional[int] = None
+    # Mixed-step scheduling (paged layout only). True collapses the
+    # prefill-stage / decode-stage alternation into continuous batching:
+    # every iteration with prefill work pending dispatches ONE mixed batch
+    # (``model.mixed_step``) holding the decode tokens of all active slots
+    # plus up to ``prefill_share`` prefill-chunk tokens written straight
+    # into the paged pool — prefill piggybacks on decode instead of
+    # preempting it, so ``prefill_stall_time`` goes to ~0 by construction.
+    # Pure-decode iterations still take the fused ``decode_steps`` fast
+    # path. False restores the alternating loop (the ablation baseline in
+    # ``benchmarks/mixed_batch.py``); dense layouts always alternate.
+    mixed_schedule: bool = True
+    # Quantization levels for the chunk-token share of a mixed round (the
+    # mixed analogue of the paper's prefill levels): the policy's priced
+    # share rounds down to a bucket, and the largest entry caps the budget
+    # it may price at all — bounding the worst-case decode-latency
+    # inflation a single round can absorb (a small cap protects burst p95,
+    # a large one drains prefill faster). Jit shapes are NOT driven by this
+    # table — a mixed dispatch is always (n_slots decode lanes) +
+    # (prefill_req_buckets rows × prefill_chunk), the same rectangles the
+    # alternating chunk rounds compile.
+    mixed_token_buckets: Tuple[int, ...] = (16, 32, 64, 128, 256)
     # PRNG seed for stochastic samplers. Token streams are reproducible as a
     # pure function of (seed, request id, token index) — independent of
     # horizon grouping, slot placement, batch composition, or KV layout.
@@ -148,6 +183,20 @@ def _fused_decode(
     )
 
 
+def _mixed_dispatch(
+    model, sampler,
+    params, dec_tokens, cache, chunk_tokens, chunk_slots, chunk_starts,
+    chunk_lens, dec_active, rids, token_idx, sample_rows, base_key,
+):
+    """Jit target for the mixed prefill+decode stage (module-level for the
+    same stable-hash reason as ``_fused_decode``)."""
+    return model.mixed_step(
+        params, dec_tokens, cache, chunk_tokens, chunk_slots, chunk_starts,
+        chunk_lens, sampler=sampler, dec_active=dec_active, rids=rids,
+        token_idx=token_idx, sample_rows=sample_rows, base_key=base_key,
+    )
+
+
 class Engine:
     def __init__(
         self,
@@ -169,6 +218,10 @@ class Engine:
             )
             self._chunk_jit = jax.jit(
                 lambda p, t, c, s, st, ln: model.prefill_chunk(p, t, c, s, st, ln),
+                donate_argnums=(2,),
+            )
+            self._mixed_jit = jax.jit(
+                functools.partial(_mixed_dispatch, model, sampler),
                 donate_argnums=(2,),
             )
         elif config.kv_layout == "dense":
@@ -205,6 +258,12 @@ class Engine:
         # dispatch implies exactly one host sync at its horizon boundary)
         self.decode_dispatches = 0
         self.decoded_tokens = 0
+        # mixed-step accounting: mixed rounds dispatched, and the wall-clock
+        # decoders spent frozen behind a preempting prefill stage (only the
+        # alternating path can accumulate it — in mixed mode the stall is
+        # structurally impossible, which is the point)
+        self.mixed_rounds = 0
+        self.prefill_stall_time = 0.0
         self._budget_shift = 0            # straggler mitigation state
         self.straggler_events = 0
         self._chunking: Dict[int, _ChunkState] = {}
@@ -394,6 +453,225 @@ class Engine:
         self._observe_prefill(chunk_tokens, dt)
         return dt, chunk_tokens, finished, busy, busy_partial
 
+    # ------------------------------------------------------------------ #
+    # Mixed prefill+decode rounds (paged layout, mixed_schedule=True)     #
+    # ------------------------------------------------------------------ #
+    def _plan_mixed_round(
+        self, pairs: List[Tuple[ClientState, Request]], share: int
+    ) -> Tuple[List[Tuple[_ChunkState, int]], List[Tuple[ClientState, Request, int]]]:
+        """Split the policy-priced chunk-token share across prefill work.
+
+        Grants are WHOLE chunks (a prompt's final partial chunk excepted):
+        a mixed dispatch pays for full ``prefill_chunk``-wide rows whatever
+        they hold, so funding a fraction of a chunk burns the same compute
+        for half the prefill progress — under sustained arrivals that can
+        push prefill supply below demand and grow the queue without bound.
+        The share therefore picks *how many* chunk rows ride along (the
+        last grant may overshoot it), not where inside a chunk to stop.
+
+        Continuations of in-flight chunked prefills are funded first (finish
+        what holds pages before opening new prompts), then new admissions —
+        the rest stay queued for a later round. Returns the per-state token
+        counts for this round and the admissions to commit.
+        """
+        plan: List[Tuple[_ChunkState, int]] = []
+        budget = share
+        for slot in sorted(self._chunking):
+            if budget <= 0:
+                break
+            st = self._chunking[slot]
+            n = min(self.cfg.prefill_chunk, st.remaining)
+            if n > 0:
+                plan.append((st, n))
+                budget -= n
+        admitted: List[Tuple[ClientState, Request, int]] = []
+        for client, req in pairs:
+            if budget <= 0:
+                break
+            n = min(self.cfg.prefill_chunk, req.n_prefill)
+            admitted.append((client, req, n))
+            budget -= n
+        return plan, admitted
+
+    def _run_mixed_stage(self, plan: List[Tuple[_ChunkState, int]]):
+        """ONE unified dispatch: a decode round over every active slot plus
+        the planned prefill-chunk rows, written straight into the paged
+        pool. Decode lanes sample their next token on device; a prompt whose
+        final chunk lands this round emits its first token in the same call.
+        Returns (duration, finished_decode_slots, decode_tokens,
+        chunk_tokens, finished_chunk_slots, busy, busy_partial).
+        """
+        cfg = self.cfg
+        j = cfg.n_slots
+        decode_slots = self.slots.active_slots
+        n_chunk = sum(n for _, n in plan)
+        c = cfg.prefill_chunk
+        # chunk rows pad to the same rectangles the alternating chunk round
+        # compiles — no extra jit variants for the mixed path
+        r_pad = _bucket(max(len(plan), 1), cfg.prefill_req_buckets)
+        chunk_tokens = np.zeros((r_pad, c), dtype=np.int32)
+        chunk_slots = np.full(r_pad, j, dtype=np.int32)    # j → pad row
+        starts = np.zeros(r_pad, dtype=np.int32)
+        lens = np.zeros(r_pad, dtype=np.int32)
+        dec_active = np.zeros(j, dtype=bool)
+        sample_rows = np.zeros(j + r_pad, dtype=bool)
+        rids = np.full(j + r_pad, -1, dtype=np.int32)
+        token_idx = np.zeros(j + r_pad, dtype=np.int32)
+        budgets: Dict[int, int] = {}
+        for slot in decode_slots:
+            req = self.slots.request_of[slot]
+            dec_active[slot] = True
+            sample_rows[slot] = True
+            rids[slot] = req.rid
+            token_idx[slot] = self.slots.emitted[slot]
+            budgets[slot] = self._decode_budget(slot)
+        final_row: Dict[int, int] = {}     # slot → sample row of final chunk
+        for i, (st, n) in enumerate(plan):
+            chunk_tokens[i, :n] = st.prompt[st.done : st.done + n]
+            chunk_slots[i] = st.slot
+            starts[i] = st.done
+            lens[i] = n
+            if st.done + n >= st.req.n_prefill:
+                sample_rows[j + i] = True
+                rids[j + i] = st.req.rid
+                final_row[st.slot] = j + i
+        pending = (
+            self._dev_pending if self._dev_pending is not None
+            else jnp.asarray(self.pending_token)
+        )
+        t0 = time.perf_counter()
+        sampled, self.slots.cache = self._mixed_jit(
+            self.params, pending, self.slots.cache,
+            jnp.asarray(chunk_tokens), jnp.asarray(chunk_slots),
+            jnp.asarray(starts), jnp.asarray(lens),
+            jnp.asarray(dec_active), jnp.asarray(rids),
+            jnp.asarray(token_idx), jnp.asarray(sample_rows), self._base_key,
+        )
+        sampled = np.asarray(sampled)      # the ONE host sync for this round
+        dt = time.perf_counter() - t0
+        self._dev_pending = None           # pending rebuilt from host below
+
+        finished_decode: List[int] = []
+        decode_tokens = 0
+        busy: Dict[int, int] = {}
+        busy_partial: Dict[int, int] = {}
+        for slot in decode_slots:
+            tok = int(sampled[slot])
+            req = self.slots.request_of[slot]
+            self.slots.emitted[slot] += 1
+            self.pending_token[slot] = tok
+            self.generated.setdefault(req.rid, []).append(tok)
+            req.decoded = self.slots.emitted[slot]
+            decode_tokens += 1
+            busy[slot] = req.rid
+            if budgets[slot] <= 1 or (
+                cfg.eos_id is not None and tok == cfg.eos_id
+            ):
+                finished_decode.append(slot)
+        finished_chunks: List[int] = []
+        for st, n in plan:
+            st.done += n
+            slot = st.slot
+            if st.done >= st.req.n_prefill:
+                self.slots.bind(slot, st.req)
+                self.slots.emitted[slot] = 1   # final chunk samples token #1
+                first = int(sampled[final_row[slot]])
+                self.pending_token[slot] = first
+                self.generated.setdefault(st.req.rid, []).append(first)
+                busy[slot] = st.req.rid
+                finished_chunks.append(slot)
+                del self._chunking[slot]
+            else:
+                busy_partial[slot] = st.req.rid
+        self.mixed_rounds += 1
+        if decode_slots:
+            self.decode_dispatches += 1
+            self.decoded_tokens += decode_tokens
+        # rounds with no active decoders route to _run_chunk_round in the
+        # serve loop, so every mixed sample carries real decode lanes
+        self.profiler.record_mixed(len(decode_slots), n_chunk, dt)
+        return (
+            dt, finished_decode, decode_tokens, n_chunk, finished_chunks,
+            busy, busy_partial,
+        )
+
+    def _finish_prefills(
+        self, slots: List[int], clients: List[ClientState], t: float
+    ) -> None:
+        """Post-stage bookkeeping for requests whose final chunk just
+        landed (shared by the mixed and alternating chunk-round branches)."""
+        for slot in slots:
+            req = self.slots.request_of[slot]
+            clients[slot].current = req
+            req.t_prefill_end = t
+            req.decoded = 1
+            # requests with n_decode == 1 finish at prefill
+            if self.cfg.eos_id is None and req.n_decode <= 1:
+                req.t_done = t
+                self.slots.release(slot)
+                clients[slot].current = None
+
+    def warm_serving_shapes(self) -> None:
+        """Pre-compile every paged serving-dispatch variant the scheduler
+        can reach — mixed-round row buckets, chunk-round rectangles, and
+        fused-decode horizons — with all-pad / all-inactive no-op calls
+        (writes dropped, lengths untouched, nothing recorded).
+
+        Which variant a stage lands in depends on live policy decisions
+        that shift with the online fit, so a measured serve can hit a shape
+        its warm pass never saw — and one first-hit compile dwarfs every
+        real stage. Benchmarks call this after their warm pass so the timed
+        serve only sees compiled code."""
+        if self.cfg.kv_layout != "paged":
+            return
+        cfg = self.cfg
+        j = cfg.n_slots
+        row_buckets = sorted({
+            _bucket(rows, cfg.prefill_req_buckets)
+            for rows in range(1, j + 1)
+        })
+        for r_pad in row_buckets:
+            if cfg.mixed_schedule:
+                # mixed round: j decode lanes + r_pad chunk rows, padded out
+                # (unreachable — and so not warmed — in alternating mode)
+                sampled, self.slots.cache = self._mixed_jit(
+                    self.params,
+                    jnp.zeros(j, jnp.int32), self.slots.cache,
+                    jnp.zeros((r_pad, cfg.prefill_chunk), jnp.int32),
+                    jnp.full(r_pad, j, jnp.int32),
+                    jnp.zeros(r_pad, jnp.int32), jnp.zeros(r_pad, jnp.int32),
+                    jnp.zeros(j, bool), jnp.full(j + r_pad, -1, jnp.int32),
+                    jnp.zeros(j + r_pad, jnp.int32),
+                    jnp.zeros(j + r_pad, bool),
+                    self._base_key,
+                )
+                sampled.block_until_ready()
+            # chunk round: r_pad prompt rows, all padded out
+            logits, self.slots.cache = self._chunk_jit(
+                self.params,
+                jnp.zeros((r_pad, cfg.prefill_chunk), jnp.int32),
+                self.slots.cache,
+                jnp.full(r_pad, j, jnp.int32),
+                jnp.zeros(r_pad, jnp.int32), jnp.zeros(r_pad, jnp.int32),
+            )
+            logits.block_until_ready()
+        k_cap = max(cfg.decode_horizon or cfg.max_decode_horizon, 1)
+        horizons = {k_cap}                 # a pinned K dispatches exactly
+        k = 1
+        while k <= k_cap:                  # plus the power-of-two buckets
+            horizons.add(k)
+            k *= 2
+        for k in sorted(horizons):
+            # fused decode at horizon k, every slot inactive
+            out = self._fused_jit(
+                k, self.params, jnp.zeros(j, jnp.int32), self.slots.cache,
+                jnp.zeros(j, bool), jnp.zeros(j, jnp.int32),
+                jnp.zeros(j, jnp.int32), jnp.zeros(j, jnp.int32),
+                self._base_key,
+            )
+            self.slots.cache = out[-1]
+            out[0].block_until_ready()
+
     def _choose_horizon(self, policy_horizon: int) -> int:
         """Final decode horizon, capped by the largest remaining per-slot
         budget (no all-no-op tail rounds). A pinned ``decode_horizon`` is
@@ -500,9 +778,12 @@ class Engine:
         self.generated = {}
         self.decode_dispatches = 0
         self.decoded_tokens = 0
+        self.mixed_rounds = 0
+        self.prefill_stall_time = 0.0
         t = 0.0
         bin_index = -1
         paged = cfg.kv_layout == "paged"
+        mixed = paged and cfg.mixed_schedule
 
         for _ in range(cfg.max_stages):
             max_cap = max(
@@ -519,6 +800,9 @@ class Engine:
                 and not request_scheduler.has_pending()
             ):
                 break
+            # arrival-aware schedulers gate their queue on the stage clock
+            if hasattr(request_scheduler, "set_now"):
+                request_scheduler.set_now(t)
             pairs = request_scheduler.propose_batch(idle, max_cap)
             if paged and pairs:
                 pairs = self._admissible(pairs)
@@ -551,20 +835,83 @@ class Engine:
                 candidate=candidate,
                 now=t,
             )
+            # actionable prefill work in flight or in view → the
+            # latency-sensitive "burst" window (queued-but-unproposable
+            # requests don't count: no prefill can preempt decode for them)
+            burst = bool(self._chunking or pairs)
+            mixed_budget: Optional[int] = None
+            if mixed:
+                avail = self._next_chunk_tokens() + sum(
+                    min(cfg.prefill_chunk, r.n_prefill) for _, r in pairs
+                )
+                mixed_budget = min(avail, cfg.mixed_token_buckets[-1])
             t0 = time.perf_counter()
             decision = iteration_policy.decide(
                 snap, self.profiler.cost_model,
                 k_max=cfg.decode_horizon or cfg.max_decode_horizon,
+                mixed_budget=mixed_budget,
             )
             do_prefill = decision.prefill
             trace.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
 
-            if do_prefill and candidate and paged:
+            if mixed and decision.chunk_tokens > 0 and active:
+                # quantize the priced share down to the bucket table (the
+                # mixed analogue of the paper's prefill levels — stable
+                # round compositions; sub-bucket shares round up to the
+                # smallest bucket so small candidates still make progress)
+                fitting = [
+                    b for b in cfg.mixed_token_buckets
+                    if b <= decision.chunk_tokens
+                ]
+                share = fitting[-1] if fitting else cfg.mixed_token_buckets[0]
+                plan, admitted = self._plan_mixed_round(pairs, share)
+                if admitted:
+                    new_pairs = [(c, r) for c, r, _ in admitted]
+                    request_scheduler.commit_batch(new_pairs)
+                    bin_index += 1
+                    self._start_chunked_batch(new_pairs, bin_index, t)
+                    plan.extend(
+                        (self._chunking[c.cid], n) for c, _, n in admitted
+                    )
+                (
+                    dt, fin_decode, decode_tok, chunk_tok, fin_chunks,
+                    busy, busy_partial,
+                ) = self._run_mixed_stage(plan)
+                trace.stages.append(
+                    StageRecord(
+                        kind=StageKind.MIXED,
+                        t_start=t, t_end=t + dt,
+                        bin_index=max(bin_index, 0),
+                        busy=busy, busy_partial=busy_partial,
+                        tokens=decode_tok + chunk_tok,
+                        chunk_tokens=chunk_tok, rounds=1, burst=True,
+                        prefilled={
+                            s: self.slots.request_of[s].rid for s in fin_chunks
+                        },
+                    )
+                )
+                t += dt
+                self._finish_prefills(fin_chunks, clients, t)
+                for slot in fin_decode:
+                    req = self.slots.release(slot)
+                    req.t_done = t
+                    clients[slot].current = None
+            elif (
+                candidate and paged
+                and (do_prefill or (mixed and decision.chunk_tokens > 0))
+            ):
+                # no decoders are running, so a "mixed" round would only
+                # carry dead decode lanes — run the plain chunk round (same
+                # per-row math and jit shapes, honest prefill timing for
+                # the cost model and straggler predictor)
                 if pairs:
                     request_scheduler.commit_batch(pairs)
                     bin_index += 1
                     self._start_chunked_batch(pairs, bin_index, t)
                 dt, tok, finished, busy, busy_partial = self._run_chunk_round()
+                if active:
+                    # decoders froze for the whole preempting chunk round
+                    self.prefill_stall_time += dt
                 trace.stages.append(
                     StageRecord(
                         kind=StageKind.PREFILL,
@@ -577,20 +924,13 @@ class Engine:
                     )
                 )
                 t += dt
-                for slot in finished:
-                    req = self.slots.request_of[slot]
-                    clients[slot].current = req
-                    req.t_prefill_end = t
-                    req.decoded = 1
-                    # requests with n_decode == 1 finish at prefill
-                    if self.cfg.eos_id is None and req.n_decode <= 1:
-                        req.t_done = t
-                        self.slots.release(slot)
-                        clients[slot].current = None
+                self._finish_prefills(finished, clients, t)
             elif do_prefill and candidate:
                 request_scheduler.commit_batch(pairs)
                 bin_index += 1
                 dt, tok = self._run_prefill_stage(pairs)
+                if active:
+                    self.prefill_stall_time += dt
                 busy = {}
                 for client, req in pairs:
                     req.client = client.cid
@@ -619,6 +959,10 @@ class Engine:
             elif active:
                 k = self._choose_horizon(decision.horizon)
                 dt, finished, tokens = self._run_decode_stage(k)
+                # the stage right after a preempting prefill carries the
+                # stall in its first-token gap — it belongs to the burst
+                if trace.stages and trace.stages[-1].kind is StageKind.PREFILL:
+                    burst = True
                 busy = {
                     c.cid: c.current.rid for c in active if c.current is not None
                 }
@@ -627,7 +971,7 @@ class Engine:
                         kind=StageKind.DECODE,
                         t_start=t, t_end=t + dt,
                         bin_index=max(bin_index, 0), busy=busy,
-                        tokens=tokens, rounds=k,
+                        tokens=tokens, rounds=k, burst=burst,
                     )
                 )
                 t += dt
@@ -638,9 +982,19 @@ class Engine:
             else:
                 if candidate:
                     continue  # policy refused but nothing to decode: retry
+                nxt = getattr(request_scheduler, "next_arrival", None)
+                arrival = nxt() if callable(nxt) else None
+                if arrival is not None and arrival > t:
+                    t = arrival       # idle gap: fast-forward to the arrival
+                    continue
                 raise RuntimeError("engine deadlock: pending but no candidate")
         else:
             raise RuntimeError("max_stages exceeded")
+        trace.meta.update(
+            mixed_rounds=self.mixed_rounds,
+            prefill_stall_time_s=round(self.prefill_stall_time, 6),
+            decode_dispatches=self.decode_dispatches,
+        )
         trace.validate()
         return trace
 

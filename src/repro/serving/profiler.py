@@ -10,6 +10,7 @@ identifiable, once stages of differing horizons have been observed.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Tuple
 
 from ..core.cost_model import CostModel
@@ -26,6 +27,10 @@ class OnlineProfiler:
         self.prefill_samples: List[Tuple[int, float]] = []
         # (n_active, rounds, seconds) per decode stage
         self.decode_samples: List[Tuple[int, int, float]] = []
+        # (n_decode_rows, n_prefill_tokens, seconds) per mixed stage — the
+        # separable mixed-batch model t(n_d, n_p) the share-pricing rule
+        # consumes (see CostModel.mixed_round_time)
+        self.mixed_samples: List[Tuple[int, int, float]] = []
         self.refit_every = refit_every
         self.max_samples = max_samples
         self._since_fit = 0
@@ -42,15 +47,28 @@ class OnlineProfiler:
         self.decode_samples.append((n_active, rounds, seconds))
         self._tick()
 
+    def record_mixed(
+        self, n_decode: int, n_prefill_tokens: int, seconds: float
+    ) -> None:
+        """One mixed-step stage: ``n_decode`` decode rows co-dispatched with
+        ``n_prefill_tokens`` prefill-chunk tokens in ``seconds``. Variation
+        in both counts identifies the per-decode-row and per-prefill-token
+        slopes the ``prefill_share`` pricing adapts to."""
+        self.mixed_samples.append((n_decode, n_prefill_tokens, seconds))
+        self._tick()
+
     def _tick(self) -> None:
         self._since_fit += 1
         if len(self.prefill_samples) > self.max_samples:
             self.prefill_samples = self.prefill_samples[-self.max_samples :]
         if len(self.decode_samples) > self.max_samples:
             self.decode_samples = self.decode_samples[-self.max_samples :]
+        if len(self.mixed_samples) > self.max_samples:
+            self.mixed_samples = self.mixed_samples[-self.max_samples :]
+        if self._since_fit < self.refit_every:
+            return
         if (
-            self._since_fit >= self.refit_every
-            and len(set(s[0] for s in self.prefill_samples)) >= 2
+            len(set(s[0] for s in self.prefill_samples)) >= 2
             and len(set(s[0] for s in self.decode_samples)) >= 2
         ):
             try:
@@ -59,8 +77,24 @@ class OnlineProfiler:
                     self.decode_samples,
                     level_caps=self.cost_model.level_caps,
                     decode_dispatch=self.cost_model.decode_dispatch,
+                    mixed_samples=self.mixed_samples,
                 )
                 self.fits += 1
             except Exception:  # noqa: BLE001 — keep serving on a bad fit
                 pass
+            self._since_fit = 0
+            return
+        # The full refit needs variation in the prefill AND decode stage
+        # samples, which a steady mixed-schedule serve may never produce
+        # (nearly every stage feeds record_mixed) — refit just the mixed
+        # constants so the share pricing still adapts online.
+        params = CostModel.fit_mixed_params(self.mixed_samples)
+        if params is not None:
+            self.cost_model = dataclasses.replace(
+                self.cost_model,
+                mixed_overhead=params[0],
+                mixed_decode_per_row=params[1],
+                mixed_prefill_per_token=params[2],
+            )
+            self.fits += 1
             self._since_fit = 0

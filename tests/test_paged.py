@@ -197,10 +197,13 @@ def test_engine_paged_matches_dense_tokens(model_and_params):
 
 def test_engine_paged_lagrangian_chunk_pricing(model_and_params):
     """The Lagrangian policy must serve a valid trace when the candidate is
-    priced per chunk (chunk_tokens set) and interleave decode with chunking."""
+    priced per chunk (chunk_tokens set) and interleave decode with chunking
+    (the alternating-stage path; mixed-step pricing is covered in
+    tests/test_mixed_batch.py)."""
     model, params = model_and_params
     eng = _engine(
-        model, params, "paged", page_size=16, prefill_chunk=24, num_pages=16
+        model, params, "paged", page_size=16, prefill_chunk=24, num_pages=16,
+        mixed_schedule=False,
     )
     tr = _serve(eng, 6, BalancedLagrangianPolicy())
     assert tr.utilization > 0.2

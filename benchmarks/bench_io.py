@@ -87,6 +87,13 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
         "throughput_tok_s": out_tokens / wall_s,
         "wall_s": wall_s,
         "output_tokens": out_tokens,
+        # utilization over the full makespan (arrival gaps included — the
+        # paper's closed-loop metric) next to the gap-excluded view; an
+        # open-loop run is judged on the busy window, a closed-loop run
+        # reports the two identical
+        "utilization": trace.utilization,
+        "busy_window_utilization": trace.busy_window_utilization,
+        "idle_gap_s": trace.idle_gap_time,
         "decode_dispatches": eng.decode_dispatches,
         "dispatches_per_token": (
             eng.decode_dispatches / max(eng.decoded_tokens, 1)

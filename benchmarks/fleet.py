@@ -1,0 +1,289 @@
+"""Fleet serving: offline bin-packed LPT+local-search assignment vs FCFS
+round-robin, on REAL multi-replica engines.
+
+This is the paper's offline-vs-baseline utilization study (Fig. 6) lifted
+from the event-driven simulator to actual jitted execution: N ``Engine``
+replicas (shared weights, independent KV pools) serve the same
+skewed-length workload twice —
+
+  * ``round_robin`` — ``round_robin_assign`` partitions the backlog,
+    arrivals route round-robin, no work stealing (the unbalanced baseline);
+  * ``lpt`` — ``solve_offline`` (LPT + local search) partitions, arrivals
+    route least-estimated-load through the shared cost model, and drained
+    replicas steal queued work from stragglers (the full hybrid).
+
+Both closed-loop (everything available at t=0) and Poisson-arrival
+workloads run. The skew is adversarial for round-robin by construction:
+decode-heavy requests sit at every other queue position, so round-robin
+piles all of them onto one replica while LPT spreads them — exactly the
+failure mode the paper's offline model exists to prevent.
+
+Hard-fail signals (stable on CPU): exact per-request token parity between
+the two assignments (replica placement must never change results), and
+LPT strictly beating round-robin on closed-loop fleet makespan AND fleet
+utilization. Wall-clock magnitudes and the lower-bound ratio are reported,
+not asserted (they move with machine load); the fleet utilization is
+validated structurally (0 < util ≤ 1) and against
+``theoretical_lower_bound`` at n_clients = replicas × slots via the
+online-fitted cost model.
+
+Run:  PYTHONPATH=src python -m benchmarks.fleet [--smoke] [--out DIR]
+Prints ``name,value,unit`` CSV and writes BENCH_fleet.json.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+FULL = dict(
+    model=dict(n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+               vocab_size=512),
+    n_replicas=2, n_slots=4, max_len=128, seq_buckets=(32,),
+    level_caps=(64, 128, 256), page_size=16, prefill_chunk=32,
+    n_long=4, long_prefill=24, long_decode=96,
+    n_short=12, short_prefill=16, short_decode=8,
+    arrival_rounds=1.5,
+)
+SMOKE = dict(
+    model=dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+               vocab_size=256),
+    n_replicas=2, n_slots=2, max_len=64, seq_buckets=(32,),
+    level_caps=(32, 64, 128), page_size=16, prefill_chunk=16,
+    n_long=3, long_prefill=12, long_decode=32,
+    n_short=5, short_prefill=8, short_decode=5,
+    arrival_rounds=1.5,
+)
+
+
+def _skewed_workload(cfg, seed: int, arrivals=None):
+    """Skewed lengths with long requests at round-robin-adversarial
+    positions (every other slot in rid order): round-robin assignment over
+    2 replicas sends every long request to replica 0."""
+    from repro.core import Request
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    n_total = cfg["n_long"] + cfg["n_short"]
+    longs_placed = 0
+    for rid in range(n_total):
+        if rid % 2 == 0 and longs_placed < cfg["n_long"]:
+            p = cfg["long_prefill"] + int(rng.integers(0, 4))
+            d = cfg["long_decode"] + int(rng.integers(0, 4))
+            longs_placed += 1
+        else:
+            p = cfg["short_prefill"] + int(rng.integers(0, 4))
+            d = cfg["short_decode"] + int(rng.integers(0, 3))
+        reqs.append(Request(rid=rid, n_prefill=p, n_decode=d))
+    if arrivals is not None:
+        for r, a in zip(reqs, arrivals):
+            r.arrival = float(a)
+    return reqs
+
+
+def _build_fleet(cfg, model, params, fleet_kind: str):
+    from repro.core import CostModel
+    from repro.serving.engine import EngineConfig
+    from repro.serving.fleet import Fleet, FleetConfig
+
+    if fleet_kind == "lpt":
+        fc = FleetConfig(
+            n_replicas=cfg["n_replicas"], assign="lpt",
+            dispatch="least_load", work_stealing=True,
+        )
+    else:
+        fc = FleetConfig(
+            n_replicas=cfg["n_replicas"], assign="round_robin",
+            dispatch="round_robin", work_stealing=False,
+        )
+    ecfg = EngineConfig(
+        n_slots=cfg["n_slots"], max_len=cfg["max_len"],
+        prefill_seq_buckets=cfg["seq_buckets"],
+        kv_layout="paged", page_size=cfg["page_size"],
+        prefill_chunk=cfg["prefill_chunk"],
+    )
+    return Fleet(
+        model, params, ecfg, fc,
+        cost_model=CostModel(level_caps=cfg["level_caps"]),
+    )
+
+
+def _fleet_metrics(report, wall_s: float):
+    s = report.summary()
+    return {
+        "makespan_s": s["makespan_s"],
+        "fleet_utilization": s["fleet_utilization"],
+        "busy_window_utilization": s["busy_window_utilization"],
+        "generation_speed_tok_s": s["generation_speed_tok_s"],
+        "steal_events": s["steal_events"],
+        "offline_solver": s["offline_solver"],
+        "offline_gap": s["offline_gap"],
+        "replica_makespans_s": s["replica_makespans_s"],
+        "replica_requests": s["replica_requests"],
+        "lb_ratio_initial_cm": s["lb_ratio"],
+        "wall_s": wall_s,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, not minutes)")
+    ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    args = ap.parse_args()
+    cfg = SMOKE if args.smoke else FULL
+
+    import jax
+
+    from repro.configs.base import ArchConfig
+    from repro.core import LagrangianPolicy
+    from repro.core.gantt import fleet_ascii_gantt
+    from repro.core.offline import theoretical_lower_bound
+    from repro.models.layers import init_params
+    from repro.models.transformer import TransformerLM
+
+    from .bench_io import emit_json
+
+    arch = ArchConfig(name="fleet-bench", family="dense", **cfg["model"])
+    model = TransformerLM(arch)
+    params = init_params(jax.random.key(0), model.param_defs())
+
+    fleets = {k: _build_fleet(cfg, model, params, k) for k in ("round_robin", "lpt")}
+    # warm pass: same-shape workload compiles every jit variant each replica
+    # can reach, so no compile lands inside a measured serve
+    for fleet in fleets.values():
+        fleet.serve(_skewed_workload(cfg, seed=21), LagrangianPolicy)
+        fleet.warm_serving_shapes()
+
+    # ---- closed-loop: the paper's offline utilization study -------------- #
+    closed = {}
+    for kind, fleet in fleets.items():
+        reqs = _skewed_workload(cfg, seed=11)
+        t0 = time.perf_counter()
+        report = fleet.serve(reqs, LagrangianPolicy)
+        wall = time.perf_counter() - t0
+        closed[kind] = (fleet.generated, report, _fleet_metrics(report, wall))
+    print(fleet_ascii_gantt(closed["round_robin"][1], width=72))
+    print(fleet_ascii_gantt(closed["lpt"][1], width=72))
+
+    # lower-bound validation against a cost model measured on THIS machine:
+    # stage-duration medians from the measured traces (robust to the
+    # outliers a least-squares fit of sub-millisecond CPU stages absorbs).
+    # decode_overhead = median per-round time, decode_per_token = 0 makes
+    # every bound term a pure round count × measured round time.
+    from repro.core import CostModel
+
+    lpt_stages = [s for t in closed["lpt"][1].traces for s in t.stages]
+    round_samples = [
+        s.duration / max(s.rounds, 1)
+        for s in lpt_stages if s.kind.value in ("decode", "mixed")
+    ]
+    prefill_samples = [
+        s.duration / s.tokens
+        for s in lpt_stages if s.kind.value == "prefill" and s.tokens > 0
+    ] or [0.0]
+    cm_lb = CostModel(
+        prefill_per_token=float(np.median(prefill_samples)),
+        prefill_overhead=0.0,
+        decode_per_token=0.0,
+        decode_overhead=float(np.median(round_samples)),
+        level_caps=cfg["level_caps"],
+    )
+    reqs_lb = _skewed_workload(cfg, seed=11)
+    lb = theoretical_lower_bound(
+        reqs_lb, cfg["n_replicas"] * cfg["n_slots"], cm_lb
+    )
+    lb_ratio = (
+        closed["lpt"][2]["makespan_s"] / lb.total if lb.total > 0 else float("inf")
+    )
+
+    # ---- Poisson arrivals: online replica dispatch ----------------------- #
+    # arrival spacing scales with the same measured round time the lower
+    # bound uses, so traffic intensity is machine-independent
+    round_s = float(np.median(round_samples))
+    rng = np.random.default_rng(123)
+    n_total = cfg["n_long"] + cfg["n_short"]
+    gaps = rng.exponential(cfg["arrival_rounds"] * round_s, size=n_total)
+    arrivals = np.cumsum(gaps)
+    poisson = {}
+    for kind, fleet in fleets.items():
+        reqs = _skewed_workload(cfg, seed=11, arrivals=arrivals)
+        t0 = time.perf_counter()
+        report = fleet.serve(reqs, LagrangianPolicy)
+        wall = time.perf_counter() - t0
+        poisson[kind] = (fleet.generated, report, _fleet_metrics(report, wall))
+
+    # ---- parity: replica placement must never change tokens -------------- #
+    reference = closed["lpt"][0]
+    parity = True
+    for group in (closed, poisson):
+        for kind, (gen, _, _) in group.items():
+            parity &= gen.keys() == reference.keys() and all(
+                gen[r] == reference[r] for r in reference
+            )
+
+    print("name,value,unit")
+    for loop, group in (("closed", closed), ("poisson", poisson)):
+        for kind, (_, _, m) in group.items():
+            print(f"{loop}_{kind}_makespan,{m['makespan_s']:.4f},s")
+            print(f"{loop}_{kind}_fleet_utilization,{m['fleet_utilization']:.4f},frac")
+            print(
+                f"{loop}_{kind}_busy_window_utilization,"
+                f"{m['busy_window_utilization']:.4f},frac"
+            )
+            print(f"{loop}_{kind}_speed,{m['generation_speed_tok_s']:.1f},tok/s")
+            print(f"{loop}_{kind}_steals,{m['steal_events']},events")
+    print(f"token_parity,{int(parity)},bool")
+    print(f"lb_ratio_measured,{lb_ratio:.3f},x")
+
+    payload = {
+        "closed_loop": {k: v[2] for k, v in closed.items()},
+        "poisson": {k: v[2] for k, v in poisson.items()},
+        "token_parity": bool(parity),
+        "lower_bound_measured_s": lb.total,
+        "lb_ratio_measured": lb_ratio,
+        "arrival_round_time_s": round_s,
+    }
+    path = emit_json("fleet", payload, smoke=args.smoke, out_dir=args.out)
+    print(f"# wrote {path}")
+
+    # ---- hard-fail gates (stable signals only) --------------------------- #
+    if not parity:
+        raise SystemExit(
+            "token parity violated: replica assignment changed results"
+        )
+    rr, lpt = closed["round_robin"][2], closed["lpt"][2]
+    if not lpt["makespan_s"] < rr["makespan_s"]:
+        raise SystemExit(
+            f"ordering violated: LPT makespan {lpt['makespan_s']:.3f}s not "
+            f"strictly below round-robin {rr['makespan_s']:.3f}s"
+        )
+    if not lpt["fleet_utilization"] > rr["fleet_utilization"]:
+        raise SystemExit(
+            f"ordering violated: LPT fleet utilization "
+            f"{lpt['fleet_utilization']:.4f} not strictly above round-robin "
+            f"{rr['fleet_utilization']:.4f}"
+        )
+    for loop, group in (("closed", closed), ("poisson", poisson)):
+        for kind, (_, _, m) in group.items():
+            if not 0.0 < m["fleet_utilization"] <= 1.0 + 1e-9:
+                raise SystemExit(
+                    f"{loop}/{kind} fleet utilization out of range: "
+                    f"{m['fleet_utilization']}"
+                )
+    if lb_ratio < 0.25:
+        # the measured makespan landing FAR below a bound built from the
+        # same traces' own stage-time medians means the accounting broke —
+        # that is structural, not wall-clock noise. (Ratios modestly under
+        # 1.0 are legitimate: fused-horizon decode amortizes dispatch cost
+        # below the per-round median the bound charges, especially at the
+        # smoke scale.)
+        raise SystemExit(
+            f"fleet makespan implausibly beats the measured lower bound "
+            f"(ratio {lb_ratio:.3f})"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Fleet serving demo: N real engine replicas under the paper's hybrid
+offline-online scheduler at replica granularity.
+
+Builds a 2-replica fleet over ONE set of model weights (each replica owns
+an independent paged KV pool), serves a skewed workload three ways —
+
+  * ``round_robin``       — round_robin_assign partition + round-robin
+                            dispatch, no stealing (the unbalanced baseline);
+  * ``lpt``               — solve_offline (LPT + local search) partition +
+                            least-estimated-load dispatch + work stealing
+                            (the full hybrid);
+  * ``lpt/no-steal``      — ablation: balanced partition, stealing off.
+
+— and prints the fleet report (makespan, fleet utilization vs the flat-pool
+``theoretical_lower_bound``, steal events) plus per-replica Gantt rows on a
+shared time axis, where round-robin's straggler replica shows up as a tail
+of idle columns.
+
+Dispatch-policy flags live on ``FleetConfig``: ``assign`` ("lpt" |
+"round_robin"), ``dispatch`` ("least_load" | "round_robin"),
+``work_stealing`` (bool), ``n_replicas``.
+
+    PYTHONPATH=src python examples/serve_fleet.py
+"""
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core import CostModel, LagrangianPolicy, Request
+from repro.core.gantt import fleet_ascii_gantt
+from repro.models.layers import init_params
+from repro.models.transformer import TransformerLM
+from repro.serving.engine import EngineConfig
+from repro.serving.fleet import Fleet, FleetConfig
+
+
+def skewed_workload():
+    """Decode-heavy requests at every other position — adversarial for a
+    round-robin split over 2 replicas (they all land on replica 0)."""
+    reqs = []
+    for rid in range(12):
+        if rid % 2 == 0 and rid < 8:
+            reqs.append(Request(rid=rid, n_prefill=24, n_decode=64))
+        else:
+            reqs.append(Request(rid=rid, n_prefill=16, n_decode=8))
+    return reqs
+
+
+def main():
+    cfg = ArchConfig(
+        name="demo-120m", family="dense", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, d_ff=512, vocab_size=1024,
+    )
+    model = TransformerLM(cfg)
+    params = init_params(jax.random.key(0), model.param_defs())
+    cm = CostModel(level_caps=(32, 64, 128, 256))
+    ecfg = EngineConfig(
+        n_slots=4, max_len=128, prefill_seq_buckets=(32,),
+        kv_layout="paged", page_size=16, prefill_chunk=32,
+    )
+
+    modes = {
+        "round_robin": FleetConfig(
+            n_replicas=2, assign="round_robin", dispatch="round_robin",
+            work_stealing=False,
+        ),
+        "lpt": FleetConfig(n_replicas=2, assign="lpt", dispatch="least_load"),
+        "lpt/no-steal": FleetConfig(
+            n_replicas=2, assign="lpt", dispatch="least_load",
+            work_stealing=False,
+        ),
+    }
+    for name, fc in modes.items():
+        fleet = Fleet(model, params, ecfg, fc, cost_model=cm)
+        fleet.serve(skewed_workload(), LagrangianPolicy)    # warm (compiles)
+        report = fleet.serve(skewed_workload(), LagrangianPolicy)
+        s = report.summary()
+        print(
+            f"{name:14s} makespan={s['makespan_s']:7.3f}s  "
+            f"fleet util={s['fleet_utilization'] * 100:5.1f}%  "
+            f"speed={s['generation_speed_tok_s']:7.0f} tok/s  "
+            f"lb_ratio={s['lb_ratio']:.2f}  steals={s['steal_events']}  "
+            f"replica makespans={s['replica_makespans_s']}"
+        )
+        print(fleet_ascii_gantt(report, width=84))
+
+
+if __name__ == "__main__":
+    main()

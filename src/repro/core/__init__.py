@@ -7,6 +7,7 @@ from .types import (
     StageKind,
     StageRecord,
     ScheduleTrace,
+    FleetReport,
     Phase,
     make_requests,
 )
@@ -19,6 +20,8 @@ from .offline import (
     local_search,
     milp_assign,
     round_robin_assign,
+    evaluate_assignment,
+    split_requests,
     theoretical_lower_bound,
 )
 from .online import (

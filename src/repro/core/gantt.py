@@ -43,16 +43,19 @@ def ascii_gantt(
     width: int = 100,
     max_clients: int = 40,
     every_nth_client: Optional[int] = None,
+    span: Optional[float] = None,
 ) -> str:
     """Downsampled ASCII Gantt.
 
     '#' = decoding, 'P' = in prefill, 'M' = mixed (decode + piggybacked
     prefill chunks), '.' = idle. One row per (sampled) client; columns are
-    equal time buckets. A bucket shows the dominant state.
+    equal time buckets. A bucket shows the dominant state. ``span`` fixes
+    the time axis (fleet rendering aligns every replica to the fleet
+    makespan); default is the trace's own makespan.
     """
     if not trace.stages:
         return "(empty trace)"
-    span = trace.makespan
+    span = span or trace.makespan
     n = trace.num_clients
     step = every_nth_client or max(1, n // max_clients)
     rows = list(range(0, n, step))
@@ -75,8 +78,9 @@ def ascii_gantt(
     chars = {0: ".", 1: "P", 2: "#", 3: "M"}
     out = io.StringIO()
     out.write(
-        f"Gantt [{trace.policy_name}] makespan={span:.2f}s "
+        f"Gantt [{trace.policy_name}] makespan={trace.makespan:.2f}s "
         f"util={trace.utilization * 100:.2f}% "
+        f"busy-window util={trace.busy_window_utilization * 100:.2f}% "
         f"speed={trace.generation_speed:.1f} tok/s\n"
     )
     for cid in rows:
@@ -88,6 +92,38 @@ def ascii_gantt(
         f"       {'':<1}('#'=decode  'P'=prefill  'M'=mixed  '.'=idle; "
         f"{step} clients/row)\n"
     )
+    return out.getvalue()
+
+
+def fleet_ascii_gantt(
+    report,
+    width: int = 100,
+    max_clients_per_replica: int = 8,
+) -> str:
+    """Per-replica Gantt rows on ONE shared time axis (the fleet makespan),
+    so replica load imbalance is visible as trailing idle columns. Takes a
+    ``FleetReport``."""
+    span = report.makespan
+    if span <= 0:
+        return "(empty fleet trace)"
+    out = io.StringIO()
+    out.write(
+        f"Fleet Gantt [{report.policy_name}] replicas={report.n_replicas} "
+        f"makespan={span:.2f}s util={report.utilization * 100:.2f}% "
+        f"lb_ratio={report.lb_ratio:.2f} steals={report.steal_events}\n"
+    )
+    for i, trace in enumerate(report.traces):
+        out.write(
+            f"-- replica {i}: makespan={trace.makespan:.2f}s "
+            f"util={trace.utilization * 100:.2f}% "
+            f"requests={len(trace.requests)}\n"
+        )
+        out.write(
+            ascii_gantt(
+                trace, width=width, max_clients=max_clients_per_replica,
+                span=span,
+            )
+        )
     return out.getvalue()
 
 

@@ -45,9 +45,16 @@ class OfflineResult:
 
     @property
     def gap(self) -> float:
-        """Relative gap between achieved makespan and the LP lower bound."""
+        """Relative gap between achieved makespan and the LP lower bound.
+
+        A degenerate instance can carry a zero lower bound (e.g. an empty
+        request list per client); reporting 0.0 there would read as a
+        *perfect* solution even when the achieved makespan is positive, so
+        a positive makespan over a zero bound is an infinite gap, and only
+        zero-over-zero is a true 0.0.
+        """
         if self.lp_lower_bound <= 0:
-            return 0.0
+            return 0.0 if self.makespan_est <= 0 else float("inf")
         return (self.makespan_est - self.lp_lower_bound) / self.lp_lower_bound
 
 
@@ -278,6 +285,64 @@ def solve_offline(
         solver=solver,
         solve_seconds=time.perf_counter() - t0,
     )
+
+
+def evaluate_assignment(
+    requests: Sequence[Request],
+    assignment: List[List[int]],
+    n_clients: int,
+    cost_model: CostModel,
+    solver: str = "external",
+) -> OfflineResult:
+    """Wrap an externally-produced assignment (client → rid lists, e.g.
+    ``round_robin_assign``) in an ``OfflineResult`` with the same load /
+    makespan / LP-bound diagnostics ``solve_offline`` reports — so baseline
+    ablations and the solver path are compared on identical terms."""
+    if len(assignment) != n_clients:
+        raise ValueError("assignment length != n_clients")
+    t0 = time.perf_counter()
+    weights = _weights(requests, cost_model, n_clients)
+    pos_of = {r.rid: i for i, r in enumerate(requests)}
+    loads = [
+        sum(float(weights[pos_of[rid]]) for rid in client)
+        for client in assignment
+    ]
+    lp_lb = max(
+        float(np.sum(weights)) / n_clients,
+        float(np.max(weights)) if len(weights) else 0.0,
+    )
+    return OfflineResult(
+        assignment=[list(c) for c in assignment],
+        loads=loads,
+        makespan_est=float(max(loads)) if loads else 0.0,
+        lp_lower_bound=lp_lb,
+        solver=solver,
+        solve_seconds=time.perf_counter() - t0,
+    )
+
+
+def split_requests(
+    requests: Sequence[Request], assignment: List[List[int]]
+) -> List[List[Request]]:
+    """Materialize an assignment (client → rid list) as per-client Request
+    lists, preserving the assignment's per-client order. Used by the fleet
+    to turn a replica-level ``solve_offline``/``round_robin_assign`` result
+    into per-replica backlogs."""
+    by_rid: Dict[int, Request] = {r.rid: r for r in requests}
+    out: List[List[Request]] = []
+    seen: set = set()
+    for rids in assignment:
+        part = []
+        for rid in rids:
+            if rid in seen:
+                raise ValueError(f"request {rid} assigned twice")
+            seen.add(rid)
+            part.append(by_rid[rid])
+        out.append(part)
+    if len(seen) != len(requests):
+        missing = sorted(set(by_rid) - seen)
+        raise ValueError(f"requests not assigned: {missing[:5]}...")
+    return out
 
 
 def round_robin_assign(requests: Sequence[Request], n_clients: int) -> List[List[int]]:

@@ -44,6 +44,25 @@ class RequestScheduler:
         """Remove ``request`` from whatever backlog ``peek`` found it in."""
         raise NotImplementedError
 
+    # -- fleet hooks: external admission + cross-replica work stealing -- #
+    def push(self, request: Request) -> None:
+        """Admit a request from outside (fleet dispatch / stolen work).
+        Optional — only queue-backed schedulers support it."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not accept external admissions"
+        )
+
+    def steal_longest(self) -> Optional[Request]:
+        """Give up the longest not-yet-started request (for a starving
+        replica), or None. Optional — queue-backed schedulers only."""
+        return None
+
+    @property
+    def queued(self) -> Tuple[Request, ...]:
+        """Snapshot of not-yet-started requests (fleet load estimation).
+        Schedulers that cannot enumerate their backlog return ()."""
+        return ()
+
     # ------------------------------------------------------------------ #
     def propose_batch(
         self,
@@ -239,6 +258,20 @@ class GlobalQueueScheduler(RequestScheduler):
     def commit(self, client: ClientState, request: Request) -> None:
         self._queue.remove(request)
 
+    def push(self, request: Request) -> None:
+        self._queue.append(request)
+
+    def steal_longest(self) -> Optional[Request]:
+        if not self._queue:
+            return None
+        victim = max(self._queue, key=lambda r: r.est_total_tokens)
+        self._queue.remove(victim)
+        return victim
+
+    @property
+    def queued(self) -> Tuple[Request, ...]:
+        return tuple(self._queue)
+
 
 class ArrivalQueueScheduler(GlobalQueueScheduler):
     """FCFS queue where a request only becomes schedulable once its
@@ -286,6 +319,26 @@ class ArrivalQueueScheduler(GlobalQueueScheduler):
             if r.arrival > self.now:
                 return r.arrival
         return None
+
+    def push(self, request: Request) -> None:
+        """External admission preserving the arrival-sorted invariant peek /
+        next_arrival rely on (a plain append would break early-exit scans)."""
+        import bisect
+
+        keys = [(r.arrival, r.rid) for r in self._queue]
+        self._queue.insert(
+            bisect.bisect_right(keys, (request.arrival, request.rid)), request
+        )
+
+    def steal_longest(self) -> Optional[Request]:
+        """Only *arrived* requests are stealable — a future arrival is not
+        work a starving replica could start now."""
+        arrived = [r for r in self._queue if r.arrival <= self.now]
+        if not arrived:
+            return None
+        victim = max(arrived, key=lambda r: r.est_total_tokens)
+        self._queue.remove(victim)
+        return victim
 
 
 def build_clients(

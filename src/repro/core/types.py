@@ -195,11 +195,55 @@ class ScheduleTrace:
         )
 
     @property
+    def idle_gap_time(self) -> float:
+        """Wall-clock inside the makespan during which NO stage ran.
+
+        Closed-loop serves tile the timeline and report 0 here. Open-loop
+        serves fast-forward the stage clock across empty arrival gaps (the
+        engine idles until ``next_arrival``), which leaves real holes between
+        consecutive stages — forced idle the *workload* caused, not the
+        scheduler. Splitting it out lets ``utilization`` (the paper's
+        closed-loop Gantt metric, gaps included) and
+        ``busy_window_utilization`` (gaps excluded — how well the scheduler
+        used the time it actually had work) be reported side by side instead
+        of silently conflated.
+        """
+        if not self.stages:
+            return 0.0
+        gap = max(self.stages[0].t_start, 0.0)
+        prev_end = self.stages[0].t_end
+        for s in self.stages[1:]:
+            gap += max(s.t_start - prev_end, 0.0)
+            prev_end = s.t_end
+        return gap
+
+    @property
+    def busy_window(self) -> float:
+        """Makespan minus forced-idle arrival gaps: the wall-clock during
+        which at least one stage was running."""
+        return self.makespan - self.idle_gap_time
+
+    @property
     def utilization(self) -> float:
-        """Busy client-time over total client-time — the paper's Gantt metric."""
+        """Busy client-time over total client-time — the paper's Gantt metric.
+
+        Includes forced-idle arrival gaps in the denominator (an open-loop
+        serve that waits for traffic reports lower utilization); see
+        ``busy_window_utilization`` for the gap-excluded view.
+        """
         if not self.stages:
             return 0.0
         return self.busy_client_time / (self.makespan * self.num_clients)
+
+    @property
+    def busy_window_utilization(self) -> float:
+        """Busy client-time over the busy window (arrival gaps excluded) —
+        the scheduler-quality metric an open-loop run should be judged on.
+        Equal to ``utilization`` for closed-loop serves (no gaps)."""
+        window = self.busy_window
+        if window <= 0:
+            return 0.0
+        return self.busy_client_time / (window * self.num_clients)
 
     @property
     def total_generated_tokens(self) -> int:
@@ -207,10 +251,21 @@ class ScheduleTrace:
 
     @property
     def generation_speed(self) -> float:
-        """Output tokens per second (the paper's Fig. 11 metric)."""
+        """Output tokens per second (the paper's Fig. 11 metric). Divides by
+        the full makespan, arrival gaps included — the open-loop analogue is
+        ``busy_window_generation_speed``."""
         if self.makespan <= 0:
             return 0.0
         return self.total_generated_tokens / self.makespan
+
+    @property
+    def busy_window_generation_speed(self) -> float:
+        """Output tokens per second of *busy* wall-clock (arrival gaps
+        excluded) — what the engine sustains while it actually has work."""
+        window = self.busy_window
+        if window <= 0:
+            return 0.0
+        return self.total_generated_tokens / window
 
     @property
     def num_bins(self) -> int:
@@ -224,7 +279,12 @@ class ScheduleTrace:
             "num_bins": self.num_bins,
             "makespan_s": round(self.makespan, 4),
             "utilization": round(self.utilization, 6),
+            "busy_window_utilization": round(self.busy_window_utilization, 6),
+            "idle_gap_s": round(self.idle_gap_time, 4),
             "generation_speed_tok_s": round(self.generation_speed, 3),
+            "busy_window_generation_speed_tok_s": round(
+                self.busy_window_generation_speed, 3
+            ),
             "prefill_time_s": round(self.total_prefill_time, 4),
             "decode_time_s": round(self.total_decode_time, 4),
             "max_decision_ms": round(max(self.decision_times_ms), 4)
@@ -298,6 +358,114 @@ class ScheduleTrace:
                 ],
             }
         )
+
+
+@dataclass
+class FleetReport:
+    """Aggregate of N replica ``ScheduleTrace``s — one fleet-level serve.
+
+    Replicas run in parallel wall-clock (each trace's stage clock starts at
+    0), so the fleet makespan is the *max* replica makespan, fleet busy
+    client-time is the *sum* of replica busy client-times, and utilization
+    divides by makespan × total slots. ``lower_bound_s`` is
+    ``theoretical_lower_bound`` evaluated at n_clients = replicas × slots —
+    the whole fleet treated as one flat pool of clients, which is exactly
+    the paper's bound and therefore a floor no partitioned execution can
+    beat (``lb_ratio`` ≥ 1 up to cost-model fit error).
+    """
+
+    policy_name: str
+    n_replicas: int
+    slots_per_replica: int
+    traces: List[ScheduleTrace] = field(default_factory=list)
+    lower_bound_s: float = 0.0
+    steal_events: int = 0
+    offline_solver: str = ""
+    offline_gap: float = 0.0
+    meta: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_slots(self) -> int:
+        return self.n_replicas * self.slots_per_replica
+
+    @property
+    def makespan(self) -> float:
+        return max((t.makespan for t in self.traces), default=0.0)
+
+    @property
+    def busy_client_time(self) -> float:
+        return sum(t.busy_client_time for t in self.traces)
+
+    @property
+    def utilization(self) -> float:
+        """Fleet busy client-time over fleet makespan × total slots — the
+        paper's Gantt metric lifted to replica granularity. A straggler
+        replica drags this down for everyone, which is what the offline
+        bin packing + work stealing exist to prevent."""
+        span = self.makespan
+        if span <= 0 or self.total_slots == 0:
+            return 0.0
+        return self.busy_client_time / (span * self.total_slots)
+
+    @property
+    def busy_window_utilization(self) -> float:
+        """Gap-excluded fleet utilization: each replica's busy client-time
+        over the fleet-wide max busy window (see
+        ``ScheduleTrace.busy_window_utilization``)."""
+        window = max((t.busy_window for t in self.traces), default=0.0)
+        if window <= 0 or self.total_slots == 0:
+            return 0.0
+        return self.busy_client_time / (window * self.total_slots)
+
+    @property
+    def generation_speed(self) -> float:
+        span = self.makespan
+        if span <= 0:
+            return 0.0
+        return sum(t.total_generated_tokens for t in self.traces) / span
+
+    @property
+    def lb_ratio(self) -> float:
+        """Fleet makespan over the flat-pool lower bound (≥ 1 ideally)."""
+        if self.lower_bound_s <= 0:
+            return 0.0 if self.makespan <= 0 else float("inf")
+        return self.makespan / self.lower_bound_s
+
+    def summary(self) -> Dict[str, float]:
+        per_replica = [t.summary() for t in self.traces]
+        return {
+            "policy": self.policy_name,
+            "n_replicas": self.n_replicas,
+            "slots_per_replica": self.slots_per_replica,
+            "num_requests": sum(len(t.requests) for t in self.traces),
+            "makespan_s": round(self.makespan, 4),
+            "fleet_utilization": round(self.utilization, 6),
+            "busy_window_utilization": round(self.busy_window_utilization, 6),
+            "generation_speed_tok_s": round(self.generation_speed, 3),
+            "lower_bound_s": round(self.lower_bound_s, 4),
+            "lb_ratio": round(self.lb_ratio, 4),
+            "steal_events": self.steal_events,
+            "offline_solver": self.offline_solver,
+            "offline_gap": round(self.offline_gap, 6),
+            "replica_makespans_s": [round(t.makespan, 4) for t in self.traces],
+            "replica_requests": [len(t.requests) for t in self.traces],
+            "replica_summaries": per_replica,
+            **self.meta,
+        }
+
+    def validate(self) -> None:
+        """Fleet-level invariants: every replica trace is internally valid,
+        and no request appears in (was served by) two replicas."""
+        seen: Dict[int, int] = {}
+        for idx, t in enumerate(self.traces):
+            t.validate()
+            for r in t.requests:
+                if r.rid in seen:
+                    raise AssertionError(
+                        f"request {r.rid} served by replicas "
+                        f"{seen[r.rid]} and {idx}"
+                    )
+                seen[r.rid] = idx
 
 
 def make_requests(

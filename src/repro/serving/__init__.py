@@ -1,4 +1,12 @@
 from .engine import Engine, EngineConfig
+from .fleet import (
+    DISPATCH_POLICIES,
+    Fleet,
+    FleetConfig,
+    LeastLoadDispatch,
+    ReplicaDispatchPolicy,
+    RoundRobinDispatch,
+)
 from .kv_slots import BlockAllocator, PagedSlotManager, SlotManager
 from .profiler import OnlineProfiler
 from .sampler import (

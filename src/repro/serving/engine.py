@@ -54,6 +54,12 @@ reproduces the legacy per-token loop exactly.
 The engine emits the same ``ScheduleTrace`` as the simulator, so utilization
 and Gantt accounting are directly comparable, and it can checkpoint/restore
 mid-run (slot cache + queues + scheduler state) for fault tolerance.
+
+Serving is *step-driven*: ``serve()`` is a loop over ``begin_serve`` /
+``serve_step`` / ``finish_serve``, and a ``serving.fleet.Fleet`` drives many
+engines' sessions interleaved in virtual time instead — always stepping the
+lowest-clock replica, pushing externally-dispatched arrivals and stolen
+requests into the session's scheduler between stages.
 """
 from __future__ import annotations
 
@@ -153,6 +159,30 @@ def _bucket(x: int, buckets: Sequence[int]) -> int:
         f"bucket table (EngineConfig.prefill_seq_buckets / "
         f"prefill_req_buckets) to cover the workload"
     )
+
+
+@dataclasses.dataclass
+class _ServeSession:
+    """Host-side state of one in-progress serve (the step-driven API).
+
+    ``Engine.serve`` is a loop over ``serve_step``; a ``Fleet`` drives many
+    engines' sessions interleaved in virtual time instead. ``t`` is the
+    session's stage clock (sum of measured stage durations plus any arrival
+    fast-forwards), which is what "replicas run in parallel" means for
+    fleet accounting: every replica's clock starts at 0.
+    """
+
+    trace: ScheduleTrace
+    clients: List[ClientState]
+    scheduler: RequestScheduler
+    policy: IterationPolicy
+    t: float = 0.0
+    bin_index: int = -1
+    stages_run: int = 0
+    # adopt requests into the trace as the scheduler commits them (fleet
+    # dispatch and work stealing route requests in mid-serve, so the final
+    # request set is discovered, not declared)
+    track_requests: bool = False
 
 
 @dataclasses.dataclass
@@ -270,6 +300,10 @@ class Engine:
         # rid -> every token this engine sampled for it (parity testing and
         # the place a production engine would stream detokenized output from)
         self.generated: Dict[int, List[int]] = {}
+        # the open step-driven serve session (begin_serve → serve_step*
+        # → finish_serve); ``serve()`` owns it for closed-loop runs, a
+        # Fleet drives it directly for interleaved multi-replica serving
+        self._sv: Optional[_ServeSession] = None
 
     # ------------------------------------------------------------------ #
     def _prompt_tokens(self, req: Request) -> np.ndarray:
@@ -754,15 +788,24 @@ class Engine:
         return dt, finished, total
 
     # ------------------------------------------------------------------ #
-    def serve(
+    def begin_serve(
         self,
         requests: Sequence[Request],
         clients: List[ClientState],
         request_scheduler: RequestScheduler,
         iteration_policy: IterationPolicy,
         policy_name: str = "",
-    ) -> ScheduleTrace:
-        """Serve a request set to completion; returns the execution trace."""
+        track_requests: bool = False,
+    ) -> None:
+        """Open a step-driven serve session (``serve_step`` runs stages one
+        at a time; ``finish_serve`` closes the trace).
+
+        ``serve()`` wraps the three; a ``Fleet`` drives many engines'
+        sessions interleaved by virtual time instead, routing arrivals and
+        stolen requests in mid-serve via the scheduler's ``push``. With
+        ``track_requests=True`` the trace adopts requests as the scheduler
+        commits them (the request set is discovered, not declared — fleet
+        dispatch and stealing decide placement while the serve runs)."""
         cfg = self.cfg
         if len(clients) != cfg.n_slots:
             raise ValueError("clients must match n_slots")
@@ -780,12 +823,59 @@ class Engine:
         self.decoded_tokens = 0
         self.mixed_rounds = 0
         self.prefill_stall_time = 0.0
-        t = 0.0
-        bin_index = -1
+        self._sv = _ServeSession(
+            trace=trace, clients=clients, scheduler=request_scheduler,
+            policy=iteration_policy, track_requests=track_requests,
+        )
+
+    def has_work(self) -> bool:
+        """Anything to run right now or later: a bound slot, an in-flight
+        chunked prefill, or a queued request (arrived or future)."""
+        return (
+            bool(self.slots.active_slots)
+            or bool(self._chunking)
+            or self._sv.scheduler.has_pending()
+        )
+
+    @property
+    def clock(self) -> float:
+        """The open session's stage clock (virtual serve time)."""
+        return self._sv.t
+
+    def advance_clock(self, t: float) -> None:
+        """Fast-forward the session clock (fleet-level idle gaps — the fleet
+        routes arrivals itself, so the engine never sees them coming)."""
+        if t > self._sv.t:
+            self._sv.t = t
+
+    def _commit_pairs(self, pairs: List[Tuple[ClientState, Request]]) -> None:
+        sv = self._sv
+        sv.scheduler.commit_batch(pairs)
+        if sv.track_requests:
+            sv.trace.requests.extend(r for _, r in pairs)
+
+    def serve_step(self) -> str:
+        """Run at most one stage of the open session. Returns:
+
+        * ``"ran"``  — executed a stage (or made clock progress);
+        * ``"done"`` — no active work and the scheduler has nothing pending
+          (a fleet may push more work and call again);
+        * ``"idle"`` — pending work exists but nothing can run and no
+          arrival is known to wait for (closed-loop callers treat this as a
+          deadlock; a fleet decides what happens next).
+        """
+        sv = self._sv
+        cfg = self.cfg
         paged = cfg.kv_layout == "paged"
         mixed = paged and cfg.mixed_schedule
-
-        for _ in range(cfg.max_stages):
+        clients = sv.clients
+        request_scheduler = sv.scheduler
+        iteration_policy = sv.policy
+        trace = sv.trace
+        for _attempt in range(4):
+            if sv.stages_run >= cfg.max_stages:
+                raise RuntimeError("max_stages exceeded")
+            t = sv.t
             max_cap = max(
                 self.profiler.cost_model.max_level.cap_tokens >> self._budget_shift,
                 self.profiler.cost_model.level_caps[0],
@@ -799,7 +889,7 @@ class Engine:
                 not active and not self._chunking
                 and not request_scheduler.has_pending()
             ):
-                break
+                return "done"
             # arrival-aware schedulers gate their queue on the stage clock
             if hasattr(request_scheduler, "set_now"):
                 request_scheduler.set_now(t)
@@ -867,9 +957,9 @@ class Engine:
                 plan, admitted = self._plan_mixed_round(pairs, share)
                 if admitted:
                     new_pairs = [(c, r) for c, r, _ in admitted]
-                    request_scheduler.commit_batch(new_pairs)
-                    bin_index += 1
-                    self._start_chunked_batch(new_pairs, bin_index, t)
+                    self._commit_pairs(new_pairs)
+                    sv.bin_index += 1
+                    self._start_chunked_batch(new_pairs, sv.bin_index, t)
                     plan.extend(
                         (self._chunking[c.cid], n) for c, _, n in admitted
                     )
@@ -881,7 +971,7 @@ class Engine:
                     StageRecord(
                         kind=StageKind.MIXED,
                         t_start=t, t_end=t + dt,
-                        bin_index=max(bin_index, 0),
+                        bin_index=max(sv.bin_index, 0),
                         busy=busy, busy_partial=busy_partial,
                         tokens=decode_tok + chunk_tok,
                         chunk_tokens=chunk_tok, rounds=1, burst=True,
@@ -890,11 +980,11 @@ class Engine:
                         },
                     )
                 )
-                t += dt
-                self._finish_prefills(fin_chunks, clients, t)
+                sv.t = t + dt
+                self._finish_prefills(fin_chunks, clients, sv.t)
                 for slot in fin_decode:
                     req = self.slots.release(slot)
-                    req.t_done = t
+                    req.t_done = sv.t
                     clients[slot].current = None
             elif (
                 candidate and paged
@@ -905,9 +995,9 @@ class Engine:
                 # per-row math and jit shapes, honest prefill timing for
                 # the cost model and straggler predictor)
                 if pairs:
-                    request_scheduler.commit_batch(pairs)
-                    bin_index += 1
-                    self._start_chunked_batch(pairs, bin_index, t)
+                    self._commit_pairs(pairs)
+                    sv.bin_index += 1
+                    self._start_chunked_batch(pairs, sv.bin_index, t)
                 dt, tok, finished, busy, busy_partial = self._run_chunk_round()
                 if active:
                     # decoders froze for the whole preempting chunk round
@@ -916,25 +1006,25 @@ class Engine:
                     StageRecord(
                         kind=StageKind.PREFILL,
                         t_start=t, t_end=t + dt,
-                        bin_index=max(bin_index, 0),
+                        bin_index=max(sv.bin_index, 0),
                         busy=busy, busy_partial=busy_partial, tokens=tok,
                         level=self.profiler.cost_model.level_for(
                             min(tok, max_cap)
                         ).index,
                     )
                 )
-                t += dt
-                self._finish_prefills(finished, clients, t)
+                sv.t = t + dt
+                self._finish_prefills(finished, clients, sv.t)
             elif do_prefill and candidate:
-                request_scheduler.commit_batch(pairs)
-                bin_index += 1
+                self._commit_pairs(pairs)
+                sv.bin_index += 1
                 dt, tok = self._run_prefill_stage(pairs)
                 if active:
                     self.prefill_stall_time += dt
                 busy = {}
                 for client, req in pairs:
                     req.client = client.cid
-                    req.prefill_bin = bin_index
+                    req.prefill_bin = sv.bin_index
                     req.t_prefill_start = t
                     req.t_prefill_end = t + dt
                     req.decoded = 1
@@ -943,17 +1033,17 @@ class Engine:
                     StageRecord(
                         kind=StageKind.PREFILL,
                         t_start=t, t_end=t + dt,
-                        bin_index=bin_index, busy=busy, tokens=tok,
+                        bin_index=sv.bin_index, busy=busy, tokens=tok,
                         level=self.profiler.cost_model.level_for(
                             min(tok, max_cap)
                         ).index,
                     )
                 )
-                t += dt
+                sv.t = t + dt
                 # requests with n_decode == 1 finish at prefill
                 for client, req in pairs:
                     if self.cfg.eos_id is None and req.n_decode <= 1:
-                        req.t_done = t
+                        req.t_done = sv.t
                         self.slots.release(client.cid)
                         client.current = None
             elif active:
@@ -970,14 +1060,14 @@ class Engine:
                     StageRecord(
                         kind=StageKind.DECODE,
                         t_start=t, t_end=t + dt,
-                        bin_index=max(bin_index, 0), busy=busy,
+                        bin_index=max(sv.bin_index, 0), busy=busy,
                         tokens=tokens, rounds=k, burst=burst,
                     )
                 )
-                t += dt
+                sv.t = t + dt
                 for slot in finished:
                     req = self.slots.release(slot)
-                    req.t_done = t
+                    req.t_done = sv.t
                     clients[slot].current = None
             else:
                 if candidate:
@@ -985,18 +1075,50 @@ class Engine:
                 nxt = getattr(request_scheduler, "next_arrival", None)
                 arrival = nxt() if callable(nxt) else None
                 if arrival is not None and arrival > t:
-                    t = arrival       # idle gap: fast-forward to the arrival
-                    continue
-                raise RuntimeError("engine deadlock: pending but no candidate")
-        else:
-            raise RuntimeError("max_stages exceeded")
+                    sv.t = arrival    # idle gap: fast-forward to the arrival
+                    return "ran"      # clock progress counts as progress
+                return "idle"
+            sv.stages_run += 1
+            return "ran"
+        raise RuntimeError(
+            "engine livelock: policy kept refusing the only runnable stage"
+        )
+
+    def finish_serve(self, validate: bool = True) -> ScheduleTrace:
+        """Close the session: merge executor counters into the trace and
+        (by default) check the trace invariants. Fleet resume paths skip
+        validation — a restored replica's trace only covers post-restore
+        stages, so 'every request prefilled exactly once' cannot hold."""
+        trace = self._sv.trace
         trace.meta.update(
             mixed_rounds=self.mixed_rounds,
             prefill_stall_time_s=round(self.prefill_stall_time, 6),
             decode_dispatches=self.decode_dispatches,
         )
-        trace.validate()
+        if validate:
+            trace.validate()
         return trace
+
+    def serve(
+        self,
+        requests: Sequence[Request],
+        clients: List[ClientState],
+        request_scheduler: RequestScheduler,
+        iteration_policy: IterationPolicy,
+        policy_name: str = "",
+    ) -> ScheduleTrace:
+        """Serve a request set to completion; returns the execution trace."""
+        self.begin_serve(
+            requests, clients, request_scheduler, iteration_policy,
+            policy_name=policy_name,
+        )
+        while True:
+            status = self.serve_step()
+            if status == "done":
+                break
+            if status == "idle":
+                raise RuntimeError("engine deadlock: pending but no candidate")
+        return self.finish_serve()
 
     # ------------------------------------------------------------------ #
     # Checkpoint / restore (fault tolerance)                              #

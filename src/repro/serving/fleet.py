@@ -1,0 +1,502 @@
+"""Fleet-scale serving: N ``Engine`` replicas under the paper's hybrid
+offline-online scheduler, lifted one level up.
+
+The paper's hybrid assigns an offline backlog across *clients* (Minimizing
+Makespan Bin Packing, Eqs. 26–30) and then runs online sorting/preemptive
+scheduling per client. In this repo the offline layer had only ever driven
+the event-driven simulator while the real engine stayed a single replica;
+the ``Fleet`` closes that gap by applying the same two ideas at replica
+granularity:
+
+  * **offline** — ``solve_offline`` (LPT + local search) partitions the
+    backlog across replicas, treating each replica as one of the paper's
+    "clients" (``round_robin_assign`` is the unbalanced baseline ablation,
+    Fig. 6 at fleet scale). Each replica then serves its partition
+    longest-first (Algorithm 1's sort).
+  * **online** — arrivals route through a pluggable
+    ``ReplicaDispatchPolicy``: least-estimated-load using the shared
+    ``CostModel`` (HyGen-style replica-level dispatch), or round-robin.
+    When a replica drains early it *steals* the longest not-yet-started
+    request from the most-loaded replica's queue — Algorithm 1's
+    request-level straggler mitigation, applied across replicas so one
+    straggler cannot set the fleet makespan.
+
+Execution model: all replicas share one set of model weights (the same
+``params`` device buffers) but own independent KV pools / slot managers.
+One process executes every stage, interleaved in *virtual time*: the fleet
+always steps the replica whose session clock is lowest, so cross-replica
+decisions (arrival routing, stealing) are made at a consistent fleet-wide
+"now" even though stages run sequentially. Each replica's trace clock
+starts at 0 — "replicas run in parallel" — so the fleet makespan is the
+max replica makespan, and fleet utilization divides the summed busy
+client-time by makespan × total slots. ``FleetReport`` compares that
+makespan against ``theoretical_lower_bound`` evaluated on the whole fleet
+as one flat pool of N·slots clients (Eqs. 31–32), the floor no partitioned
+execution can beat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.cost_model import CostModel
+from ..core.iteration import IterationPolicy, LagrangianPolicy
+from ..core.offline import (
+    evaluate_assignment,
+    round_robin_assign,
+    solve_offline,
+    split_requests,
+    theoretical_lower_bound,
+)
+from ..core.online import GlobalQueueScheduler, build_clients
+from ..core.types import FleetReport, Request
+from .engine import Engine, EngineConfig
+from .profiler import OnlineProfiler
+from .sampler import greedy
+
+Tree = Any
+
+
+# --------------------------------------------------------------------------- #
+# Online replica dispatch                                                     #
+# --------------------------------------------------------------------------- #
+class ReplicaDispatchPolicy:
+    """Chooses the replica an online arrival is admitted to."""
+
+    name = "base"
+
+    def choose(self, fleet: "Fleet", req: Request) -> int:
+        raise NotImplementedError
+
+
+class LeastLoadDispatch(ReplicaDispatchPolicy):
+    """Route to the replica with the least estimated outstanding work
+    (queued + in-flight, priced by the shared ``CostModel``) — the
+    replica-level analogue of LPT's least-loaded-client rule."""
+
+    name = "least_load"
+
+    def choose(self, fleet: "Fleet", req: Request) -> int:
+        return min(
+            range(fleet.n_replicas),
+            key=lambda i: (fleet.estimated_load_s(i), i),
+        )
+
+
+class RoundRobinDispatch(ReplicaDispatchPolicy):
+    """FCFS round-robin across replicas — the unbalanced baseline.
+
+    The cursor is part of serve state: ``Fleet.begin_serve`` resets it and
+    checkpoints carry it, so arrival routing is reproducible across serves
+    and across a checkpoint/restore."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self.cursor = 0
+
+    def reset(self) -> None:
+        self.cursor = 0
+
+    def choose(self, fleet: "Fleet", req: Request) -> int:
+        i = self.cursor % fleet.n_replicas
+        self.cursor += 1
+        return i
+
+
+DISPATCH_POLICIES = {
+    "least_load": LeastLoadDispatch,
+    "round_robin": RoundRobinDispatch,
+}
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Fleet shape + scheduling knobs.
+
+    ``assign`` picks the offline backlog partitioner ("lpt" =
+    ``solve_offline``'s LPT + local search; "round_robin" = the baseline
+    ablation). ``dispatch`` picks the online arrival router. Work stealing
+    moves queued (not-yet-started) requests from loaded to drained
+    replicas; token streams are unaffected (prompts and sampling are pure
+    functions of (seed, rid), independent of which replica runs them).
+    """
+
+    n_replicas: int = 2
+    assign: str = "lpt"                  # "lpt" | "round_robin"
+    dispatch: str = "least_load"         # key into DISPATCH_POLICIES
+    work_stealing: bool = True
+    local_search_rounds: int = 200
+
+
+class Fleet:
+    def __init__(
+        self,
+        model,
+        params: Tree,
+        engine_config: EngineConfig,
+        fleet_config: Optional[FleetConfig] = None,
+        cost_model: Optional[CostModel] = None,
+        sampler: Callable = greedy,
+        profiler_factory: Optional[Callable[[], OnlineProfiler]] = None,
+    ):
+        self.cfg = fleet_config or FleetConfig()
+        if self.cfg.n_replicas <= 0:
+            raise ValueError("n_replicas must be positive")
+        if self.cfg.assign not in ("lpt", "round_robin"):
+            raise ValueError(f"unknown assign method {self.cfg.assign!r}")
+        if self.cfg.dispatch not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch policy {self.cfg.dispatch!r}; "
+                f"have {sorted(DISPATCH_POLICIES)}"
+            )
+        self.engine_cfg = engine_config
+        # the shared CostModel: offline partitioning, dispatch-load pricing,
+        # and the fleet lower bound all price work through this one model
+        self.cost_model = cost_model or CostModel()
+        # N replicas over ONE set of weights: `params` is passed by
+        # reference, so every replica jit-calls the same device buffers;
+        # each Engine builds its own KV pool / slot manager / profiler
+        self.engines = [
+            Engine(
+                model, params, engine_config,
+                profiler=(
+                    profiler_factory()
+                    if profiler_factory is not None
+                    else OnlineProfiler(initial=self.cost_model)
+                ),
+                sampler=sampler,
+            )
+            for _ in range(self.cfg.n_replicas)
+        ]
+        self.dispatcher: ReplicaDispatchPolicy = (
+            DISPATCH_POLICIES[self.cfg.dispatch]()
+        )
+        self.steal_events = 0
+        self.steal_log: List[Dict[str, int]] = []
+        self._central: List[Request] = []     # future arrivals, sorted
+        self._all_requests: List[Request] = []
+        self._offline_result = None
+        self._resumed = False
+
+    @property
+    def n_replicas(self) -> int:
+        return self.cfg.n_replicas
+
+    # ------------------------------------------------------------------ #
+    # Load estimation (the shared-cost-model pricing dispatch uses)       #
+    # ------------------------------------------------------------------ #
+    def _request_weight_s(self, req: Request, remaining_decode: int) -> float:
+        cm = self.cost_model
+        n = self.engine_cfg.n_slots
+        return cm.prefill_time(req.n_prefill) + cm.estimated_decode_completion(
+            max(remaining_decode, 0), n
+        )
+
+    def estimated_load_s(self, i: int) -> float:
+        """Estimated seconds of outstanding work per slot on replica ``i``:
+        queued requests (full weight), in-flight chunked prefills, and the
+        remaining decode of every bound slot, spread over the slot count —
+        the replica-level ``remain_token`` of Algorithm 1, in seconds."""
+        eng = self.engines[i]
+        total = 0.0
+        for r in eng._sv.scheduler.queued:
+            total += self._request_weight_s(r, int(r.n_decode_est or r.n_decode))
+        for st in eng._chunking.values():
+            total += self._request_weight_s(
+                st.req, int(st.req.n_decode_est or st.req.n_decode)
+            )
+        for slot in eng.slots.active_slots:
+            req = eng.slots.request_of[slot]
+            rem = int(req.n_decode_est or req.n_decode) - eng.slots.emitted[slot]
+            total += self.cost_model.estimated_decode_completion(
+                max(rem, 0), eng.cfg.n_slots
+            )
+        return total / eng.cfg.n_slots
+
+    # ------------------------------------------------------------------ #
+    # Serve lifecycle                                                    #
+    # ------------------------------------------------------------------ #
+    def begin_serve(
+        self,
+        requests: Sequence[Request],
+        iteration_policy_factory: Callable[[], IterationPolicy] = LagrangianPolicy,
+        policy_name: str = "",
+    ) -> None:
+        """Partition the offline backlog, open every replica's serve
+        session, and queue online arrivals for dispatch-on-arrival."""
+        for r in requests:
+            r.reset()
+        self._all_requests = list(requests)
+        self.steal_events = 0
+        self.steal_log = []
+        self._resumed = False
+        if hasattr(self.dispatcher, "reset"):
+            self.dispatcher.reset()
+        offline = [r for r in requests if r.arrival <= 0.0]
+        online = sorted(
+            (r for r in requests if r.arrival > 0.0),
+            key=lambda r: (r.arrival, r.rid),
+        )
+        n = self.cfg.n_replicas
+        if self.cfg.assign == "lpt":
+            self._offline_result = solve_offline(
+                offline, n, self.cost_model,
+                local_search_rounds=self.cfg.local_search_rounds,
+            )
+        else:
+            self._offline_result = evaluate_assignment(
+                offline, round_robin_assign(offline, n), n, self.cost_model,
+                solver="round_robin",
+            )
+        parts = split_requests(offline, self._offline_result.assignment)
+        self._central = online
+        base = policy_name or f"fleet/{self.cfg.assign}"
+        for i, eng in enumerate(self.engines):
+            clients = build_clients(eng.cfg.n_slots, [], None)
+            # per-replica FCFS queue over the partition, longest-first
+            # (Algorithm 1's sort); fleet dispatch/stealing push into it
+            sched = GlobalQueueScheduler(parts[i], sort_longest_first=True)
+            eng.begin_serve(
+                [], clients, sched, iteration_policy_factory(),
+                policy_name=f"{base}/r{i}", track_requests=True,
+            )
+
+    def _route_arrivals(self, now: float) -> None:
+        """Admit every central request whose arrival has passed, each to the
+        replica the dispatch policy picks *at this moment* (load changes as
+        earlier arrivals land, so routing is one-at-a-time)."""
+        while self._central and self._central[0].arrival <= now:
+            req = self._central.pop(0)
+            i = self.dispatcher.choose(self, req)
+            self.engines[i]._sv.scheduler.push(req)
+
+    def _earliest_slot_free_s(self, j: int) -> float:
+        """Cost-model estimate of the absolute fleet time at which replica
+        ``j`` next frees a slot: its clock plus the smallest remaining
+        per-slot work (decode rounds left, or chunk tokens + decode for a
+        mid-prefill slot). The steal gate compares this against the thief's
+        clock — measured clocks alone are not comparable when one replica's
+        stages carried one-off costs (e.g. first-hit compiles)."""
+        eng = self.engines[j]
+        cm = self.cost_model
+        waits = []
+        for slot in eng.slots.active_slots:
+            req = eng.slots.request_of[slot]
+            rem = int(req.n_decode_est or req.n_decode) - eng.slots.emitted[slot]
+            waits.append(
+                cm.estimated_decode_completion(max(rem, 0), eng.cfg.n_slots)
+            )
+        for st in eng._chunking.values():
+            waits.append(
+                cm.prefill_time(st.remaining)
+                + cm.estimated_decode_completion(
+                    int(st.req.n_decode_est or st.req.n_decode), eng.cfg.n_slots
+                )
+            )
+        return eng.clock + (min(waits) if waits else 0.0)
+
+    def _try_steal(self) -> None:
+        """Move the longest queued request from the most-loaded replica to
+        each starving one (idle slot, empty queue). Queued work cannot start
+        on its owner (all donor slots busy — otherwise it would not be
+        queued), so a drained replica always runs it sooner."""
+        for i, eng in enumerate(self.engines):
+            sched = eng._sv.scheduler
+            idle_slots = [
+                s for s in eng.slots.free_slots if s not in eng._chunking
+            ]
+            if sched.queued or not idle_slots:
+                continue
+            donors = [
+                j for j, other in enumerate(self.engines)
+                if j != i and other._sv.scheduler.queued
+                # a donor with a genuinely free slot runs its own queue next
+                # step — only steal from replicas whose slots are all busy
+                and all(
+                    s in other._chunking for s in other.slots.free_slots
+                )
+                # the thief starts stolen work at its own clock; a donor
+                # that will free a slot before then would run the request
+                # sooner itself — only steal when the thief wins the race
+                and self._earliest_slot_free_s(j) >= eng.clock
+            ]
+            if not donors:
+                continue
+            j = max(donors, key=lambda k: (self.estimated_load_s(k), -k))
+            victim = self.engines[j]._sv.scheduler.steal_longest()
+            if victim is None:
+                continue
+            sched.push(victim)
+            self.steal_events += 1
+            self.steal_log.append({"rid": victim.rid, "from": j, "to": i})
+
+    def step(self) -> bool:
+        """Advance the fleet by one stage on the lowest-clock replica with
+        work. Returns False once every replica is drained and no arrivals
+        remain (the serve is complete)."""
+        while True:
+            workers = [i for i, e in enumerate(self.engines) if e.has_work()]
+            if not workers:
+                if not self._central:
+                    return False
+                # fleet-wide idle gap: everyone fast-forwards to the arrival
+                nxt = self._central[0].arrival
+                for eng in self.engines:
+                    eng.advance_clock(nxt)
+                self._route_arrivals(nxt)
+                continue
+            now = min(self.engines[i].clock for i in workers)
+            # replicas without work have been idling in parallel — their
+            # clocks track fleet time so routed arrivals start at "now"
+            for i, eng in enumerate(self.engines):
+                if i not in workers:
+                    eng.advance_clock(now)
+            self._route_arrivals(now)
+            if self.cfg.work_stealing:
+                self._try_steal()
+            workers = [i for i, e in enumerate(self.engines) if e.has_work()]
+            i = min(workers, key=lambda j: (self.engines[j].clock, j))
+            status = self.engines[i].serve_step()
+            if status == "idle":
+                raise RuntimeError(
+                    f"replica {i} idle with pending work — fleet routing bug"
+                )
+            return True
+
+    def finish_serve(self) -> FleetReport:
+        traces = [
+            eng.finish_serve(validate=not self._resumed)
+            for eng in self.engines
+        ]
+        served = [r for t in traces for r in t.requests]
+        lb = theoretical_lower_bound(
+            served if served else self._all_requests,
+            self.cfg.n_replicas * self.engine_cfg.n_slots,
+            self.cost_model,
+        )
+        report = FleetReport(
+            policy_name=(
+                f"fleet/{self.cfg.assign}+{self.dispatcher.name}"
+                f"{'+steal' if self.cfg.work_stealing else ''}"
+            ),
+            n_replicas=self.cfg.n_replicas,
+            slots_per_replica=self.engine_cfg.n_slots,
+            traces=traces,
+            lower_bound_s=lb.total,
+            steal_events=self.steal_events,
+            # a resumed fleet has no offline solve of its own (the partition
+            # happened before the checkpoint)
+            offline_solver=(
+                self._offline_result.solver if self._offline_result else "resumed"
+            ),
+            offline_gap=(
+                self._offline_result.gap if self._offline_result else 0.0
+            ),
+        )
+        if not self._resumed:
+            report.validate()
+        return report
+
+    def serve(
+        self,
+        requests: Sequence[Request],
+        iteration_policy_factory: Callable[[], IterationPolicy] = LagrangianPolicy,
+        policy_name: str = "",
+    ) -> FleetReport:
+        """Serve a request set to completion across all replicas."""
+        self.begin_serve(requests, iteration_policy_factory, policy_name)
+        while self.step():
+            pass
+        return self.finish_serve()
+
+    # ------------------------------------------------------------------ #
+    # Aggregate output (parity checks / detokenized streaming)           #
+    # ------------------------------------------------------------------ #
+    @property
+    def generated(self) -> Dict[int, List[int]]:
+        """rid → sampled tokens, merged across replicas. Each request runs
+        on exactly one replica, so the merge is collision-free (checked)."""
+        out: Dict[int, List[int]] = {}
+        for eng in self.engines:
+            for rid, toks in eng.generated.items():
+                if rid in out:
+                    raise RuntimeError(f"request {rid} decoded on two replicas")
+                out[rid] = toks
+        return out
+
+    def warm_serving_shapes(self) -> None:
+        for eng in self.engines:
+            eng.warm_serving_shapes()
+
+    # ------------------------------------------------------------------ #
+    # Checkpoint / restore (all replicas + fleet dispatcher state)        #
+    # ------------------------------------------------------------------ #
+    def state_dict(self) -> Dict[str, Any]:
+        """Mid-serve fleet snapshot: every replica's engine state plus the
+        queue composition and session clocks the fleet needs to resume."""
+        queues = [
+            np.asarray(
+                [r.rid for r in eng._sv.scheduler.queued], dtype=np.int32
+            )
+            for eng in self.engines
+        ]
+        return {
+            "engines": [eng.state_dict() for eng in self.engines],
+            "clocks": np.asarray(
+                [eng.clock for eng in self.engines], dtype=np.float64
+            ),
+            "queues": queues,
+            "central": np.asarray(
+                [r.rid for r in self._central], dtype=np.int32
+            ),
+            "steal_events": self.steal_events,
+            "dispatch_cursor": int(getattr(self.dispatcher, "cursor", 0)),
+        }
+
+    def load_state_dict(
+        self,
+        state: Dict[str, Any],
+        requests_by_rid: Dict[int, Request],
+        iteration_policy_factory: Callable[[], IterationPolicy] = LagrangianPolicy,
+        policy_name: str = "",
+    ) -> None:
+        """Restore a mid-serve fleet. Queued requests rebuild each replica's
+        scheduler; bound/mid-chunk slots resume from engine state (their
+        earlier tokens live in the pre-checkpoint output record, so the
+        restored fleet's traces cover only post-restore work and
+        ``finish_serve`` skips full-coverage validation)."""
+        self._resumed = True
+        self.steal_events = int(state.get("steal_events", 0))
+        # steal_log entries are not checkpointed (steal_events is), and any
+        # offline solve belongs to the pre-checkpoint serve — clear both so
+        # a reused Fleet object cannot report stale metadata
+        self.steal_log = []
+        self._offline_result = None
+        if hasattr(self.dispatcher, "cursor"):
+            self.dispatcher.cursor = int(state.get("dispatch_cursor", 0))
+        self._central = [
+            requests_by_rid[int(rid)] for rid in np.asarray(state["central"])
+        ]
+        self._all_requests = list(requests_by_rid.values())
+        base = policy_name or f"fleet/{self.cfg.assign}"
+        clocks = np.asarray(state["clocks"], dtype=np.float64)
+        for i, eng in enumerate(self.engines):
+            clients = build_clients(eng.cfg.n_slots, [], None)
+            sched = GlobalQueueScheduler(
+                [requests_by_rid[int(r)] for r in np.asarray(state["queues"][i])]
+            )
+            eng.begin_serve(
+                [], clients, sched, iteration_policy_factory(),
+                policy_name=f"{base}/r{i}(resumed)", track_requests=True,
+            )
+            eng.load_state_dict(state["engines"][i], requests_by_rid)
+            # re-attach bound requests to their clients (mid-chunk slots
+            # stay current=None — _chunking owns them until the final chunk)
+            for slot, req in enumerate(eng.slots.request_of):
+                if req is not None:
+                    clients[slot].current = req
+                    req.decoded = eng.slots.emitted[slot]
+            eng.advance_clock(float(clocks[i]))

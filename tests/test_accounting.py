@@ -1,0 +1,93 @@
+"""Accounting regressions: the OfflineResult.gap degenerate-bound fix,
+idle-gap-aware utilization (open-loop arrival gaps reported separately from
+scheduler-caused idleness), and the fleet's assignment-evaluation helpers.
+Kept hypothesis-free so the module always runs."""
+import pytest
+
+from repro.core import (
+    CostModel,
+    PAPER_COST_MODEL,
+    make_requests,
+    solve_offline,
+)
+
+
+def test_offline_gap_degenerate_lower_bound():
+    """Regression: a zero LP bound used to report gap 0.0 — a 'perfect'
+    solution — even when the achieved makespan was positive. Only
+    zero-over-zero is a true 0.0; positive-over-zero is an infinite gap."""
+    from repro.core import OfflineResult
+
+    def result(makespan, lb):
+        return OfflineResult(
+            assignment=[[]], loads=[makespan], makespan_est=makespan,
+            lp_lower_bound=lb, solver="test", solve_seconds=0.0,
+        )
+
+    assert result(0.0, 0.0).gap == 0.0
+    assert result(1.5, 0.0).gap == float("inf")
+    assert result(1.5, 1.0).gap == pytest.approx(0.5)
+    # an empty instance solves to an empty, gapless assignment
+    res = solve_offline([], 3, PAPER_COST_MODEL)
+    assert res.makespan_est == 0.0 and res.gap == 0.0
+
+
+def test_evaluate_assignment_matches_solver_diagnostics():
+    from repro.core import evaluate_assignment, round_robin_assign
+
+    reqs = make_requests([10, 10, 10, 10], [40, 5, 40, 5])
+    asn = round_robin_assign(reqs, 2)
+    res = evaluate_assignment(reqs, asn, 2, PAPER_COST_MODEL, solver="rr")
+    ref = solve_offline(reqs, 2, PAPER_COST_MODEL)
+    # same LP bound (instance property), worse-or-equal makespan than LPT
+    assert res.lp_lower_bound == pytest.approx(ref.lp_lower_bound)
+    assert res.makespan_est >= ref.makespan_est - 1e-12
+    assert res.solver == "rr"
+    assert sum(res.loads) == pytest.approx(sum(ref.loads))
+
+
+def test_split_requests_partitions_exactly():
+    from repro.core import split_requests
+
+    reqs = make_requests([4, 5, 6, 7], [1, 2, 3, 4])
+    parts = split_requests(reqs, [[2, 0], [1], [3]])
+    assert [[r.rid for r in p] for p in parts] == [[2, 0], [1], [3]]
+    with pytest.raises(ValueError):
+        split_requests(reqs, [[0, 0], [1], [2, 3]])
+    with pytest.raises(ValueError):
+        split_requests(reqs, [[0], [1]])    # 2 and 3 unassigned
+
+
+def test_utilization_accounts_idle_gaps_separately():
+    """Regression: open-loop traces (engine fast-forwards over arrival
+    gaps) used to fold forced-idle time into the only utilization number.
+    Both views now exist: ``utilization`` (paper metric, gaps included)
+    and ``busy_window_utilization`` (gaps excluded)."""
+    from repro.core import ScheduleTrace, StageKind, StageRecord
+
+    tr = ScheduleTrace(num_clients=2)
+    tr.stages = [
+        StageRecord(kind=StageKind.DECODE, t_start=0.0, t_end=1.0,
+                    bin_index=0, busy={0: 0, 1: 1}, tokens=2, rounds=1),
+        # 3-second arrival gap: nothing ran
+        StageRecord(kind=StageKind.DECODE, t_start=4.0, t_end=5.0,
+                    bin_index=0, busy={0: 2, 1: 3}, tokens=2, rounds=1),
+    ]
+    assert tr.makespan == 5.0
+    assert tr.idle_gap_time == pytest.approx(3.0)
+    assert tr.busy_window == pytest.approx(2.0)
+    # gaps included: 4 busy client-seconds over 10 client-seconds
+    assert tr.utilization == pytest.approx(0.4)
+    # gaps excluded: 4 over 4
+    assert tr.busy_window_utilization == pytest.approx(1.0)
+    s = tr.summary()
+    assert s["utilization"] == pytest.approx(0.4)
+    assert s["busy_window_utilization"] == pytest.approx(1.0)
+    assert s["idle_gap_s"] == pytest.approx(3.0)
+    # closed-loop traces (no gaps): the two views agree exactly
+    tr.stages[1].t_start, tr.stages[1].t_end = 1.0, 2.0
+    assert tr.idle_gap_time == 0.0
+    assert tr.busy_window_utilization == pytest.approx(tr.utilization)
+    assert tr.busy_window_generation_speed == pytest.approx(
+        tr.generation_speed
+    )

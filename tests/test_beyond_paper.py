@@ -3,6 +3,8 @@ paper's rule, and fixes its starvation mode; amortized beats the paper's
 rule on its own benchmark."""
 import dataclasses
 
+import pytest
+
 from repro.core import (
     PAPER_COST_MODEL,
     AmortizedPolicy,
@@ -33,6 +35,7 @@ def test_balanced_equals_paper_on_gsm8k():
     assert abs(a.utilization - b.utilization) < 0.005
 
 
+@pytest.mark.slow
 def test_balanced_fixes_long_prompt_starvation():
     spec = dataclasses.replace(PAPER_WORKLOAD_SPEC, input_mean=400.0, input_std=120.0)
     paper = _run(spec, LagrangianPolicy())

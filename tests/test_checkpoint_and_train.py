@@ -126,6 +126,7 @@ def test_int8_compression_numerics():
     assert np.abs(true_acc - comp_acc).max() < 0.05
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_single_batch():
     """bf16-accumulated grad-accum step ≈ single-batch step."""
     from repro.configs import get_smoke_config

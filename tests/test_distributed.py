@@ -55,6 +55,7 @@ def test_spec_builder_shape_checks():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_small_mesh_train_and_serve_lower():
     """A miniature end-to-end dry-run on an 8-device (4×2) mesh: train and
     decode steps lower+compile with the production sharding rules."""
@@ -101,6 +102,7 @@ def test_small_mesh_train_and_serve_lower():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_compressed_dp_train_step_numerics():
     """shard_map DP training with int8 error-feedback compression tracks the
     uncompressed path."""

@@ -72,6 +72,7 @@ def test_engine_serves_all_requests(model_and_params):
     assert all(eng.slots.request_of[i] is None for i in range(4))  # all released
 
 
+@pytest.mark.slow
 def test_engine_hybrid_beats_baseline(model_and_params):
     model, params = model_and_params
     results = {}

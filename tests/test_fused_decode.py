@@ -73,6 +73,7 @@ def _serve(eng, seed=0):
 # Token-stream parity: fused K vs per-token baseline                          #
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.slow
 def test_fused_greedy_matches_per_token(model_and_params, layout):
     model, params = model_and_params
     base = _engine(model, params, horizon=1, layout=layout)
@@ -89,6 +90,7 @@ def test_fused_greedy_matches_per_token(model_and_params, layout):
 
 
 @pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.slow
 def test_fused_seeded_top_p_matches_per_token(model_and_params, layout):
     model, params = model_and_params
     samp = TopPSampler(top_p=0.95)
@@ -104,6 +106,7 @@ def test_fused_seeded_top_p_matches_per_token(model_and_params, layout):
         assert runs[1][rid] == runs[8][rid], f"rid {rid}"
 
 
+@pytest.mark.slow
 def test_stream_is_pure_function_of_seed_and_rid(model_and_params):
     """Dense vs paged, K=1 vs K=8, same seed → identical streams; different
     seed → different streams (the (seed, rid, token_index) key contract)."""

@@ -76,6 +76,7 @@ def _serve(eng, seed=5, policy=None, reqs=None):
 # --------------------------------------------------------------------------- #
 # Token parity: mixed-step == alternating-stage                               #
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_mixed_matches_alternating_greedy(model_and_params):
     model, params = model_and_params
     alt = _engine(model, params, mixed=False)
@@ -101,6 +102,7 @@ def test_mixed_matches_alternating_greedy(model_and_params):
     assert tr_a.summary()["prefill_stall_time_s"] > 0.0
 
 
+@pytest.mark.slow
 def test_mixed_matches_alternating_seeded_top_p(model_and_params):
     model, params = model_and_params
     samp = TopPSampler(top_p=0.95)
@@ -114,6 +116,7 @@ def test_mixed_matches_alternating_seeded_top_p(model_and_params):
         assert runs[False][rid] == runs[True][rid], f"rid {rid}"
 
 
+@pytest.mark.slow
 def test_mixed_lagrangian_share_serves_valid_trace(model_and_params):
     """The priced prefill_share must drive a complete, valid serve — and a
     slot must finish decoding inside some mixed round (release mid-round)."""

@@ -14,6 +14,15 @@ from repro.train.train_step import make_train_step
 
 B, S = 2, 16
 
+# The big recurrent/audio configs dominate suite wall-clock; their smoke
+# params carry the slow marker (CI's bench-smoke job runs them) while the
+# cheap architectures keep every-run coverage.
+_HEAVY_ARCHS = {"recurrentgemma_9b", "xlstm_350m", "whisper_small"}
+ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+    for a in ARCH_IDS
+]
+
 
 def _batch(cfg, seed=0):
     rng = np.random.default_rng(seed)
@@ -33,7 +42,7 @@ def _batch(cfg, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
     model = get_model(cfg)
@@ -53,7 +62,7 @@ def test_smoke_forward_and_train_step(arch):
     assert int(new_opt["count"]) == 1
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_serve_consistency(arch):
     """prefill + one decode step == full forward on the extended sequence."""
     cfg = get_smoke_config(arch)
@@ -121,6 +130,7 @@ def test_abstract_params_match_real(arch):
         assert len(axes) == leaf.ndim
 
 
+@pytest.mark.slow
 def test_ragged_continuous_batching_dense():
     """Engine contract: ragged prefill lengths + per-slot decode positions."""
     from repro.configs.base import ArchConfig
@@ -153,6 +163,7 @@ def test_ragged_continuous_batching_dense():
         toks = jnp.argmax(ld, -1).astype(jnp.int32)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["xlstm_350m", "recurrentgemma_9b"])
 def test_ragged_continuous_batching_recurrent(arch):
     """Recurrent families honor per-slot prompt lengths: pad tokens never

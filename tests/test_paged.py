@@ -92,6 +92,7 @@ def test_paged_slot_manager_reserve_release(model_and_params):
 # --------------------------------------------------------------------------- #
 # Model-level parity: chunked paged prefill + paged decode == dense           #
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_paged_chunked_prefill_and_decode_match_dense(model_and_params):
     model, params = model_and_params
     rng = np.random.default_rng(0)
@@ -175,6 +176,7 @@ def _serve(eng, seed, policy):
     return tr
 
 
+@pytest.mark.slow
 def test_engine_paged_matches_dense_tokens(model_and_params):
     model, params = model_and_params
     eng_d = _engine(model, params, "dense")
@@ -195,6 +197,7 @@ def test_engine_paged_matches_dense_tokens(model_and_params):
     assert any(s.busy_partial for s in tr_p.stages)
 
 
+@pytest.mark.slow
 def test_engine_paged_lagrangian_chunk_pricing(model_and_params):
     """The Lagrangian policy must serve a valid trace when the candidate is
     priced per chunk (chunk_tokens set) and interleave decode with chunking
@@ -211,6 +214,7 @@ def test_engine_paged_lagrangian_chunk_pricing(model_and_params):
     assert "prefill" in kinds and "decode" in kinds
 
 
+@pytest.mark.slow
 def test_engine_paged_checkpoint_roundtrip(model_and_params, tmp_path):
     from repro.checkpoint import restore_checkpoint, save_checkpoint
 

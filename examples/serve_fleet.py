@@ -16,16 +16,24 @@ an independent paged KV pool), serves a skewed workload three ways —
 shared time axis, where round-robin's straggler replica shows up as a tail
 of idle columns.
 
+A second, HETEROGENEOUS round then emulates a mixed-generation fleet on
+this one host (``ReplicaSpec.speed_factor`` scales each replica's
+virtual-time stage clock — the 0.33× replica's Gantt rows are visibly
+denser, the same tokens stretched over more of the shared axis) and
+compares the R||Cmax-aware partition (``assign="lpt"``) against the
+speed-blind P||Cmax one (``assign="lpt_blind"``).
+
 Dispatch-policy flags live on ``FleetConfig``: ``assign`` ("lpt" |
-"round_robin"), ``dispatch`` ("least_load" | "round_robin"),
-``work_stealing`` (bool), ``n_replicas``.
+"lpt_blind" | "round_robin"), ``dispatch`` ("least_load" | "round_robin"),
+``work_stealing`` (bool), ``n_replicas``; per-replica speeds/cost priors
+ride on ``Fleet(replica_specs=[ReplicaSpec(...), ...])``.
 
     PYTHONPATH=src python examples/serve_fleet.py
 """
 import jax
 
 from repro.configs.base import ArchConfig
-from repro.core import CostModel, LagrangianPolicy, Request
+from repro.core import CostModel, LagrangianPolicy, ReplicaSpec, Request
 from repro.core.gantt import fleet_ascii_gantt
 from repro.models.layers import init_params
 from repro.models.transformer import TransformerLM
@@ -80,6 +88,33 @@ def main():
             f"speed={s['generation_speed_tok_s']:7.0f} tok/s  "
             f"lb_ratio={s['lb_ratio']:.2f}  steals={s['steal_events']}  "
             f"replica makespans={s['replica_makespans_s']}"
+        )
+        print(fleet_ascii_gantt(report, width=84))
+
+    # ---- heterogeneous fleet: one replica at a third of the speed ------- #
+    print("== heterogeneous fleet (speeds x1.0 / x0.33) ==")
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.33)]
+    het_modes = {
+        "hetero lpt": FleetConfig(
+            n_replicas=2, assign="lpt", dispatch="least_load",
+            work_stealing=False,
+        ),
+        "blind lpt": FleetConfig(
+            n_replicas=2, assign="lpt_blind", dispatch="least_load",
+            work_stealing=False,
+        ),
+    }
+    for name, fc in het_modes.items():
+        fleet = Fleet(model, params, ecfg, fc, cost_model=cm,
+                      replica_specs=specs)
+        fleet.warm_serving_shapes()          # compile before profiled stages
+        report = fleet.serve(skewed_workload(), LagrangianPolicy)
+        s = report.summary()
+        print(
+            f"{name:14s} makespan={s['makespan_s']:7.3f}s  "
+            f"fleet util={s['fleet_utilization'] * 100:5.1f}% "
+            f"(speed-weighted)  solver={s['offline_solver']}  "
+            f"replica requests={s['replica_requests']}"
         )
         print(fleet_ascii_gantt(report, width=84))
 

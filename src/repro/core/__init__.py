@@ -22,7 +22,19 @@ from .offline import (
     round_robin_assign,
     evaluate_assignment,
     split_requests,
+    request_weights,
     theoretical_lower_bound,
+)
+from .hetero import (
+    ReplicaSpec,
+    replica_request_weight,
+    hetero_weights,
+    hetero_lpt_assign,
+    hetero_local_search,
+    hetero_lp_lower_bound,
+    hetero_theoretical_lower_bound,
+    solve_hetero,
+    evaluate_hetero_assignment,
 )
 from .online import (
     RequestScheduler,

@@ -77,6 +77,34 @@ class CostModel:
             raise ValueError("level capacities must be strictly increasing")
 
     # ------------------------------------------------------------------ #
+    # Heterogeneous replicas                                             #
+    # ------------------------------------------------------------------ #
+    def scaled(self, speed_factor: float) -> "CostModel":
+        """This model on a machine running ``speed_factor`` × as fast: every
+        duration constant divides by the factor (2.0 → half the time per
+        stage, 0.5 → twice). Level capacities are token counts, not times,
+        and stay put. Used to seed per-replica cost-model priors for a
+        mixed-generation fleet (``core.hetero.ReplicaSpec``)."""
+        if speed_factor <= 0:
+            raise ValueError("speed_factor must be positive")
+        s = float(speed_factor)
+
+        def scale(x: Optional[float]) -> Optional[float]:
+            return None if x is None else x / s
+
+        return CostModel(
+            prefill_per_token=self.prefill_per_token / s,
+            prefill_overhead=self.prefill_overhead / s,
+            decode_per_token=self.decode_per_token / s,
+            decode_overhead=self.decode_overhead / s,
+            decode_dispatch=self.decode_dispatch / s,
+            mixed_overhead=scale(self.mixed_overhead),
+            mixed_decode_per_row=scale(self.mixed_decode_per_row),
+            mixed_prefill_per_token=scale(self.mixed_prefill_per_token),
+            level_caps=self.level_caps,
+        )
+
+    # ------------------------------------------------------------------ #
     # Raw linear model                                                   #
     # ------------------------------------------------------------------ #
     def prefill_time(self, total_tokens: int) -> float:

@@ -106,15 +106,21 @@ def fleet_ascii_gantt(
     span = report.makespan
     if span <= 0:
         return "(empty fleet trace)"
+    speeds = report._replica_speeds()
+    hetero = any(s != 1.0 for s in speeds)
     out = io.StringIO()
     out.write(
         f"Fleet Gantt [{report.policy_name}] replicas={report.n_replicas} "
-        f"makespan={span:.2f}s util={report.utilization * 100:.2f}% "
+        f"makespan={span:.2f}s util={report.utilization * 100:.2f}%"
+        f"{' (speed-weighted)' if hetero else ''} "
         f"lb_ratio={report.lb_ratio:.2f} steals={report.steal_events}\n"
     )
     for i, trace in enumerate(report.traces):
+        # a slow replica's rows render visibly denser per request: the same
+        # token count stretches over more of the shared fleet time axis
+        speed_tag = f" speed=x{speeds[i]:g}" if hetero else ""
         out.write(
-            f"-- replica {i}: makespan={trace.makespan:.2f}s "
+            f"-- replica {i}{speed_tag}: makespan={trace.makespan:.2f}s "
             f"util={trace.utilization * 100:.2f}% "
             f"requests={len(trace.requests)}\n"
         )

@@ -58,11 +58,15 @@ class OfflineResult:
         return (self.makespan_est - self.lp_lower_bound) / self.lp_lower_bound
 
 
-def _weights(requests: Sequence[Request], cost_model: CostModel, n_clients: int) -> np.ndarray:
+def request_weights(
+    requests: Sequence[Request], cost_model: CostModel, n_clients: int
+) -> np.ndarray:
     """T_i: estimated decode completion time per request (offline model §IV-B).
 
     Offline planning uses the *estimated* decode length (n_decode_est); true
-    lengths stay unknown until execution, as in the paper.
+    lengths stay unknown until execution, as in the paper. (The
+    heterogeneous solver prices a different, prefill-inclusive quantity —
+    see ``core.hetero.replica_request_weight``.)
     """
     return np.asarray(
         [
@@ -71,6 +75,10 @@ def _weights(requests: Sequence[Request], cost_model: CostModel, n_clients: int)
         ],
         dtype=np.float64,
     )
+
+
+# internal alias kept for the pre-heterogeneous call sites below
+_weights = request_weights
 
 
 # --------------------------------------------------------------------------- #

@@ -57,6 +57,13 @@ class RequestScheduler:
         replica), or None. Optional — queue-backed schedulers only."""
         return None
 
+    def peek_longest(self) -> Optional[Request]:
+        """The request ``steal_longest`` *would* surrender, without removing
+        it — the fleet prices a candidate steal through both replicas' cost
+        models before committing (popping and pushing back would reshuffle
+        the queue order). Optional — queue-backed schedulers only."""
+        return None
+
     @property
     def queued(self) -> Tuple[Request, ...]:
         """Snapshot of not-yet-started requests (fleet load estimation).
@@ -268,6 +275,11 @@ class GlobalQueueScheduler(RequestScheduler):
         self._queue.remove(victim)
         return victim
 
+    def peek_longest(self) -> Optional[Request]:
+        if not self._queue:
+            return None
+        return max(self._queue, key=lambda r: r.est_total_tokens)
+
     @property
     def queued(self) -> Tuple[Request, ...]:
         return tuple(self._queue)
@@ -333,12 +345,16 @@ class ArrivalQueueScheduler(GlobalQueueScheduler):
     def steal_longest(self) -> Optional[Request]:
         """Only *arrived* requests are stealable — a future arrival is not
         work a starving replica could start now."""
+        victim = self.peek_longest()
+        if victim is not None:
+            self._queue.remove(victim)
+        return victim
+
+    def peek_longest(self) -> Optional[Request]:
         arrived = [r for r in self._queue if r.arrival <= self.now]
         if not arrived:
             return None
-        victim = max(arrived, key=lambda r: r.est_total_tokens)
-        self._queue.remove(victim)
-        return victim
+        return max(arrived, key=lambda r: r.est_total_tokens)
 
 
 def build_clients(

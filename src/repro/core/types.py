@@ -367,11 +367,14 @@ class FleetReport:
     Replicas run in parallel wall-clock (each trace's stage clock starts at
     0), so the fleet makespan is the *max* replica makespan, fleet busy
     client-time is the *sum* of replica busy client-times, and utilization
-    divides by makespan × total slots. ``lower_bound_s`` is
-    ``theoretical_lower_bound`` evaluated at n_clients = replicas × slots —
-    the whole fleet treated as one flat pool of clients, which is exactly
-    the paper's bound and therefore a floor no partitioned execution can
-    beat (``lb_ratio`` ≥ 1 up to cost-model fit error).
+    divides speed-weighted busy time by makespan × speed-weighted capacity.
+    ``lower_bound_s`` is ``theoretical_lower_bound`` evaluated at
+    n_clients = replicas × slots for a homogeneous fleet — the whole fleet
+    treated as one flat pool of clients, exactly the paper's bound — and
+    ``core.hetero.hetero_theoretical_lower_bound`` (the R||Cmax
+    generalization, which recovers the flat-pool bound at equal speeds)
+    whenever replicas differ. Either way it is a floor no partitioned
+    execution can beat (``lb_ratio`` ≥ 1 up to cost-model fit error).
     """
 
     policy_name: str
@@ -382,11 +385,24 @@ class FleetReport:
     steal_events: int = 0
     offline_solver: str = ""
     offline_gap: float = 0.0
+    # Per-replica relative speeds (1.0 = baseline). Empty means homogeneous.
+    # Utilization weights busy time and capacity by these factors: a
+    # replica's capacity is speed × slots, and a busy-second on it is worth
+    # speed × one baseline busy-second — so an idle *slow* replica wastes
+    # proportionally less fleet capacity than an idle fast one, and a
+    # deliberately-slow replica no longer deflates fleet utilization on an
+    # otherwise well-balanced run.
+    speed_factors: List[float] = field(default_factory=list)
     meta: Dict[str, float] = field(default_factory=dict)
 
     @property
     def total_slots(self) -> int:
         return self.n_replicas * self.slots_per_replica
+
+    def _replica_speeds(self) -> List[float]:
+        if self.speed_factors and len(self.speed_factors) == len(self.traces):
+            return [float(s) for s in self.speed_factors]
+        return [1.0] * len(self.traces)
 
     @property
     def makespan(self) -> float:
@@ -397,25 +413,47 @@ class FleetReport:
         return sum(t.busy_client_time for t in self.traces)
 
     @property
+    def weighted_busy_client_time(self) -> float:
+        """Busy client-time in *capacity units*: each replica's busy time
+        weighted by its speed (a speed-0.5 replica busy for 1 s did half a
+        baseline-replica-second of work)."""
+        return sum(
+            s * t.busy_client_time
+            for s, t in zip(self._replica_speeds(), self.traces)
+        )
+
+    @property
+    def weighted_capacity_slots(self) -> float:
+        """Speed-weighted slot count: Σ_j speed_j × slots — the fleet's
+        aggregate capacity per unit wall-clock. Equals ``total_slots`` for
+        a homogeneous fleet."""
+        return self.slots_per_replica * sum(self._replica_speeds())
+
+    @property
     def utilization(self) -> float:
-        """Fleet busy client-time over fleet makespan × total slots — the
-        paper's Gantt metric lifted to replica granularity. A straggler
-        replica drags this down for everyone, which is what the offline
-        bin packing + work stealing exist to prevent."""
+        """Speed-weighted fleet busy time over makespan × speed-weighted
+        capacity — the paper's Gantt metric lifted to replica granularity,
+        with both numerator and denominator in capacity units so mixed-speed
+        fleets are judged against what they could actually do. Reduces
+        exactly to Σ busy / (makespan × N·slots) when all speeds are 1.0. A
+        straggler replica drags this down for everyone, which is what the
+        offline bin packing + work stealing exist to prevent."""
         span = self.makespan
-        if span <= 0 or self.total_slots == 0:
+        cap = self.weighted_capacity_slots
+        if span <= 0 or cap <= 0:
             return 0.0
-        return self.busy_client_time / (span * self.total_slots)
+        return self.weighted_busy_client_time / (span * cap)
 
     @property
     def busy_window_utilization(self) -> float:
-        """Gap-excluded fleet utilization: each replica's busy client-time
-        over the fleet-wide max busy window (see
+        """Gap-excluded fleet utilization: speed-weighted busy client-time
+        over the fleet-wide max busy window × speed-weighted capacity (see
         ``ScheduleTrace.busy_window_utilization``)."""
         window = max((t.busy_window for t in self.traces), default=0.0)
-        if window <= 0 or self.total_slots == 0:
+        cap = self.weighted_capacity_slots
+        if window <= 0 or cap <= 0:
             return 0.0
-        return self.busy_client_time / (window * self.total_slots)
+        return self.weighted_busy_client_time / (window * cap)
 
     @property
     def generation_speed(self) -> float:
@@ -447,6 +485,7 @@ class FleetReport:
             "steal_events": self.steal_events,
             "offline_solver": self.offline_solver,
             "offline_gap": round(self.offline_gap, 6),
+            "speed_factors": [round(s, 4) for s in self.speed_factors],
             "replica_makespans_s": [round(t.makespan, 4) for t in self.traces],
             "replica_requests": [len(t.requests) for t in self.traces],
             "replica_summaries": per_replica,

@@ -1,3 +1,4 @@
+from ..core.hetero import ReplicaSpec
 from .engine import Engine, EngineConfig
 from .fleet import (
     DISPATCH_POLICIES,

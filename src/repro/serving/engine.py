@@ -235,12 +235,24 @@ class Engine:
         config: EngineConfig,
         profiler: Optional[OnlineProfiler] = None,
         sampler: Callable = greedy,
+        speed_factor: float = 1.0,
     ):
         self.model = model
         self.params = params
         self.cfg = config
         self.profiler = profiler or OnlineProfiler()
         self.sampler = sampler
+        # Relative machine speed for virtual-time accounting: every measured
+        # stage duration divides by this before it reaches the session
+        # clock, the trace, and the profiler. 1.0 is a no-op (the default,
+        # bare-engine case); a heterogeneous Fleet sets it per replica so a
+        # mixed-generation fleet is emulatable — and its scheduling
+        # decisions deterministically testable — on one host: a
+        # speed_factor=0.5 replica *is* a machine whose stages take twice
+        # as long, as far as every scheduler and profiler can observe.
+        if speed_factor <= 0:
+            raise ValueError("speed_factor must be positive")
+        self.speed_factor = float(speed_factor)
         if config.kv_layout == "paged":
             self.slots: Any = PagedSlotManager(
                 model, config.n_slots, config.max_len,
@@ -357,7 +369,7 @@ class Engine:
             self.params, jnp.asarray(tokens), cache, jnp.asarray(lengths)
         )
         logits.block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = (time.perf_counter() - t0) / self.speed_factor
         first = self._sample_first(logits, [r.rid for r in reqs])
         self._dev_pending = None          # prefill rewrites pending tokens
         # scatter only the real rows (the batch was padded to a bucket)
@@ -464,7 +476,7 @@ class Engine:
             jnp.asarray(slot_ids), jnp.asarray(starts), jnp.asarray(lens),
         )
         logits.block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = (time.perf_counter() - t0) / self.speed_factor
         first = self._sample_first(logits, [st.req.rid for st in states])
         self._dev_pending = None          # prefill rewrites pending tokens
         busy: Dict[int, int] = {}
@@ -582,7 +594,7 @@ class Engine:
             jnp.asarray(token_idx), jnp.asarray(sample_rows), self._base_key,
         )
         sampled = np.asarray(sampled)      # the ONE host sync for this round
-        dt = time.perf_counter() - t0
+        dt = (time.perf_counter() - t0) / self.speed_factor
         self._dev_pending = None           # pending rebuilt from host below
 
         finished_decode: List[int] = []
@@ -767,7 +779,7 @@ class Engine:
         block = np.asarray(token_block)                    # (K, n_slots)
         emitted_k = np.asarray(emitted_k)
         active_out = np.asarray(active_out)
-        dt = time.perf_counter() - t0
+        dt = (time.perf_counter() - t0) / self.speed_factor
         self._dev_pending = last_tok      # stays device-resident across stages
         self.decode_dispatches += 1
         finished: List[int] = []

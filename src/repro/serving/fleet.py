@@ -14,12 +14,27 @@ granularity:
     Fig. 6 at fleet scale). Each replica then serves its partition
     longest-first (Algorithm 1's sort).
   * **online** — arrivals route through a pluggable
-    ``ReplicaDispatchPolicy``: least-estimated-load using the shared
-    ``CostModel`` (HyGen-style replica-level dispatch), or round-robin.
-    When a replica drains early it *steals* the longest not-yet-started
-    request from the most-loaded replica's queue — Algorithm 1's
-    request-level straggler mitigation, applied across replicas so one
-    straggler cannot set the fleet makespan.
+    ``ReplicaDispatchPolicy``: least-estimated-load priced through each
+    replica's *live fitted* cost model (HyGen-style replica-level
+    dispatch), or round-robin. When a replica drains early it *steals* the
+    longest not-yet-started request from the most-loaded replica's queue —
+    Algorithm 1's request-level straggler mitigation, applied across
+    replicas so one straggler cannot set the fleet makespan. A steal is
+    only taken when the R||Cmax-priced finish time improves: the candidate
+    is priced through the thief's AND the donor's own cost models before
+    it moves.
+
+**Heterogeneous fleets** (``core.hetero``): each replica owns its own
+``CostModel`` + ``OnlineProfiler`` — seeded from a per-replica prior
+(``ReplicaSpec.speed_factor`` scaling the base model, or an explicit
+per-replica model) and refit from that replica's own stage timings. A
+replica's ``speed_factor`` also scales its virtual-time stage durations,
+so a mixed-generation fleet is emulatable and deterministically testable
+on one host. When replicas differ, the offline partition solves R||Cmax
+(``solve_hetero``: speed-scaled LPT + local search re-priced through each
+replica's model) and the fleet floor is
+``hetero_theoretical_lower_bound`` — both recover the paper's P||Cmax
+forms exactly in the homogeneous case.
 
 Execution model: all replicas share one set of model weights (the same
 ``params`` device buffers) but own independent KV pools / slot managers.
@@ -42,6 +57,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core.cost_model import CostModel
+from ..core.hetero import (
+    ReplicaSpec,
+    evaluate_hetero_assignment,
+    hetero_theoretical_lower_bound,
+    replica_request_weight,
+    solve_hetero,
+)
 from ..core.iteration import IterationPolicy, LagrangianPolicy
 from ..core.offline import (
     evaluate_assignment,
@@ -73,8 +95,10 @@ class ReplicaDispatchPolicy:
 
 class LeastLoadDispatch(ReplicaDispatchPolicy):
     """Route to the replica with the least estimated outstanding work
-    (queued + in-flight, priced by the shared ``CostModel``) — the
-    replica-level analogue of LPT's least-loaded-client rule."""
+    (queued + in-flight, priced by each replica's *current fitted* cost
+    model — so a replica whose profiler has learned it is slow prices its
+    own queue accordingly) — the replica-level analogue of LPT's
+    least-loaded-client rule, made speed-aware."""
 
     name = "least_load"
 
@@ -116,16 +140,26 @@ DISPATCH_POLICIES = {
 class FleetConfig:
     """Fleet shape + scheduling knobs.
 
-    ``assign`` picks the offline backlog partitioner ("lpt" =
-    ``solve_offline``'s LPT + local search; "round_robin" = the baseline
-    ablation). ``dispatch`` picks the online arrival router. Work stealing
-    moves queued (not-yet-started) requests from loaded to drained
-    replicas; token streams are unaffected (prompts and sampling are pure
-    functions of (seed, rid), independent of which replica runs them).
+    ``assign`` picks the offline backlog partitioner:
+
+      * "lpt"        — the full hybrid: ``solve_offline`` (P||Cmax LPT +
+                       local search) on a homogeneous fleet, upgrading to
+                       ``solve_hetero`` (R||Cmax, priced through each
+                       replica's own live cost model) when replicas differ;
+      * "lpt_blind"  — always the P||Cmax solve on the shared base model,
+                       ignoring replica speed — the speed-blind ablation a
+                       heterogeneous fleet is benchmarked against;
+      * "round_robin" — the unbalanced baseline ablation.
+
+    ``dispatch`` picks the online arrival router. Work stealing moves
+    queued (not-yet-started) requests from loaded to drained replicas,
+    gated on the R||Cmax-priced finish time actually improving; token
+    streams are unaffected (prompts and sampling are pure functions of
+    (seed, rid), independent of which replica runs them).
     """
 
     n_replicas: int = 2
-    assign: str = "lpt"                  # "lpt" | "round_robin"
+    assign: str = "lpt"                  # "lpt" | "lpt_blind" | "round_robin"
     dispatch: str = "least_load"         # key into DISPATCH_POLICIES
     work_stealing: bool = True
     local_search_rounds: int = 200
@@ -141,11 +175,12 @@ class Fleet:
         cost_model: Optional[CostModel] = None,
         sampler: Callable = greedy,
         profiler_factory: Optional[Callable[[], OnlineProfiler]] = None,
+        replica_specs: Optional[Sequence[ReplicaSpec]] = None,
     ):
         self.cfg = fleet_config or FleetConfig()
         if self.cfg.n_replicas <= 0:
             raise ValueError("n_replicas must be positive")
-        if self.cfg.assign not in ("lpt", "round_robin"):
+        if self.cfg.assign not in ("lpt", "lpt_blind", "round_robin"):
             raise ValueError(f"unknown assign method {self.cfg.assign!r}")
         if self.cfg.dispatch not in DISPATCH_POLICIES:
             raise ValueError(
@@ -153,23 +188,36 @@ class Fleet:
                 f"have {sorted(DISPATCH_POLICIES)}"
             )
         self.engine_cfg = engine_config
-        # the shared CostModel: offline partitioning, dispatch-load pricing,
-        # and the fleet lower bound all price work through this one model
+        # the shared *base* CostModel: the speed-1.0 prior every per-replica
+        # model derives from, and what the speed-blind paths price with
         self.cost_model = cost_model or CostModel()
+        if replica_specs is None:
+            replica_specs = [ReplicaSpec() for _ in range(self.cfg.n_replicas)]
+        self.specs: List[ReplicaSpec] = list(replica_specs)
+        if len(self.specs) != self.cfg.n_replicas:
+            raise ValueError(
+                f"replica_specs has {len(self.specs)} entries for "
+                f"{self.cfg.n_replicas} replicas"
+            )
         # N replicas over ONE set of weights: `params` is passed by
-        # reference, so every replica jit-calls the same device buffers;
-        # each Engine builds its own KV pool / slot manager / profiler
+        # reference, so every replica jit-calls the same device buffers.
+        # Each Engine owns its KV pool / slot manager AND its own profiler,
+        # seeded from its replica's prior cost model — per-replica fits are
+        # what make dispatch, stealing, and the R||Cmax solve speed-aware.
         self.engines = [
             Engine(
                 model, params, engine_config,
                 profiler=(
                     profiler_factory()
                     if profiler_factory is not None
-                    else OnlineProfiler(initial=self.cost_model)
+                    else OnlineProfiler(
+                        initial=spec.resolve_cost_model(self.cost_model)
+                    )
                 ),
                 sampler=sampler,
+                speed_factor=spec.speed_factor,
             )
-            for _ in range(self.cfg.n_replicas)
+            for spec in self.specs
         ]
         self.dispatcher: ReplicaDispatchPolicy = (
             DISPATCH_POLICIES[self.cfg.dispatch]()
@@ -180,38 +228,106 @@ class Fleet:
         self._all_requests: List[Request] = []
         self._offline_result = None
         self._resumed = False
+        # pricing_cost_models memo (invalidated by refits/restores via key)
+        self._pricing_key: Optional[tuple] = None
+        self._pricing_models: List[CostModel] = []
 
     @property
     def n_replicas(self) -> int:
         return self.cfg.n_replicas
 
+    @property
+    def heterogeneous(self) -> bool:
+        """True when any replica's construction spec differs from the
+        speed-1.0 shared-model default — the trigger for the R||Cmax solver
+        and lower bound. (Dispatch and stealing price through
+        ``pricing_cost_models`` regardless, homogeneous or not: even
+        nominally identical replicas drift apart as their profilers
+        refit.)"""
+        return any(
+            s.speed_factor != 1.0 or s.cost_model is not None
+            for s in self.specs
+        )
+
+    def pricing_cost_models(self) -> List[CostModel]:
+        """The per-replica cost models every cross-replica comparison
+        (dispatch load, steal gate, R||Cmax solve, fleet lower bound)
+        prices through: each replica's *current fitted* model once every
+        replica has FULLY refit (prefill + decode constants) from its own
+        measured stages, the per-replica priors until then. The gate
+        matters: paper-prior constants can sit orders of magnitude above a
+        model fitted to this host, so a fleet where only SOME replicas have
+        refit would compare incommensurate scales — the fitted
+        (cheap-looking) replicas would absorb the whole backlog and the
+        still-on-prior replicas would be starved out of ever collecting
+        enough samples to fit. ``full_fits`` (not ``fits``) is the gate: a
+        mixed-constants-only refit leaves the prefill/decode constants at
+        the prior, which is exactly the half-measured state the gate
+        exists to exclude."""
+        # memoized per (full-fit counters, live model identities): dispatch
+        # and stealing call this once per replica per decision, and the
+        # prior branch would otherwise re-construct R scaled models each
+        # time — O(R²) allocations per arrival
+        key = tuple(
+            (eng.profiler.fits, eng.profiler.full_fits,
+             id(eng.profiler.cost_model))
+            for eng in self.engines
+        )
+        if key == self._pricing_key:
+            return self._pricing_models
+        fitted = [eng.profiler.full_fits > 0 for eng in self.engines]
+        if any(fitted) and not all(fitted):
+            models = [
+                spec.resolve_cost_model(self.cost_model) for spec in self.specs
+            ]
+        else:
+            # all fully fitted (live, commensurate: measured on this host)
+            # — or none, where each profiler still holds exactly its prior
+            models = [eng.profiler.cost_model for eng in self.engines]
+        self._pricing_key = key
+        self._pricing_models = models
+        return models
+
+    def replica_cost_model(self, i: int) -> CostModel:
+        """Replica ``i``'s current pricing model (see
+        ``pricing_cost_models`` for the live-fit-vs-prior gate)."""
+        return self.pricing_cost_models()[i]
+
     # ------------------------------------------------------------------ #
-    # Load estimation (the shared-cost-model pricing dispatch uses)       #
+    # Load estimation (per-replica live-cost-model pricing)              #
     # ------------------------------------------------------------------ #
-    def _request_weight_s(self, req: Request, remaining_decode: int) -> float:
-        cm = self.cost_model
-        n = self.engine_cfg.n_slots
-        return cm.prefill_time(req.n_prefill) + cm.estimated_decode_completion(
-            max(remaining_decode, 0), n
+    def _request_weight_s(
+        self, req: Request, remaining_decode: int, cm: CostModel
+    ) -> float:
+        # the ONE per-request pricing rule, shared with the offline weight
+        # matrix (core.hetero) so solve and dispatch can never diverge
+        return replica_request_weight(
+            req, cm, self.engine_cfg.n_slots, remaining_decode=remaining_decode
         )
 
     def estimated_load_s(self, i: int) -> float:
         """Estimated seconds of outstanding work per slot on replica ``i``:
         queued requests (full weight), in-flight chunked prefills, and the
         remaining decode of every bound slot, spread over the slot count —
-        the replica-level ``remain_token`` of Algorithm 1, in seconds."""
+        the replica-level ``remain_token`` of Algorithm 1, in seconds,
+        priced through replica ``i``'s own fitted cost model (a slow
+        replica's queue is worth more seconds than the same queue on a
+        fast one)."""
         eng = self.engines[i]
+        cm = self.replica_cost_model(i)
         total = 0.0
         for r in eng._sv.scheduler.queued:
-            total += self._request_weight_s(r, int(r.n_decode_est or r.n_decode))
+            total += self._request_weight_s(
+                r, int(r.n_decode_est or r.n_decode), cm
+            )
         for st in eng._chunking.values():
             total += self._request_weight_s(
-                st.req, int(st.req.n_decode_est or st.req.n_decode)
+                st.req, int(st.req.n_decode_est or st.req.n_decode), cm
             )
         for slot in eng.slots.active_slots:
             req = eng.slots.request_of[slot]
             rem = int(req.n_decode_est or req.n_decode) - eng.slots.emitted[slot]
-            total += self.cost_model.estimated_decode_completion(
+            total += cm.estimated_decode_completion(
                 max(rem, 0), eng.cfg.n_slots
             )
         return total / eng.cfg.n_slots
@@ -241,16 +357,40 @@ class Fleet:
             key=lambda r: (r.arrival, r.rid),
         )
         n = self.cfg.n_replicas
-        if self.cfg.assign == "lpt":
-            self._offline_result = solve_offline(
+        slots = self.engine_cfg.n_slots
+        live_cms = self.pricing_cost_models()
+        if self.cfg.assign == "lpt" and self.heterogeneous:
+            # R||Cmax: the partition prices each request through every
+            # replica's OWN live fit (speed-scaled LPT + local search)
+            self._offline_result = solve_hetero(
+                offline, live_cms, slots,
+                local_search_rounds=self.cfg.local_search_rounds,
+            )
+        elif self.cfg.assign in ("lpt", "lpt_blind"):
+            blind = solve_offline(
                 offline, n, self.cost_model,
                 local_search_rounds=self.cfg.local_search_rounds,
             )
+            if self.heterogeneous:
+                # speed-blind ablation on a mixed fleet: keep the P||Cmax
+                # partition but report honest per-replica loads and the
+                # R||Cmax bound, so blind-vs-aware runs compare like for like
+                self._offline_result = evaluate_hetero_assignment(
+                    offline, blind.assignment, live_cms, slots,
+                    solver="lpt_blind",
+                )
+            else:
+                self._offline_result = blind
         else:
-            self._offline_result = evaluate_assignment(
-                offline, round_robin_assign(offline, n), n, self.cost_model,
-                solver="round_robin",
-            )
+            rr = round_robin_assign(offline, n)
+            if self.heterogeneous:
+                self._offline_result = evaluate_hetero_assignment(
+                    offline, rr, live_cms, slots, solver="round_robin",
+                )
+            else:
+                self._offline_result = evaluate_assignment(
+                    offline, rr, n, self.cost_model, solver="round_robin",
+                )
         parts = split_requests(offline, self._offline_result.assignment)
         self._central = online
         base = policy_name or f"fleet/{self.cfg.assign}"
@@ -277,11 +417,12 @@ class Fleet:
         """Cost-model estimate of the absolute fleet time at which replica
         ``j`` next frees a slot: its clock plus the smallest remaining
         per-slot work (decode rounds left, or chunk tokens + decode for a
-        mid-prefill slot). The steal gate compares this against the thief's
-        clock — measured clocks alone are not comparable when one replica's
-        stages carried one-off costs (e.g. first-hit compiles)."""
+        mid-prefill slot), priced through replica ``j``'s own fitted model.
+        The steal gate compares this against the thief's clock — measured
+        clocks alone are not comparable when one replica's stages carried
+        one-off costs (e.g. first-hit compiles)."""
         eng = self.engines[j]
-        cm = self.cost_model
+        cm = self.replica_cost_model(j)
         waits = []
         for slot in eng.slots.active_slots:
             req = eng.slots.request_of[slot]
@@ -298,11 +439,43 @@ class Fleet:
             )
         return eng.clock + (min(waits) if waits else 0.0)
 
+    def _steal_improves(self, thief: int, donor: int, victim: Request) -> bool:
+        """The R||Cmax steal gate: the move is taken only when BOTH
+
+          * the victim's estimated finish time improves — the thief starts
+            it now (its own clock) and runs it at its own speed, versus
+            waiting for the donor's earliest freed slot and running at the
+            donor's speed; and
+          * the pair's estimated *completion* makespan improves — moving
+            work onto a slower starving replica can finish the victim
+            sooner yet make the thief the fleet's new straggler, which is
+            exactly the regression R||Cmax pricing exists to prevent.
+
+        Every term is priced through that replica's own fitted cost model,
+        so a fast drained replica readily steals from a slow loaded one
+        while the reverse steal prices itself out unless the donor's queue
+        is deep enough that the move helps even at the thief's speed."""
+        cms = self.pricing_cost_models()
+        est = int(victim.n_decode_est or victim.n_decode)
+        w_thief = self._request_weight_s(victim, est, cms[thief])
+        w_donor = self._request_weight_s(victim, est, cms[donor])
+        thief_finish = self.engines[thief].clock + w_thief
+        donor_finish = self._earliest_slot_free_s(donor) + w_donor
+        if thief_finish >= donor_finish:
+            return False
+        n = self.engine_cfg.n_slots
+        thief_done = self.engines[thief].clock + self.estimated_load_s(thief)
+        donor_done = self.engines[donor].clock + self.estimated_load_s(donor)
+        before = max(thief_done, donor_done)
+        after = max(thief_done + w_thief / n, donor_done - w_donor / n)
+        return after < before - 1e-12
+
     def _try_steal(self) -> None:
         """Move the longest queued request from the most-loaded replica to
         each starving one (idle slot, empty queue). Queued work cannot start
         on its owner (all donor slots busy — otherwise it would not be
-        queued), so a drained replica always runs it sooner."""
+        queued); the steal commits only when the R||Cmax-priced finish time
+        improves (``_steal_improves``)."""
         for i, eng in enumerate(self.engines):
             sched = eng._sv.scheduler
             idle_slots = [
@@ -318,20 +491,21 @@ class Fleet:
                 and all(
                     s in other._chunking for s in other.slots.free_slots
                 )
-                # the thief starts stolen work at its own clock; a donor
-                # that will free a slot before then would run the request
-                # sooner itself — only steal when the thief wins the race
-                and self._earliest_slot_free_s(j) >= eng.clock
             ]
-            if not donors:
-                continue
-            j = max(donors, key=lambda k: (self.estimated_load_s(k), -k))
-            victim = self.engines[j]._sv.scheduler.steal_longest()
-            if victim is None:
-                continue
-            sched.push(victim)
-            self.steal_events += 1
-            self.steal_log.append({"rid": victim.rid, "from": j, "to": i})
+            # most-loaded donors first (Algorithm 1's argmax remain_token)
+            for j in sorted(
+                donors, key=lambda k: (-self.estimated_load_s(k), k)
+            ):
+                donor_sched = self.engines[j]._sv.scheduler
+                victim = donor_sched.peek_longest()
+                if victim is None or not self._steal_improves(i, j, victim):
+                    continue
+                stolen = donor_sched.steal_longest()
+                assert stolen is victim
+                sched.push(stolen)
+                self.steal_events += 1
+                self.steal_log.append({"rid": stolen.rid, "from": j, "to": i})
+                break
 
     def step(self) -> bool:
         """Advance the fleet by one stage on the lowest-clock replica with
@@ -372,11 +546,21 @@ class Fleet:
             for eng in self.engines
         ]
         served = [r for t in traces for r in t.requests]
-        lb = theoretical_lower_bound(
-            served if served else self._all_requests,
-            self.cfg.n_replicas * self.engine_cfg.n_slots,
-            self.cost_model,
-        )
+        lb_requests = served if served else self._all_requests
+        if self.heterogeneous:
+            # R||Cmax floor through the live per-replica fits; recovers the
+            # flat-pool P||Cmax bound exactly when the fits coincide
+            lb = hetero_theoretical_lower_bound(
+                lb_requests,
+                self.pricing_cost_models(),
+                self.engine_cfg.n_slots,
+            )
+        else:
+            lb = theoretical_lower_bound(
+                lb_requests,
+                self.cfg.n_replicas * self.engine_cfg.n_slots,
+                self.cost_model,
+            )
         report = FleetReport(
             policy_name=(
                 f"fleet/{self.cfg.assign}+{self.dispatcher.name}"
@@ -386,6 +570,7 @@ class Fleet:
             slots_per_replica=self.engine_cfg.n_slots,
             traces=traces,
             lower_bound_s=lb.total,
+            speed_factors=[s.speed_factor for s in self.specs],
             steal_events=self.steal_events,
             # a resumed fleet has no offline solve of its own (the partition
             # happened before the checkpoint)
@@ -445,6 +630,16 @@ class Fleet:
         ]
         return {
             "engines": [eng.state_dict() for eng in self.engines],
+            # per-replica profiler + fitted-cost-model state: a restored
+            # heterogeneous fleet must keep pricing dispatch/stealing/solves
+            # through what each replica had LEARNED, not its cold prior
+            "profilers": [eng.profiler.state_dict() for eng in self.engines],
+            # construction-time speeds, so a restore into a fleet built
+            # with different specs fails loudly instead of silently
+            # dropping the emulated speed asymmetry
+            "speed_factors": np.asarray(
+                [s.speed_factor for s in self.specs], dtype=np.float64
+            ),
             "clocks": np.asarray(
                 [eng.clock for eng in self.engines], dtype=np.float64
             ),
@@ -468,6 +663,15 @@ class Fleet:
         earlier tokens live in the pre-checkpoint output record, so the
         restored fleet's traces cover only post-restore work and
         ``finish_serve`` skips full-coverage validation)."""
+        if "speed_factors" in state:
+            saved = [float(s) for s in np.asarray(state["speed_factors"])]
+            mine = [s.speed_factor for s in self.specs]
+            if saved != mine:
+                raise ValueError(
+                    f"checkpoint was written by a fleet with speed_factors "
+                    f"{saved}, but this fleet has {mine} — construct the "
+                    f"restoring Fleet with the same replica_specs"
+                )
         self._resumed = True
         self.steal_events = int(state.get("steal_events", 0))
         # steal_log entries are not checkpointed (steal_events is), and any
@@ -493,6 +697,8 @@ class Fleet:
                 policy_name=f"{base}/r{i}(resumed)", track_requests=True,
             )
             eng.load_state_dict(state["engines"][i], requests_by_rid)
+            if "profilers" in state:
+                eng.profiler.load_state_dict(state["profilers"][i])
             # re-attach bound requests to their clients (mid-chunk slots
             # stay current=None — _chunking owns them until the final chunk)
             for slot, req in enumerate(eng.slots.request_of):

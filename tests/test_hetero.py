@@ -1,0 +1,569 @@
+"""Heterogeneous fleet scheduling: the R||Cmax offline solver and lower
+bounds (``core.hetero``), per-replica cost models / speed factors in the
+fleet, speed-aware dispatch and work stealing, and checkpointing of
+per-replica profiler state."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import (
+    CostModel,
+    FleetReport,
+    GlobalQueueScheduler,
+    LagrangianPolicy,
+    ReplicaSpec,
+    Request,
+    ScheduleTrace,
+    StageKind,
+    StageRecord,
+    build_clients,
+    evaluate_hetero_assignment,
+    hetero_lp_lower_bound,
+    hetero_theoretical_lower_bound,
+    hetero_weights,
+    round_robin_assign,
+    solve_hetero,
+    solve_offline,
+    theoretical_lower_bound,
+)
+from repro.models.layers import init_params
+from repro.models.transformer import TransformerLM
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.fleet import Fleet, FleetConfig
+from repro.serving.profiler import OnlineProfiler
+
+CFG = ArchConfig(
+    name="demo", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256,
+)
+CM = CostModel(level_caps=(32, 64, 128))
+ENGINE_CFG = dict(
+    n_slots=2, max_len=64, prefill_seq_buckets=(32,),
+    kv_layout="paged", page_size=16, prefill_chunk=16,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = TransformerLM(CFG)
+    params = init_params(jax.random.key(0), model.param_defs())
+    return model, params
+
+
+def _requests(n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            n_prefill=8 + int(rng.integers(0, 12)),
+            n_decode=4 + int(rng.integers(0, 28)),
+        )
+        for i in range(n)
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# Cost-model scaling                                                          #
+# --------------------------------------------------------------------------- #
+def test_scaled_cost_model_halves_durations():
+    cm = CostModel(level_caps=(64, 128))
+    fast = cm.scaled(2.0)
+    assert fast.prefill_time(100) == pytest.approx(cm.prefill_time(100) / 2)
+    assert fast.decode_round_time(8) == pytest.approx(
+        cm.decode_round_time(8) / 2
+    )
+    assert fast.decode_dispatch == pytest.approx(cm.decode_dispatch / 2)
+    # token capacities are not times and must not scale
+    assert fast.level_caps == cm.level_caps
+    assert cm.scaled(1.0) == cm
+    with pytest.raises(ValueError):
+        cm.scaled(0.0)
+
+
+def test_replica_spec_resolves_prior():
+    base = CostModel(level_caps=(64, 128))
+    assert ReplicaSpec(speed_factor=0.5).resolve_cost_model(base) == base.scaled(0.5)
+    explicit = CostModel(decode_overhead=1.23, level_caps=(64, 128))
+    assert (
+        ReplicaSpec(speed_factor=0.5, cost_model=explicit).resolve_cost_model(base)
+        is explicit
+    )
+    with pytest.raises(ValueError):
+        ReplicaSpec(speed_factor=-1.0)
+
+
+# --------------------------------------------------------------------------- #
+# Lower bounds                                                                #
+# --------------------------------------------------------------------------- #
+def test_hetero_wallclock_bound_reduces_exactly_to_p_cmax():
+    """Equal speed factors ⇒ the R||Cmax fleet floor IS the paper's
+    P||Cmax bound at n_clients = replicas × slots, bit-for-bit."""
+    reqs = _requests(20)
+    for n_rep, slots in ((2, 4), (3, 2), (1, 8)):
+        cms = [CM.scaled(1.0) for _ in range(n_rep)]
+        het = hetero_theoretical_lower_bound(reqs, cms, slots)
+        hom = theoretical_lower_bound(reqs, n_rep * slots, CM)
+        assert het.total == hom.total
+        assert het.t_prefill_star == hom.t_prefill_star
+        assert het.t_decode_star == hom.t_decode_star
+    # ... and at a uniformly-scaled speed, to the bound of the scaled model
+    cms = [CM.scaled(0.5), CM.scaled(0.5)]
+    het = hetero_theoretical_lower_bound(reqs, cms, 4)
+    assert het.total == theoretical_lower_bound(reqs, 8, CM.scaled(0.5)).total
+
+
+def test_hetero_wallclock_bound_between_speeds():
+    """A mixed-speed fleet's floor sits strictly between the all-fast and
+    all-slow homogeneous floors, and never above any achieved-assignment
+    makespan estimate."""
+    reqs = _requests(20)
+    fast, slow = CM.scaled(1.0), CM.scaled(0.5)
+    mixed = hetero_theoretical_lower_bound(reqs, [fast, slow], 4).total
+    all_fast = hetero_theoretical_lower_bound(reqs, [fast, fast], 4).total
+    all_slow = hetero_theoretical_lower_bound(reqs, [slow, slow], 4).total
+    assert all_fast < mixed < all_slow
+
+
+def test_hetero_lp_bound_reduces_to_p_cmax_form():
+    """Identical columns ⇒ max(mean per-client load, max item) over the
+    flat pool of R·slots clients — the P||Cmax LP-bound form."""
+    reqs = _requests(15)
+    w = hetero_weights(reqs, [CM, CM], 4)
+    col = w[:, 0]
+    assert hetero_lp_lower_bound(w, slots=4) == pytest.approx(
+        max(float(col.max()), float(col.sum()) / 8)
+    )
+    assert hetero_lp_lower_bound(np.zeros((0, 2)), slots=4) == 0.0
+
+
+def test_hetero_lp_bound_floors_every_assignment():
+    reqs = _requests(16)
+    cms = [CM.scaled(1.0), CM.scaled(0.4)]
+    w = hetero_weights(reqs, cms, 4)
+    lb = hetero_lp_lower_bound(w, slots=4)
+    het = solve_hetero(reqs, cms, 4)
+    rr = evaluate_hetero_assignment(
+        reqs, round_robin_assign(reqs, 2), cms, 4, solver="rr"
+    )
+    blind = evaluate_hetero_assignment(
+        reqs, solve_offline(reqs, 2, CM).assignment, cms, 4, solver="blind"
+    )
+    for result in (het, rr, blind):
+        assert lb <= result.makespan_est + 1e-9
+    assert het.lp_lower_bound == pytest.approx(lb)
+
+
+# --------------------------------------------------------------------------- #
+# R||Cmax solver                                                              #
+# --------------------------------------------------------------------------- #
+def test_solve_hetero_beats_speed_blind_on_two_speed_fleet():
+    reqs = _requests(20)
+    cms = [CM.scaled(1.0), CM.scaled(0.5)]
+    het = solve_hetero(reqs, cms, 4)
+    blind = evaluate_hetero_assignment(
+        reqs, solve_offline(reqs, 2, CM).assignment, cms, 4, solver="blind"
+    )
+    rr = evaluate_hetero_assignment(
+        reqs, round_robin_assign(reqs, 2), cms, 4, solver="rr"
+    )
+    assert het.makespan_est < blind.makespan_est
+    assert het.makespan_est < rr.makespan_est
+    # the fast replica carries the larger share of the backlog
+    assert len(het.assignment[0]) > len(het.assignment[1])
+    # all requests assigned exactly once
+    assigned = sorted(rid for part in het.assignment for rid in part)
+    assert assigned == [r.rid for r in reqs]
+
+
+def test_solve_hetero_homogeneous_matches_p_cmax_quality():
+    """On identical replicas the R||Cmax solver is just LPT + local search;
+    its makespan estimate must match solve_offline's (same optimum on a
+    P||Cmax instance, modulo tie-breaks) up to the LP gap."""
+    reqs = _requests(18)
+    cms = [CM, CM, CM]
+    het = solve_hetero(reqs, cms, 4)
+    # solve_offline prices decode-only weights; re-evaluate its partition on
+    # the hetero (prefill+decode) matrix so both sides use identical units
+    blind = evaluate_hetero_assignment(
+        reqs, solve_offline(reqs, 3, CM).assignment, cms, 4, solver="blind"
+    )
+    assert het.makespan_est == pytest.approx(blind.makespan_est, rel=0.05)
+
+
+# --------------------------------------------------------------------------- #
+# Speed-weighted fleet utilization (satellite: capacity-weighted denominator) #
+# --------------------------------------------------------------------------- #
+def _trace(busy_until: float, span: float, n_clients: int = 2) -> ScheduleTrace:
+    t = ScheduleTrace(num_clients=n_clients, policy_name="synthetic")
+    t.stages.append(
+        StageRecord(
+            kind=StageKind.DECODE, t_start=0.0, t_end=busy_until, bin_index=0,
+            busy={c: c for c in range(n_clients)}, tokens=1, rounds=1,
+        )
+    )
+    if span > busy_until:
+        # idle tail: a zero-client stage pinning the makespan
+        t.stages.append(
+            StageRecord(
+                kind=StageKind.DECODE, t_start=span, t_end=span, bin_index=0,
+                busy={}, tokens=0,
+            )
+        )
+    return t
+
+
+def test_fleet_utilization_weights_capacity_by_speed():
+    # fast replica busy the whole makespan, slow replica fully idle
+    traces = [_trace(10.0, 10.0), _trace(0.0, 10.0)]
+    hom = FleetReport(
+        policy_name="p", n_replicas=2, slots_per_replica=2, traces=traces,
+    )
+    het = FleetReport(
+        policy_name="p", n_replicas=2, slots_per_replica=2, traces=traces,
+        speed_factors=[1.0, 0.5],
+    )
+    # unweighted: half the slot-time busy
+    assert hom.utilization == pytest.approx(0.5)
+    # weighted: the idle replica only had half the capacity to waste
+    assert het.utilization == pytest.approx(1.0 / 1.5)
+    assert het.utilization > hom.utilization
+    assert het.weighted_capacity_slots == pytest.approx(3.0)
+    # both replicas fully busy ⇒ 1.0 under either weighting
+    full = [_trace(10.0, 10.0), _trace(10.0, 10.0)]
+    assert FleetReport(
+        policy_name="p", n_replicas=2, slots_per_replica=2, traces=full,
+        speed_factors=[1.0, 0.5],
+    ).utilization == pytest.approx(1.0)
+    # explicit all-1.0 factors reduce exactly to the unweighted metric
+    assert FleetReport(
+        policy_name="p", n_replicas=2, slots_per_replica=2, traces=traces,
+        speed_factors=[1.0, 1.0],
+    ).utilization == hom.utilization
+
+
+# --------------------------------------------------------------------------- #
+# Fleet integration                                                           #
+# --------------------------------------------------------------------------- #
+def _hetero_fleet(model, params, specs, engine_kw=None, **fc_kw):
+    fc_kw.setdefault("n_replicas", len(specs))
+    return Fleet(
+        model, params, EngineConfig(**ENGINE_CFG, **(engine_kw or {})),
+        FleetConfig(**fc_kw), cost_model=CM, replica_specs=specs,
+    )
+
+
+def test_hetero_fleet_partitions_by_speed_and_validates(model_and_params):
+    model, params = model_and_params
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.25)]
+    fleet = _hetero_fleet(
+        model, params, specs, assign="lpt", work_stealing=False,
+        engine_kw=dict(decode_horizon=1, mixed_schedule=False),
+    )
+    assert fleet.heterogeneous
+    # 12 equal requests at a 4× speed ratio: enough work that parking a
+    # couple on the slow replica strictly improves the span (with only a
+    # handful, the solver rightly gives the fast replica everything — a
+    # single request's span on the slow replica is already 4× a fast one)
+    reqs = [Request(rid=i, n_prefill=10, n_decode=12) for i in range(12)]
+    report = fleet.serve(reqs, LagrangianPolicy)
+    report.validate()
+    assert report.offline_solver == "hetero-lpt+local_search"
+    assert report.speed_factors == [1.0, 0.25]
+    n_fast = len(report.traces[0].requests)
+    n_slow = len(report.traces[1].requests)
+    assert n_fast > n_slow > 0
+    assert n_fast + n_slow == 12
+    assert report.lower_bound_s > 0
+    s = report.summary()
+    assert s["speed_factors"] == [1.0, 0.25]
+    # the slow replica's virtual stage clock runs ~4× slower, so its
+    # per-request wall share is visibly longer despite the smaller share
+    assert report.traces[1].makespan > 0
+
+
+def test_homogeneous_fleet_unchanged_solver_and_speed(model_and_params):
+    model, params = model_and_params
+    fleet = Fleet(
+        model, params, EngineConfig(**ENGINE_CFG), FleetConfig(n_replicas=2),
+        cost_model=CM,
+    )
+    assert not fleet.heterogeneous
+    assert all(e.speed_factor == 1.0 for e in fleet.engines)
+    report = fleet.serve(
+        [Request(rid=i, n_prefill=8, n_decode=6) for i in range(4)],
+        LagrangianPolicy,
+    )
+    assert report.offline_solver == "lpt+local_search"
+    report.validate()
+
+
+def test_speed_factor_scales_virtual_makespan(model_and_params):
+    """The same workload on a speed-0.5 engine reports ~2× the virtual
+    makespan with identical tokens (the emulation contract)."""
+    model, params = model_and_params
+
+    def run(speed):
+        eng = Engine(
+            model, params, EngineConfig(**ENGINE_CFG), speed_factor=speed,
+        )
+        eng.profiler.cost_model = CM
+        reqs = [Request(rid=i, n_prefill=10, n_decode=10) for i in range(4)]
+        clients = build_clients(2, reqs, None)
+        trace = eng.serve(
+            reqs, clients, GlobalQueueScheduler(reqs), LagrangianPolicy()
+        )
+        return eng.generated, trace.makespan
+
+    # warm both paths once so compile spikes don't land in either run
+    run(1.0)
+    run(0.5)
+    fast_gen, fast_mk = run(1.0)
+    slow_gen, slow_mk = run(0.5)
+    assert fast_gen == slow_gen
+    # exact ×2 up to CPU noise between the two runs — assert a wide band
+    assert slow_mk > 1.3 * fast_mk
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: a profiler refit must change the routing decision               #
+# --------------------------------------------------------------------------- #
+def test_refit_changes_least_load_routing(model_and_params):
+    """Regression for dispatch pricing through the construction-time shared
+    CostModel: after replica 0's profiler refits to expensive measured
+    stages, ``least_load`` must route the next arrival to replica 1 —
+    under the old shared-model pricing the decision could never change."""
+    model, params = model_and_params
+    fleet = Fleet(
+        model, params, EngineConfig(**ENGINE_CFG),
+        FleetConfig(n_replicas=2, assign="lpt", dispatch="least_load"),
+        cost_model=CM,
+        profiler_factory=lambda: OnlineProfiler(initial=CM, refit_every=4),
+    )
+    reqs = [Request(rid=i, n_prefill=8, n_decode=20) for i in range(4)]
+    fleet.begin_serve(reqs, LagrangianPolicy)
+    # LPT split 2+2: identical queues, identical priors → tie breaks to 0
+    late = Request(rid=99, n_prefill=8, n_decode=20, arrival=0.001)
+    assert fleet.dispatcher.choose(fleet, late) == 0
+    # replica 0 refits to a model ~100× the prior; replica 1 refits to the
+    # prior's own timings (both fitted → live pricing engages)
+    slow_p = fleet.engines[0].profiler
+    slow_p.record_prefill(32, 3.0)
+    slow_p.record_prefill(64, 6.0)
+    slow_p.record_decode(1, 2.0)
+    slow_p.record_decode(2, 3.9)
+    fast_p = fleet.engines[1].profiler
+    fast_p.record_prefill(32, CM.prefill_time(32))
+    fast_p.record_prefill(64, CM.prefill_time(64))
+    fast_p.record_decode(1, CM.decode_round_time(1))
+    fast_p.record_decode(2, CM.decode_round_time(2))
+    assert slow_p.fits >= 1 and fast_p.fits >= 1
+    assert fleet.replica_cost_model(0).decode_round_time(2) > \
+        fleet.replica_cost_model(1).decode_round_time(2)
+    assert fleet.dispatcher.choose(fleet, late) == 1
+
+
+def test_pricing_gate_holds_priors_until_all_replicas_fit(model_and_params):
+    """A half-fitted fleet must NOT mix measured and prior scales: until
+    every replica has refit, cross-replica pricing uses the per-replica
+    priors (which already encode the speed ratio)."""
+    model, params = model_and_params
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.5)]
+    fleet = _hetero_fleet(model, params, specs, assign="lpt")
+    priors = [s.resolve_cost_model(CM) for s in specs]
+    assert fleet.pricing_cost_models() == priors
+    # replica 0 alone refits to (cheap) measured timings
+    p0 = fleet.engines[0].profiler
+    p0.refit_every = 4
+    p0.record_prefill(32, 1e-4)
+    p0.record_prefill(64, 2e-4)
+    p0.record_decode(1, 1e-4)
+    p0.record_decode(2, 1.5e-4)
+    assert p0.fits >= 1
+    # gate: still the priors (mixed scales would starve replica 1)
+    assert fleet.pricing_cost_models() == priors
+    # once replica 1 fits too, live models engage
+    p1 = fleet.engines[1].profiler
+    p1.refit_every = 4
+    p1.record_prefill(32, 2e-4)
+    p1.record_prefill(64, 4e-4)
+    p1.record_decode(1, 2e-4)
+    p1.record_decode(2, 3e-4)
+    assert p1.fits >= 1
+    live = fleet.pricing_cost_models()
+    assert live[0] is fleet.engines[0].profiler.cost_model
+    assert live[1] is fleet.engines[1].profiler.cost_model
+
+
+def test_mixed_only_refit_does_not_open_pricing_gate(model_and_params):
+    """A mixed-constants-only refit leaves the prefill/decode constants at
+    the prior — it must NOT count as 'this replica has measured itself'
+    for cross-replica pricing (the gate reads ``full_fits``, not
+    ``fits``)."""
+    model, params = model_and_params
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.5)]
+    fleet = _hetero_fleet(model, params, specs, assign="lpt")
+    priors = [s.resolve_cost_model(CM) for s in specs]
+    for i, eng in enumerate(fleet.engines):
+        p = eng.profiler
+        p.refit_every = 3
+        # mixed samples only: enough variation for fit_mixed_params but
+        # nothing for the full prefill/decode fit
+        p.record_mixed(1, 16, 0.01 * (i + 1))
+        p.record_mixed(2, 16, 0.02 * (i + 1))
+        p.record_mixed(2, 32, 0.03 * (i + 1))
+        assert p.fits >= 1 and p.full_fits == 0
+    # every replica "fit", but only mixed constants — still the priors
+    models = fleet.pricing_cost_models()
+    for m, prior in zip(models, priors):
+        assert m.decode_round_time(2) == prior.decode_round_time(2)
+        assert m.prefill_time(32) == prior.prefill_time(32)
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: work stealing under asymmetric speeds                            #
+# --------------------------------------------------------------------------- #
+def test_fast_replica_steals_from_slow_and_reduces_makespan(model_and_params):
+    """Round-robin piles the long requests onto the slow replica; the fast
+    one drains, steals, and the fleet makespan strictly improves over the
+    no-steal ablation — while the stolen request's tokens stay identical
+    to a bare-engine serve."""
+    model, params = model_and_params
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.25)]
+
+    def requests():
+        # odd rids (→ slow replica under round-robin) are decode-heavy:
+        # 3 longs behind 2 slots leaves one queued for the thief
+        out = []
+        for rid in range(6):
+            if rid % 2 == 1:
+                out.append(Request(rid=rid, n_prefill=10, n_decode=32))
+            else:
+                out.append(Request(rid=rid, n_prefill=8, n_decode=4))
+        return out
+
+    reports = {}
+    for stealing in (True, False):
+        fleet = _hetero_fleet(
+            model, params, specs, assign="round_robin",
+            dispatch="round_robin", work_stealing=stealing,
+            engine_kw=dict(decode_horizon=1, mixed_schedule=False),
+        )
+        fleet.warm_serving_shapes()
+        fleet.serve(requests(), LagrangianPolicy)      # warm
+        report = fleet.serve(requests(), LagrangianPolicy)
+        report.validate()
+        reports[stealing] = (report, fleet.generated, fleet)
+    steal_report, steal_gen, steal_fleet = reports[True]
+    nosteal_report, nosteal_gen, _ = reports[False]
+    assert steal_fleet.steal_events >= 1
+    # every stolen request moved fast-ward: from the slow donor (1) to the
+    # fast thief (0) — the R||Cmax gate prices the reverse move out
+    for e in steal_fleet.steal_log:
+        assert (e["from"], e["to"]) == (1, 0)
+    # the whole point: stealing strictly reduces the fleet makespan (the
+    # slow replica's ×4 virtual time dwarfs CPU timer noise)
+    assert steal_report.makespan < nosteal_report.makespan
+    # placement never changes tokens
+    assert steal_gen == nosteal_gen
+    eng = Engine(model, params, EngineConfig(**ENGINE_CFG))
+    eng.profiler.cost_model = CM
+    ref = requests()
+    clients = build_clients(2, ref, None)
+    eng.serve(ref, clients, GlobalQueueScheduler(ref), LagrangianPolicy())
+    assert eng.generated == steal_gen
+
+
+def test_steal_gate_prices_through_destination_models(model_and_params):
+    """The R||Cmax steal gate, in isolation: a fast thief stealing from a
+    slow donor improves the victim's priced finish time; the reverse move
+    prices itself out — even when the slow replica is the one starving."""
+    model, params = model_and_params
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.1)]
+    fleet = _hetero_fleet(
+        model, params, specs, assign="round_robin", dispatch="round_robin",
+    )
+    reqs = [Request(rid=i, n_prefill=10, n_decode=16) for i in range(4)]
+    fleet.begin_serve(reqs, LagrangianPolicy)
+    # nothing has run: both clocks are 0 and no slot is occupied, so the
+    # gate reduces to pure weight comparison through each replica's model
+    slow_victim = fleet.engines[1]._sv.scheduler.peek_longest()
+    assert slow_victim is not None
+    assert fleet._steal_improves(0, 1, slow_victim)
+    fast_victim = fleet.engines[0]._sv.scheduler.peek_longest()
+    assert fast_victim is not None
+    assert not fleet._steal_improves(1, 0, fast_victim)
+
+
+# --------------------------------------------------------------------------- #
+# Checkpoint / restore covers per-replica profiler state                      #
+# --------------------------------------------------------------------------- #
+def test_fleet_checkpoint_restores_profiler_state(model_and_params):
+    model, params = model_and_params
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.5)]
+    fleet = _hetero_fleet(model, params, specs, assign="lpt")
+
+    def requests():
+        return [
+            Request(rid=i, n_prefill=10 + 2 * (i % 3), n_decode=8 + 4 * (i % 4))
+            for i in range(6)
+        ]
+
+    fleet.begin_serve(requests(), LagrangianPolicy)
+    steps = 0
+    while steps < 8 and fleet.step():
+        steps += 1
+    # force distinguishable fitted state on each replica before snapshotting
+    for i, eng in enumerate(fleet.engines):
+        eng.profiler.refit_every = 4
+        eng.profiler.record_prefill(32, 0.01 * (i + 1))
+        eng.profiler.record_prefill(64, 0.02 * (i + 1))
+        eng.profiler.record_decode(1, 0.004 * (i + 1))
+        eng.profiler.record_decode(2, 0.007 * (i + 1))
+        assert eng.profiler.fits >= 1
+    state = jax.tree_util.tree_map(np.asarray, fleet.state_dict())
+
+    fleet2 = _hetero_fleet(model, params, specs, assign="lpt")
+    reqs2 = {r.rid: r for r in requests()}
+    fleet2.load_state_dict(state, reqs2)
+    for eng, eng2 in zip(fleet.engines, fleet2.engines):
+        assert eng2.profiler.cost_model == eng.profiler.cost_model
+        assert eng2.profiler.prefill_samples == eng.profiler.prefill_samples
+        assert eng2.profiler.decode_samples == eng.profiler.decode_samples
+        assert eng2.profiler.fits == eng.profiler.fits
+    # restored fleet still finishes and streams stay disjoint per request
+    while fleet2.step():
+        pass
+    report2 = fleet2.finish_serve()
+    seen = [r.rid for t in report2.traces for r in t.requests]
+    assert len(seen) == len(set(seen))
+
+
+def test_profiler_state_roundtrip_with_mixed_constants():
+    p = OnlineProfiler(initial=CostModel(level_caps=(64, 128)))
+    p.record_prefill(16, 0.01)
+    p.record_decode(2, 0.02, rounds=4)
+    p.record_mixed(2, 16, 0.03)
+    state = p.state_dict()
+    q = OnlineProfiler()
+    q.load_state_dict(state)
+    assert q.cost_model == p.cost_model
+    assert q.cost_model.mixed_overhead is None      # NaN round-trips to None
+    assert q.prefill_samples == [(16, 0.01)]
+    assert q.decode_samples == [(2, 4, 0.02)]
+    assert q.mixed_samples == [(2, 16, 0.03)]
+    # fitted mixed constants survive too
+    import dataclasses as dc
+    p.cost_model = dc.replace(p.cost_model, mixed_overhead=0.005)
+    q.load_state_dict(p.state_dict())
+    assert q.cost_model.mixed_overhead == pytest.approx(0.005)
+
+
+def test_replica_specs_length_validated(model_and_params):
+    model, params = model_and_params
+    with pytest.raises(ValueError):
+        Fleet(
+            model, params, EngineConfig(**ENGINE_CFG),
+            FleetConfig(n_replicas=2), cost_model=CM,
+            replica_specs=[ReplicaSpec()],
+        )

@@ -101,6 +101,15 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
         "mixed_rounds": eng.mixed_rounds,
         "prefill_stall_time_s": eng.prefill_stall_time,
         "p95_burst_token_latency_s": burst_decode_latency_p95(trace),
+        # SLO view: goodput counts only output tokens of requests that met
+        # their SLOs (requests with no SLO always count) — the quantity an
+        # overloaded serve should protect, next to raw throughput
+        "goodput_tok_s": trace.goodput,
+        "slo_attainment": trace.slo_attainment,
+        "slo_tracked": float(len(trace.slo_tracked_requests)),
+        "preemption_events": float(eng.preemption_events),
+        "peak_concurrency": float(eng.peak_concurrency),
+        "offline_deferrals": float(eng.offline_deferrals),
     }
     m.update(decode_latency_percentiles(trace))
     if eng.cfg.kv_layout == "paged":

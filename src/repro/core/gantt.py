@@ -77,11 +77,17 @@ def ascii_gantt(
                 occ[cid][col][state] += s.duration / (c1 - c0)
     chars = {0: ".", 1: "P", 2: "#", 3: "M"}
     out = io.StringIO()
+    slo_tag = ""
+    if trace.slo_tracked_requests:
+        slo_tag = (
+            f" goodput={trace.goodput:.1f} tok/s "
+            f"slo={trace.slo_attainment * 100:.0f}%"
+        )
     out.write(
         f"Gantt [{trace.policy_name}] makespan={trace.makespan:.2f}s "
         f"util={trace.utilization * 100:.2f}% "
         f"busy-window util={trace.busy_window_utilization * 100:.2f}% "
-        f"speed={trace.generation_speed:.1f} tok/s\n"
+        f"speed={trace.generation_speed:.1f} tok/s{slo_tag}\n"
     )
     for cid in rows:
         line = "".join(
@@ -109,11 +115,24 @@ def fleet_ascii_gantt(
     speeds = report._replica_speeds()
     hetero = any(s != 1.0 for s in speeds)
     out = io.StringIO()
+    slo_tag = ""
+    if any(t.slo_tracked_requests for t in report.traces):
+        slo_tag = (
+            f" goodput={report.goodput:.1f} tok/s "
+            f"slo={report.slo_attainment * 100:.0f}%"
+        )
+    fault_tag = ""
+    if report.meta.get("dead_replicas"):
+        fault_tag = (
+            f" dead={int(report.meta['dead_replicas'])} "
+            f"recovered={int(report.meta.get('recovered_requests', 0))}"
+        )
     out.write(
         f"Fleet Gantt [{report.policy_name}] replicas={report.n_replicas} "
         f"makespan={span:.2f}s util={report.utilization * 100:.2f}%"
         f"{' (speed-weighted)' if hetero else ''} "
-        f"lb_ratio={report.lb_ratio:.2f} steals={report.steal_events}\n"
+        f"lb_ratio={report.lb_ratio:.2f} steals={report.steal_events}"
+        f"{slo_tag}{fault_tag}\n"
     )
     for i, trace in enumerate(report.traces):
         # a slow replica's rows render visibly denser per request: the same

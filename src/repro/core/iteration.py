@@ -105,10 +105,32 @@ class Decision:
 
 class IterationPolicy:
     name = "base"
+    # SLO-urgency coupling for the mixed-step share (see ``_slo_urgency``).
+    # Instances may set False for the SLO-blind ablation — requests still
+    # *carry* their SLOs for goodput accounting; the scheduler just stops
+    # looking at them.
+    slo_urgency: bool = True
 
     def decide_prefill(self, snap: SystemSnapshot, cost_model: CostModel) -> bool:
         """True → insert a prefill stage now; False → run a decode round."""
         raise NotImplementedError
+
+    def _slo_urgency(self, snap: SystemSnapshot) -> float:
+        """How close the candidate's most-pressed request is to blowing its
+        TTFT deadline: max over candidates of elapsed / ttft_slo (0.0 with
+        no deadlines in view). Crossing 1.0 means a deadline already passed.
+        The share pricing multiplies its admission-pressure weight w by
+        (1 + urgency), so a request nearing its deadline outbids the decode
+        latency it inflates — the graceful-degradation half of overload
+        control (the other half, offline admission throttling, lives in
+        ``serving.overload``)."""
+        if not self.slo_urgency:
+            return 0.0
+        u = 0.0
+        for r in snap.candidate.requests:
+            if r.ttft_slo_s is not None and r.ttft_slo_s > 0:
+                u = max(u, (snap.now - r.arrival) / r.ttft_slo_s)
+        return max(0.0, u)
 
     def decode_horizon(
         self, snap: SystemSnapshot, cost_model: CostModel, k_max: int = 1
@@ -179,6 +201,11 @@ class IterationPolicy:
         if waiters <= 0:
             return 0
         w = min(1.0, waiters / max(snap.n_clients, 1))
+        # SLO-urgency: a candidate nearing its TTFT deadline raises the
+        # admission-pressure weight past its nominal [0, 1] cap, so the
+        # priced share grows ~sqrt(1 + urgency) and the deadline outbids
+        # the decode latency it inflates.
+        w = w * (1.0 + self._slo_urgency(snap))
         t0 = cost_model.mixed_round_time(snap.n_active, 0)
         tp = cost_model.mixed_prefill_token_time
         if tp <= 0:

@@ -75,11 +75,17 @@ class RequestScheduler:
         self,
         idle_clients: Sequence[ClientState],
         max_tokens: int,
+        exclude: Set[int] = frozenset(),
     ) -> List[Tuple[ClientState, Request]]:
         """One candidate request per idle client, total prefill tokens ≤
         ``max_tokens`` (Eq. 6/16). A single request larger than the cap is
-        admitted alone (the engine runs it as an oversize stage)."""
-        claimed: Set[int] = set()
+        admitted alone (the engine runs it as an oversize stage).
+        ``exclude`` rids are skipped as if already claimed — an overload
+        policy that defers an FCFS queue head re-proposes with the deferred
+        rids excluded, so deferral cannot shadow admissible requests queued
+        behind them (livelock otherwise: the idle slot would be offered the
+        same deferred head forever)."""
+        claimed: Set[int] = set(exclude)
         batch: List[Tuple[ClientState, Request]] = []
         total = 0
         for client in idle_clients:
@@ -188,11 +194,12 @@ class SortingPreemptiveScheduler(RequestScheduler):
         self,
         idle_clients: Sequence[ClientState],
         max_tokens: int,
+        exclude: Set[int] = frozenset(),
     ) -> List[Tuple[ClientState, Request]]:
         """Heap-based batch proposal (same semantics as the generic one)."""
         import heapq
 
-        claimed: Set[int] = set()
+        claimed: Set[int] = set(exclude)
         batch: List[Tuple[ClientState, Request]] = []
         total = 0
         # Lazy max-heap over adjusted remain_token.

@@ -55,6 +55,12 @@ class Request:
     n_decode: int
     n_decode_est: Optional[int] = None
     arrival: float = 0.0
+    # Latency SLOs (None = no deadline declared). ``ttft_slo_s`` bounds
+    # time-to-first-token (first token time − arrival); ``tbt_slo_s`` bounds
+    # the request's mean time-between-tokens. Goodput counts only the output
+    # tokens of requests that met every SLO they declared (HyGen's metric).
+    ttft_slo_s: Optional[float] = None
+    tbt_slo_s: Optional[float] = None
 
     # Execution bookkeeping (filled by simulator/engine).
     client: Optional[int] = None
@@ -63,6 +69,14 @@ class Request:
     t_prefill_start: Optional[float] = None
     t_prefill_end: Optional[float] = None
     t_done: Optional[float] = None
+    # First-token time: set at the FIRST prefill completion only. Preemption
+    # recomputes a prefill (t_prefill_end moves), but TTFT is pinned to when
+    # the request's first token actually emerged.
+    t_first_token: Optional[float] = None
+    # Times this request was preempted from a bound slot (pages evicted,
+    # re-queued with its generated prefix). A preempted request re-prefills,
+    # so trace validation expects 1 + preemptions prefill completions.
+    preemptions: int = 0
 
     def __post_init__(self) -> None:
         if self.n_prefill <= 0:
@@ -84,6 +98,50 @@ class Request:
     def remaining_decode(self) -> int:
         return self.n_decode - self.decoded
 
+    def _t_first(self) -> Optional[float]:
+        # executors that predate first-token tracking (the simulator) only
+        # stamp t_prefill_end — equivalent when nothing is ever preempted
+        if self.t_first_token is not None:
+            return self.t_first_token
+        return self.t_prefill_end
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (None until the first token emerges)."""
+        t1 = self._t_first()
+        if t1 is None:
+            return None
+        return t1 - self.arrival
+
+    @property
+    def mean_tbt(self) -> Optional[float]:
+        """Mean time between tokens over the decode phase, preemption gaps
+        included (an evicted request honestly pays its recompute delay
+        here). None until done; 0.0 for single-token outputs."""
+        t1 = self._t_first()
+        if self.t_done is None or t1 is None:
+            return None
+        if self.n_decode <= 1:
+            return 0.0
+        return (self.t_done - t1) / (self.n_decode - 1)
+
+    @property
+    def has_slo(self) -> bool:
+        return self.ttft_slo_s is not None or self.tbt_slo_s is not None
+
+    @property
+    def slo_attained(self) -> bool:
+        """True when every declared SLO was met (vacuously true with none
+        declared). An unfinished request with a deadline counts as missed."""
+        if self.ttft_slo_s is not None:
+            if self.ttft is None or self.ttft > self.ttft_slo_s:
+                return False
+        if self.tbt_slo_s is not None:
+            tbt = self.mean_tbt
+            if tbt is None or tbt > self.tbt_slo_s:
+                return False
+        return True
+
     def reset(self) -> None:
         """Clear execution bookkeeping (so one workload can be re-simulated)."""
         self.client = None
@@ -92,6 +150,8 @@ class Request:
         self.t_prefill_start = None
         self.t_prefill_end = None
         self.t_done = None
+        self.t_first_token = None
+        self.preemptions = 0
 
 
 @dataclass
@@ -271,6 +331,50 @@ class ScheduleTrace:
     def num_bins(self) -> int:
         return 1 + max((s.bin_index for s in self.stages), default=-1)
 
+    # -- SLO attainment + goodput (the overload-control objective) ------ #
+    @property
+    def slo_tracked_requests(self) -> List[Request]:
+        """Requests that declared at least one SLO."""
+        return [r for r in self.requests if r.has_slo]
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of SLO-declaring requests that met every declared SLO
+        (1.0 when none declared any — nothing to miss)."""
+        tracked = self.slo_tracked_requests
+        if not tracked:
+            return 1.0
+        return sum(r.slo_attained for r in tracked) / len(tracked)
+
+    @property
+    def goodput_tokens(self) -> int:
+        """Output tokens of requests that met their SLOs (requests with no
+        SLO count in full — there was no deadline to miss)."""
+        return sum(r.n_decode for r in self.requests if r.slo_attained)
+
+    @property
+    def goodput(self) -> float:
+        """SLO-attaining output tokens per second of makespan (HyGen's
+        goodput). Equals ``generation_speed`` when every SLO is met or no
+        request declared one; the gap between the two is the throughput
+        the serve delivered too late to count."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.goodput_tokens / self.makespan
+
+    def ttft_p95(self) -> float:
+        """p95 TTFT over SLO-tracked requests (0.0 with none tracked)."""
+        vals = sorted(
+            r.ttft for r in self.slo_tracked_requests if r.ttft is not None
+        )
+        if not vals:
+            return 0.0
+        return vals[min(len(vals) - 1, int(0.95 * len(vals)))]
+
+    @property
+    def preemption_count(self) -> int:
+        return sum(r.preemptions for r in self.requests)
+
     def summary(self) -> Dict[str, float]:
         return {
             "policy": self.policy_name,
@@ -285,6 +389,10 @@ class ScheduleTrace:
             "busy_window_generation_speed_tok_s": round(
                 self.busy_window_generation_speed, 3
             ),
+            "goodput_tok_s": round(self.goodput, 3),
+            "slo_attainment": round(self.slo_attainment, 6),
+            "slo_tracked": len(self.slo_tracked_requests),
+            "preemptions": self.preemption_count,
             "prefill_time_s": round(self.total_prefill_time, 4),
             "decode_time_s": round(self.total_decode_time, 4),
             "max_decision_ms": round(max(self.decision_times_ms), 4)
@@ -302,7 +410,9 @@ class ScheduleTrace:
         """Invariant checks (used by tests and after every simulation).
 
         - stages tile the timeline with no overlap and no negative durations
-        - every request decoded exactly n_decode tokens, prefilled exactly once
+        - every request decoded exactly n_decode tokens and completed a
+          prefill exactly 1 + preemptions times (each preemption-by-eviction
+          recomputes the prefill from the generated prefix)
         - a client is never busy with two requests in one stage
         """
         t = 0.0
@@ -327,9 +437,12 @@ class ScheduleTrace:
                 for cid, rid in s.prefilled.items():
                     prefilled[rid] = prefilled.get(rid, 0) + 1
         for r in self.requests:
-            if prefilled.get(r.rid, 0) != 1:
+            expected = 1 + r.preemptions
+            if prefilled.get(r.rid, 0) != expected:
                 raise AssertionError(
-                    f"request {r.rid} prefilled {prefilled.get(r.rid, 0)} times"
+                    f"request {r.rid} prefilled {prefilled.get(r.rid, 0)} "
+                    f"times (expected {expected} for {r.preemptions} "
+                    f"preemptions)"
                 )
             if r.decoded != r.n_decode:
                 raise AssertionError(
@@ -463,6 +576,26 @@ class FleetReport:
         return sum(t.total_generated_tokens for t in self.traces) / span
 
     @property
+    def goodput(self) -> float:
+        """Fleet goodput: SLO-attaining output tokens across every replica
+        per second of fleet makespan (replicas run in parallel)."""
+        span = self.makespan
+        if span <= 0:
+            return 0.0
+        return sum(t.goodput_tokens for t in self.traces) / span
+
+    @property
+    def slo_attainment(self) -> float:
+        tracked = [r for t in self.traces for r in t.slo_tracked_requests]
+        if not tracked:
+            return 1.0
+        return sum(r.slo_attained for r in tracked) / len(tracked)
+
+    @property
+    def preemption_count(self) -> int:
+        return sum(t.preemption_count for t in self.traces)
+
+    @property
     def lb_ratio(self) -> float:
         """Fleet makespan over the flat-pool lower bound (≥ 1 ideally)."""
         if self.lower_bound_s <= 0:
@@ -480,6 +613,9 @@ class FleetReport:
             "fleet_utilization": round(self.utilization, 6),
             "busy_window_utilization": round(self.busy_window_utilization, 6),
             "generation_speed_tok_s": round(self.generation_speed, 3),
+            "goodput_tok_s": round(self.goodput, 3),
+            "slo_attainment": round(self.slo_attainment, 6),
+            "preemptions": self.preemption_count,
             "lower_bound_s": round(self.lower_bound_s, 4),
             "lb_ratio": round(self.lb_ratio, 4),
             "steal_events": self.steal_events,

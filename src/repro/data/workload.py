@@ -55,11 +55,16 @@ def gsm8k_like_workload(
     seed: int = 0,
     known_lengths: bool = False,
     estimate_noise_std: float = 0.0,
+    ttft_slo_s: Optional[float] = None,
+    tbt_slo_s: Optional[float] = None,
 ) -> List[Request]:
     """Draw a request set from the paper's published moments.
 
     ``known_lengths=True`` gives the scheduler oracle decode lengths (used to
     isolate the value of uncertainty); default plans with the mean.
+    ``ttft_slo_s``/``tbt_slo_s`` stamp every request with a latency deadline
+    (``ScheduleTrace`` then reports goodput and SLO attainment next to
+    throughput); the default leaves the workload deadline-free.
     """
     rng = np.random.default_rng(seed)
     p = rng.normal(spec.input_mean, spec.input_std, size=spec.n_requests)
@@ -82,6 +87,32 @@ def gsm8k_like_workload(
         else:
             est = int(round(spec.output_mean))
         requests.append(
-            Request(rid=i, n_prefill=int(p[i]), n_decode=int(d[i]), n_decode_est=est)
+            Request(
+                rid=i, n_prefill=int(p[i]), n_decode=int(d[i]),
+                n_decode_est=est, ttft_slo_s=ttft_slo_s, tbt_slo_s=tbt_slo_s,
+            )
         )
+    return requests
+
+
+def attach_slos(
+    requests: List[Request],
+    ttft_slo_s: Optional[float] = None,
+    tbt_slo_s: Optional[float] = None,
+    online_only: bool = True,
+) -> List[Request]:
+    """Stamp latency SLOs onto an existing request set, in place.
+
+    ``online_only=True`` (default) deadlines only requests with a positive
+    arrival time — the offline backlog keeps ``None`` so overload policies
+    can defer it freely (deadline-free work is the degradation budget).
+    Returns the same list for chaining.
+    """
+    for r in requests:
+        if online_only and r.arrival <= 0:
+            continue
+        if ttft_slo_s is not None:
+            r.ttft_slo_s = ttft_slo_s
+        if tbt_slo_s is not None:
+            r.tbt_slo_s = tbt_slo_s
     return requests

@@ -2,13 +2,16 @@ from ..core.hetero import ReplicaSpec
 from .engine import Engine, EngineConfig
 from .fleet import (
     DISPATCH_POLICIES,
+    FaultPlan,
     Fleet,
     FleetConfig,
     LeastLoadDispatch,
     ReplicaDispatchPolicy,
+    ReplicaFault,
     RoundRobinDispatch,
 )
 from .kv_slots import BlockAllocator, PagedSlotManager, SlotManager
+from .overload import OverloadPolicy, SLOAwareOverloadPolicy
 from .profiler import OnlineProfiler
 from .sampler import (
     GreedySampler,

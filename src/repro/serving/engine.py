@@ -83,6 +83,7 @@ from ..core.types import (
     StageRecord,
 )
 from .kv_slots import PagedSlotManager, SlotManager
+from .overload import OverloadPolicy
 from .profiler import OnlineProfiler
 from .sampler import fold_row_keys, greedy
 
@@ -113,6 +114,18 @@ class EngineConfig:
     page_size: int = 16
     prefill_chunk: int = 32
     num_pages: Optional[int] = None
+    # Page reservation discipline (paged layout). "ondemand" grants a new
+    # request pages for its *prompt* only and grows the slot page-by-page as
+    # decode crosses page boundaries; when the pool genuinely exhausts, the
+    # engine preempts the lowest-priority slot — deallocates its pages and
+    # re-queues the request with its generated prefix for recompute-on-resume
+    # (token streams stay bit-identical: the sampler is a pure function of
+    # (seed, rid, token index) and the pre-preemption tokens are restored,
+    # never re-sampled). "upfront" reserves prompt + decode bound at
+    # admission — no preemption can ever be needed, but the over-reservation
+    # backpressures admission long before the pool is actually full; kept as
+    # the ablation baseline for benchmarks/overload.py.
+    page_reserve: str = "ondemand"        # "ondemand" | "upfront"
     # Fused decode. Each decode stage runs one on-device loop of K
     # iterations (one dispatch, one host sync). ``max_decode_horizon`` caps
     # the policy-priced K; 1 reproduces the per-token baseline exactly.
@@ -187,16 +200,29 @@ class _ServeSession:
 
 @dataclasses.dataclass
 class _ChunkState:
-    """One slot's in-flight chunked prefill (paged layout only)."""
+    """One slot's in-flight chunked prefill (paged layout only).
+
+    A *resumed* (previously preempted) request recomputes prompt + generated
+    prefix in one pass: ``prompt`` then holds n_prefill + emitted - 1 tokens,
+    and the final chunk restores ``(resume_emitted, resume_pending)`` instead
+    of sampling — re-sampling the already-emitted token would risk
+    FP divergence for zero benefit, so the stream continues bit-identical to
+    an unpreempted serve."""
 
     slot: int
     req: Request
     prompt: np.ndarray
     done: int = 0
+    resume_emitted: int = 0               # >0 → recompute of a preemptee
+    resume_pending: int = -1              # pending token to restore at bind
+
+    @property
+    def total(self) -> int:
+        return len(self.prompt)
 
     @property
     def remaining(self) -> int:
-        return self.req.n_prefill - self.done
+        return self.total - self.done
 
 
 def _fused_decode(
@@ -236,12 +262,18 @@ class Engine:
         profiler: Optional[OnlineProfiler] = None,
         sampler: Callable = greedy,
         speed_factor: float = 1.0,
+        overload_policy: Optional[OverloadPolicy] = None,
     ):
         self.model = model
         self.params = params
         self.cfg = config
         self.profiler = profiler or OnlineProfiler()
         self.sampler = sampler
+        if config.page_reserve not in ("ondemand", "upfront"):
+            raise ValueError(f"unknown page_reserve {config.page_reserve!r}")
+        # Admission-side overload control (None = admit everything the
+        # scheduler proposes; see serving.overload for the SLO-aware policy).
+        self.overload = overload_policy
         # Relative machine speed for virtual-time accounting: every measured
         # stage duration divides by this before it reaches the session
         # clock, the trace, and the profiler. 1.0 is a no-op (the default,
@@ -309,6 +341,15 @@ class Engine:
         self._budget_shift = 0            # straggler mitigation state
         self.straggler_events = 0
         self._chunking: Dict[int, _ChunkState] = {}
+        # Preemption-by-eviction bookkeeping: rids whose generated prefix
+        # must be recomputed on (re-)admission, and overload counters.
+        self._resume_rids: set = set()
+        self.preemption_events = 0
+        self.offline_deferrals = 0
+        # High-water mark of simultaneously in-flight requests (bound slots
+        # + mid-chunk prefills) — the admission-concurrency metric the
+        # on-demand-vs-upfront reservation comparison is judged on.
+        self.peak_concurrency = 0
         # rid -> every token this engine sampled for it (parity testing and
         # the place a production engine would stream detokenized output from)
         self.generated: Dict[int, List[int]] = {}
@@ -384,6 +425,7 @@ class Engine:
             self.pending_token[client.cid] = int(first[i])
             self.generated.setdefault(req.rid, []).append(int(first[i]))
             client.current = req
+        self._note_concurrency()
         total_tokens = sum(r.n_prefill for r in reqs)
         self._observe_prefill(total_tokens, dt)
         return dt, total_tokens
@@ -405,47 +447,214 @@ class Engine:
             tokens = self.cfg.max_len
         return min(tokens, self.cfg.max_len)
 
+    def _prompt_total(self, req: Request) -> int:
+        """Tokens the request's next (re)prefill will write: the prompt,
+        plus — for a preempted request — its recomputed generated prefix
+        (emitted - 1 tokens; the last generated token is restored as the
+        pending token, never prefilled)."""
+        extra = 0
+        if req.rid in self._resume_rids:
+            extra = max(len(self.generated.get(req.rid, ())) - 1, 0)
+        return req.n_prefill + extra
+
     def _pages_needed(self, req: Request) -> int:
-        return self.slots.allocator.pages_for(self._tokens_bound(req))
+        """Pages admission must secure now: the whole lifetime bound under
+        up-front reservation, just the (re)prefill span under on-demand
+        paging (decode grows page-by-page later)."""
+        if self.cfg.page_reserve == "upfront":
+            return self.slots.allocator.pages_for(self._tokens_bound(req))
+        return self.slots.allocator.pages_for(self._prompt_total(req))
+
+    def _deadline_class(self, req: Request) -> int:
+        """Admission priority class: 1 = online arrival carrying a TTFT
+        deadline, 0 = everything else (offline backlog, no-SLO online)."""
+        return 1 if (req.ttft_slo_s is not None and req.arrival > 0) else 0
 
     def _admissible(
         self, pairs: List[Tuple[ClientState, Request]]
     ) -> List[Tuple[ClientState, Request]]:
         """Trim a proposed batch to what the page pool can host.
 
-        Admission stops at the first request that doesn't fit — letting
-        smaller later requests jump a page-starved head would starve it
-        indefinitely (every freed page gets snapped up), breaking the FCFS
-        order the scheduler promises. Blocking admission instead makes the
-        free pool grow monotonically as decoders finish, so the head always
-        gets in eventually."""
+        Head-of-line rule, re-derived for on-demand paging: admission stays
+        FCFS *within* a priority class — a request that doesn't fit blocks
+        everything of its own class (and every lower class) behind it, so
+        the blocked head always gets in eventually: the pages freed by
+        finishing decoders cannot be snapped up by same-class followers (the
+        no-starvation guarantee the original stop-at-first-blocked rule
+        bought for the whole queue). The one sanctioned bypass: a smaller
+        *online* request carrying a TTFT deadline may jump a blocked
+        offline head — holding deadline traffic behind backlog work it can
+        never overtake would convert pool pressure directly into SLO misses,
+        and offline work cannot starve under it because class-1 traffic is
+        finite per burst while the pool drains monotonically.
+
+        Under on-demand reservation the budget also sets aside the pages
+        active decoders need for their *next* round, so admission cannot
+        grab the exact pages whose absence would immediately force a
+        preemption."""
         out = []
         free = self.slots.allocator.num_free
+        if self.cfg.page_reserve != "upfront":
+            free -= self._decode_growth_pages(1)
+        blocked: set = set()
         for client, req in pairs:
-            need = self._pages_needed(req)
-            if need > self.slots.allocator.num_pages:
+            full = self.slots.allocator.pages_for(self._tokens_bound(req))
+            if full > self.slots.allocator.num_pages:
                 raise ValueError(
-                    f"request {req.rid} needs {need} pages but the pool only "
+                    f"request {req.rid} needs {full} pages but the pool only "
                     f"has {self.slots.allocator.num_pages}; raise "
                     f"EngineConfig.num_pages"
                 )
+            cls = self._deadline_class(req)
+            if any(b >= cls for b in blocked):
+                continue
+            need = self._pages_needed(req)
             if need > free:
-                break
+                blocked.add(cls)
+                continue
             out.append((client, req))
             free -= need
         return out
+
+    # ------------------------------------------------------------------ #
+    # On-demand page growth + preemption-by-eviction                      #
+    # ------------------------------------------------------------------ #
+    def _growth_target(self, slot: int, k: int) -> int:
+        """KV tokens ``slot`` must own to run ``k`` more decode rounds: at
+        emitted e, round j writes position n_prefill + e + j - 2, so k
+        rounds need n_prefill + e + k - 1 tokens — capped by the request's
+        lifetime bound (budget-exhausted lanes no-op inside the fused
+        loop)."""
+        req = self.slots.request_of[slot]
+        return min(
+            req.n_prefill + self.slots.emitted[slot] + k - 1,
+            self._tokens_bound(req),
+        )
+
+    def _decode_growth_pages(self, k: int) -> int:
+        """Pages the active decoders collectively need for ``k`` rounds."""
+        return sum(
+            self.slots.pages_to_cover(s, self._growth_target(s, k))
+            for s in self.slots.active_slots
+        )
+
+    def _preemption_victims(self) -> List[int]:
+        """Eviction order when the pool genuinely exhausts: offline before
+        deadline traffic, then least progress lost (fewest emitted tokens —
+        the cheapest recompute), newest rid first as the tie-break."""
+        cands = []
+        for s in range(self.cfg.n_slots):
+            if self.slots.request_of[s] is not None:
+                cands.append((s, self.slots.request_of[s]))
+            elif s in self._chunking:
+                cands.append((s, self._chunking[s].req))
+        cands.sort(
+            key=lambda sr: (
+                self._deadline_class(sr[1]),
+                self.slots.emitted[sr[0]],
+                -sr[1].rid,
+            )
+        )
+        return [s for s, _ in cands]
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict ``slot`` (nano-vllm's preempt): deallocate its pages and
+        re-queue its request for recompute-on-resume. A bound slot keeps its
+        generated prefix in ``generated`` and is marked for resume (the
+        prefix is recomputed into KV and the pending token restored, so the
+        stream stays bit-identical); a mid-chunk prefill simply restarts."""
+        sv = self._sv
+        if slot in self._chunking:
+            st = self._chunking.pop(slot)
+            req = st.req
+            if st.resume_emitted > 0:
+                # a resumed recompute evicted mid-chunk resumes again later
+                self._resume_rids.add(req.rid)
+            self.slots.free_pages_of(slot)
+        else:
+            req = self.slots.request_of[slot]
+            if self.generated.get(req.rid):
+                self._resume_rids.add(req.rid)
+                # its prefill completed once and will complete again —
+                # trace validation expects 1 + preemptions completions
+                req.preemptions += 1
+            self.slots.release(slot)
+            sv.clients[slot].current = None
+        self.preemption_events += 1
+        sv.scheduler.push(req)
+
+    def _ensure_decode_capacity(self, k: int, allow_shrink: bool = False) -> int:
+        """Secure pages for ``k`` decode rounds over every active slot.
+
+        Prefers shrinking a policy-driven horizon (halving keeps the
+        power-of-two jit buckets) over evicting work; when even k=1 cannot
+        be funded it preempts victims lowest-priority-first until growth
+        fits. Returns the horizon actually funded. Admission guarantees a
+        request's lifetime bound fits the pool, so the last surviving slot
+        can always grow once everything else is evicted — the loop
+        terminates."""
+        if self.cfg.kv_layout != "paged":
+            return k
+        while True:
+            active = self.slots.active_slots
+            if not active:
+                return k
+            if self._decode_growth_pages(k) <= self.slots.allocator.num_free:
+                for s in active:
+                    self.slots.ensure_tokens(s, self._growth_target(s, k))
+                return k
+            if allow_shrink and k > 1:
+                k //= 2
+                continue
+            victims = self._preemption_victims()
+            if not victims:
+                return k
+            self._preempt_slot(victims[0])
+
+    def _note_concurrency(self) -> None:
+        cur = len(self.slots.active_slots) + len(self._chunking)
+        if cur > self.peak_concurrency:
+            self.peak_concurrency = cur
+
+    def _note_first_token(self, req: Request, t: float) -> None:
+        """Pin TTFT to the FIRST prefill completion (a preemption recomputes
+        the prefill later, which must not move it) and feed the overload
+        policy's attainment window."""
+        if req.t_first_token is None:
+            req.t_first_token = t
+            if self.overload is not None and req.ttft_slo_s is not None:
+                self.overload.record_ttft(t - req.arrival, req.ttft_slo_s)
 
     def _start_chunked_batch(
         self, pairs: List[Tuple[ClientState, Request]], bin_index: int, now: float
     ) -> None:
         for client, req in pairs:
-            self.slots.reserve(client.cid, self._tokens_bound(req))
+            prompt = self._prompt_tokens(req)
+            resume_emitted = 0
+            resume_pending = -1
+            if req.rid in self._resume_rids:
+                self._resume_rids.discard(req.rid)
+                prefix = self.generated.get(req.rid, [])
+                if prefix:
+                    resume_emitted = len(prefix)
+                    resume_pending = int(prefix[-1])
+                    if len(prefix) > 1:
+                        prompt = np.concatenate(
+                            [prompt, np.asarray(prefix[:-1], np.int32)]
+                        )
+            if self.cfg.page_reserve == "upfront":
+                span = self._tokens_bound(req)
+            else:
+                span = len(prompt)
+            self.slots.reserve(client.cid, span)
             self._chunking[client.cid] = _ChunkState(
-                slot=client.cid, req=req, prompt=self._prompt_tokens(req)
+                slot=client.cid, req=req, prompt=prompt,
+                resume_emitted=resume_emitted, resume_pending=resume_pending,
             )
             req.client = client.cid
             req.prefill_bin = bin_index
             req.t_prefill_start = now
+        self._note_concurrency()
 
     def _next_chunk_tokens(self) -> int:
         return sum(
@@ -486,11 +695,17 @@ class Engine:
         for i, st in enumerate(states):
             slot = st.slot
             st.done += int(lens[i])
-            if st.done >= st.req.n_prefill:
+            if st.done >= st.total:
                 self.slots.bind(slot, st.req)
-                self.slots.emitted[slot] = 1       # final chunk samples token #1
-                self.pending_token[slot] = int(first[i])
-                self.generated.setdefault(st.req.rid, []).append(int(first[i]))
+                if st.resume_emitted > 0:
+                    # recompute complete: restore the pre-preemption stream
+                    # state instead of sampling (bit-identical continuation)
+                    self.slots.emitted[slot] = st.resume_emitted
+                    self.pending_token[slot] = st.resume_pending
+                else:
+                    self.slots.emitted[slot] = 1   # final chunk samples token #1
+                    self.pending_token[slot] = int(first[i])
+                    self.generated.setdefault(st.req.rid, []).append(int(first[i]))
                 busy[slot] = st.req.rid
                 finished.append(slot)
                 del self._chunking[slot]
@@ -577,9 +792,12 @@ class Engine:
             chunk_slots[i] = st.slot
             starts[i] = st.done
             lens[i] = n
-            if st.done + n >= st.req.n_prefill:
-                sample_rows[j + i] = True
-                rids[j + i] = st.req.rid
+            if st.done + n >= st.total:
+                if st.resume_emitted == 0:
+                    # resumed rows never sample: their first token already
+                    # exists and is restored, not re-drawn
+                    sample_rows[j + i] = True
+                    rids[j + i] = st.req.rid
                 final_row[st.slot] = j + i
         pending = (
             self._dev_pending if self._dev_pending is not None
@@ -618,12 +836,16 @@ class Engine:
         for st, n in plan:
             st.done += n
             slot = st.slot
-            if st.done >= st.req.n_prefill:
+            if st.done >= st.total:
                 self.slots.bind(slot, st.req)
-                self.slots.emitted[slot] = 1   # final chunk samples token #1
-                first = int(sampled[final_row[slot]])
-                self.pending_token[slot] = first
-                self.generated.setdefault(st.req.rid, []).append(first)
+                if st.resume_emitted > 0:
+                    self.slots.emitted[slot] = st.resume_emitted
+                    self.pending_token[slot] = st.resume_pending
+                else:
+                    self.slots.emitted[slot] = 1   # final chunk samples token #1
+                    first = int(sampled[final_row[slot]])
+                    self.pending_token[slot] = first
+                    self.generated.setdefault(st.req.rid, []).append(first)
                 busy[slot] = st.req.rid
                 finished_chunks.append(slot)
                 del self._chunking[slot]
@@ -650,7 +872,9 @@ class Engine:
             req = self.slots.request_of[slot]
             clients[slot].current = req
             req.t_prefill_end = t
-            req.decoded = 1
+            # resumed slots re-enter decode at their pre-preemption count
+            req.decoded = self.slots.emitted[slot]
+            self._note_first_token(req, t)
             # requests with n_decode == 1 finish at prefill
             if self.cfg.eos_id is None and req.n_decode <= 1:
                 req.t_done = t
@@ -835,6 +1059,9 @@ class Engine:
         self.decoded_tokens = 0
         self.mixed_rounds = 0
         self.prefill_stall_time = 0.0
+        self.preemption_events = 0
+        self.offline_deferrals = 0
+        self.peak_concurrency = 0
         self._sv = _ServeSession(
             trace=trace, clients=clients, scheduler=request_scheduler,
             policy=iteration_policy, track_requests=track_requests,
@@ -864,7 +1091,66 @@ class Engine:
         sv = self._sv
         sv.scheduler.commit_batch(pairs)
         if sv.track_requests:
-            sv.trace.requests.extend(r for _, r in pairs)
+            # a preempted request is committed again on resume — adopt each
+            # request into the trace once
+            known = {r.rid for r in sv.trace.requests}
+            sv.trace.requests.extend(
+                r for _, r in pairs if r.rid not in known
+            )
+
+    def queued_requests(self) -> Tuple[Request, ...]:
+        """Not-yet-admitted requests of the open session (overload policies
+        inspect these for queue pressure)."""
+        if self._sv is None:
+            return ()
+        return self._sv.scheduler.queued
+
+    def adopt_resume(self, req: Request, prefix: List[int]) -> None:
+        """Adopt a request recovered from another replica mid-decode (fleet
+        fault recovery): seed its generated-so-far prefix and queue it for
+        recompute-on-resume — the same path a locally preempted request
+        takes, so the resumed stream is bit-identical to an uninterrupted
+        serve."""
+        self.generated[req.rid] = list(prefix)
+        self._resume_rids.add(req.rid)
+        self._sv.scheduler.push(req)
+
+    def _filter_overload(
+        self,
+        pairs: List[Tuple[ClientState, Request]],
+        idle: List[ClientState],
+        max_cap: int,
+        request_scheduler: RequestScheduler,
+        t: float,
+    ) -> List[Tuple[ClientState, Request]]:
+        """Run the overload policy over the proposed admissions, re-proposing
+        for any client whose candidate was deferred with the deferred rids
+        excluded — in an FCFS queue a deferred offline head must not shadow
+        an admissible (online) request queued behind it."""
+        kept = self.overload.filter_admissions(pairs, t, self)
+        deferred = {r.rid for _, r in pairs} - {r.rid for _, r in kept}
+        if not deferred:
+            return kept
+        self.offline_deferrals += len(deferred)
+        while True:
+            taken = {id(c) for c, _ in kept}
+            freed = [c for c in idle if id(c) not in taken]
+            budget = max_cap - sum(r.n_prefill for _, r in kept)
+            if not freed or budget <= 0:
+                return kept
+            extra = request_scheduler.propose_batch(
+                freed, budget,
+                exclude=deferred | {r.rid for _, r in kept},
+            )
+            if not extra:
+                return kept
+            kept_extra = self.overload.filter_admissions(extra, t, self)
+            newly = {r.rid for _, r in extra} - {r.rid for _, r in kept_extra}
+            self.offline_deferrals += len(newly)
+            kept = kept + kept_extra
+            if not newly:
+                return kept
+            deferred |= newly
 
     def serve_step(self) -> str:
         """Run at most one stage of the open session. Returns:
@@ -906,6 +1192,10 @@ class Engine:
             if hasattr(request_scheduler, "set_now"):
                 request_scheduler.set_now(t)
             pairs = request_scheduler.propose_batch(idle, max_cap)
+            if self.overload is not None and pairs:
+                pairs = self._filter_overload(
+                    pairs, idle, max_cap, request_scheduler, t
+                )
             if paged and pairs:
                 pairs = self._admissible(pairs)
             if paged:
@@ -975,6 +1265,17 @@ class Engine:
                     plan.extend(
                         (self._chunking[c.cid], n) for c, _, n in admitted
                     )
+                if cfg.page_reserve != "upfront":
+                    # fund every decode lane's next-round KV write, evicting
+                    # victims if the pool exhausts — an evicted mid-chunk
+                    # prefill drops out of this round's plan
+                    self._ensure_decode_capacity(1)
+                    plan = [
+                        (st, n) for st, n in plan
+                        if self._chunking.get(st.slot) is st
+                    ]
+                    if not self.slots.active_slots:
+                        continue   # every decode lane was evicted — re-plan
                 (
                     dt, fin_decode, decode_tok, chunk_tok, fin_chunks,
                     busy, busy_partial,
@@ -1040,6 +1341,7 @@ class Engine:
                     req.t_prefill_start = t
                     req.t_prefill_end = t + dt
                     req.decoded = 1
+                    self._note_first_token(req, t + dt)
                     busy[client.cid] = req.rid
                 trace.stages.append(
                     StageRecord(
@@ -1060,6 +1362,14 @@ class Engine:
                         client.current = None
             elif active:
                 k = self._choose_horizon(decision.horizon)
+                if paged and cfg.page_reserve != "upfront":
+                    # a pinned decode_horizon must run the K it asked for, so
+                    # only policy-driven horizons may shrink before evicting
+                    k = self._ensure_decode_capacity(
+                        k, allow_shrink=cfg.decode_horizon is None
+                    )
+                    if not self.slots.active_slots:
+                        continue   # every decode lane was evicted — re-plan
                 dt, finished, tokens = self._run_decode_stage(k)
                 # the stage right after a preempting prefill carries the
                 # stall in its first-token gap — it belongs to the burst
@@ -1106,6 +1416,9 @@ class Engine:
             mixed_rounds=self.mixed_rounds,
             prefill_stall_time_s=round(self.prefill_stall_time, 6),
             decode_dispatches=self.decode_dispatches,
+            preemption_events=self.preemption_events,
+            peak_concurrency=self.peak_concurrency,
+            offline_deferrals=self.offline_deferrals,
         )
         if validate:
             trace.validate()
@@ -1142,9 +1455,13 @@ class Engine:
         # strand its pages and forget the half-prefilled request)
         chunk_rid = np.full(self.cfg.n_slots, -1, np.int32)
         chunk_done = np.zeros(self.cfg.n_slots, np.int32)
+        chunk_resume = np.zeros(self.cfg.n_slots, np.int32)
+        chunk_pending = np.full(self.cfg.n_slots, -1, np.int32)
         for slot, st in self._chunking.items():
             chunk_rid[slot] = st.req.rid
             chunk_done[slot] = st.done
+            chunk_resume[slot] = st.resume_emitted
+            chunk_pending[slot] = st.resume_pending
         return {
             "cache": jax.tree_util.tree_map(np.asarray, self.slots.cache),
             "request_of": [
@@ -1158,6 +1475,11 @@ class Engine:
             "straggler_events": self.straggler_events,
             "chunk_rid": chunk_rid,
             "chunk_done": chunk_done,
+            "chunk_resume": chunk_resume,
+            "chunk_pending": chunk_pending,
+            # preempted-and-requeued rids awaiting recompute (their prefixes
+            # live in ``generated``, which the fleet checkpoints separately)
+            "resume_rids": np.asarray(sorted(self._resume_rids), np.int32),
         }
 
     def load_state_dict(self, state: Dict[str, Any], requests_by_rid) -> None:
@@ -1181,15 +1503,32 @@ class Engine:
         self._dev_pending = None          # rebuild from the restored host copy
         self._budget_shift = int(state.get("budget_shift", 0))
         self.straggler_events = int(state.get("straggler_events", 0))
+        self._resume_rids = {
+            int(r) for r in np.asarray(state.get("resume_rids", [])).ravel()
+        }
         self._chunking = {}
         chunk_rid = np.asarray(state.get("chunk_rid", []))
         chunk_done = np.asarray(state.get("chunk_done", []))
+        chunk_resume = np.asarray(state.get("chunk_resume", []))
+        chunk_pending = np.asarray(state.get("chunk_pending", []))
         for slot, rid in enumerate(chunk_rid):
             if rid >= 0:
                 req = requests_by_rid[int(rid)]
+                prompt = self._prompt_tokens(req)
+                re_cnt = int(chunk_resume[slot]) if chunk_resume.size else 0
+                re_pend = int(chunk_pending[slot]) if chunk_pending.size else -1
+                if re_cnt > 1:
+                    # recompute prompt includes the generated prefix — the
+                    # caller must restore ``generated`` before engine state
+                    # (the fleet does)
+                    prefix = list(self.generated.get(int(rid), ()))[:re_cnt]
+                    prompt = np.concatenate(
+                        [prompt, np.asarray(prefix[:-1], np.int32)]
+                    )
                 self._chunking[slot] = _ChunkState(
-                    slot=slot, req=req, prompt=self._prompt_tokens(req),
+                    slot=slot, req=req, prompt=prompt,
                     done=int(chunk_done[slot]),
+                    resume_emitted=re_cnt, resume_pending=re_pend,
                 )
         if self.cfg.kv_layout == "paged":
             # the device block table is the durable page-ownership record

@@ -104,7 +104,7 @@ class LeastLoadDispatch(ReplicaDispatchPolicy):
 
     def choose(self, fleet: "Fleet", req: Request) -> int:
         return min(
-            range(fleet.n_replicas),
+            fleet.alive_replicas,
             key=lambda i: (fleet.estimated_load_s(i), i),
         )
 
@@ -125,15 +125,62 @@ class RoundRobinDispatch(ReplicaDispatchPolicy):
         self.cursor = 0
 
     def choose(self, fleet: "Fleet", req: Request) -> int:
-        i = self.cursor % fleet.n_replicas
-        self.cursor += 1
-        return i
+        for _ in range(fleet.n_replicas):
+            i = self.cursor % fleet.n_replicas
+            self.cursor += 1
+            if i in fleet.alive_set:
+                return i
+        raise RuntimeError("no alive replica to dispatch to")
 
 
 DISPATCH_POLICIES = {
     "least_load": LeastLoadDispatch,
     "round_robin": RoundRobinDispatch,
 }
+
+
+# --------------------------------------------------------------------------- #
+# Fault injection                                                             #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ReplicaFault:
+    """One fault event at a virtual-time instant.
+
+    ``kind="kill"`` removes the replica from the fleet at ``at_s``: its
+    queued AND in-flight requests are recovered onto survivors (see
+    ``Fleet._kill_replica``); work it had already *completed* stays
+    completed — recovery is exactly-once, never re-serving a finished
+    request. ``kind="slow"`` multiplies the replica's ``speed_factor`` by
+    ``speed_factor`` (< 1 degrades it — e.g. thermal throttling, a noisy
+    neighbor), which both stretches its virtual-time stages and, through
+    its profiler's refits, repels future dispatch and invites stealing."""
+
+    replica: int
+    at_s: float
+    kind: str = "kill"                    # "kill" | "slow"
+    speed_factor: float = 0.5             # for kind="slow" only
+
+    def __post_init__(self):
+        if self.kind not in ("kill", "slow"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.at_s < 0:
+            raise ValueError("fault time must be >= 0")
+        if self.kind == "slow" and self.speed_factor <= 0:
+            raise ValueError("slow fault needs a positive speed_factor")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A deterministic schedule of replica faults, applied as the fleet's
+    virtual clock crosses each ``at_s``. Determinism is the point: the same
+    plan against the same workload yields the same recovery decisions, so
+    fault tolerance is regression-testable (token streams must match the
+    no-fault serve bit for bit)."""
+
+    faults: List[ReplicaFault] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.faults = sorted(self.faults, key=lambda f: (f.at_s, f.replica))
 
 
 @dataclasses.dataclass
@@ -228,6 +275,12 @@ class Fleet:
         self._all_requests: List[Request] = []
         self._offline_result = None
         self._resumed = False
+        # fault-injection state (per serve; see begin_serve / ReplicaFault)
+        self._dead: set = set()
+        self._pending_faults: List[ReplicaFault] = []
+        self.fault_log: List[Dict[str, Any]] = []
+        self.recovered_requests = 0
+        self._lost_preemptions = 0
         # pricing_cost_models memo (invalidated by refits/restores via key)
         self._pricing_key: Optional[tuple] = None
         self._pricing_models: List[CostModel] = []
@@ -235,6 +288,16 @@ class Fleet:
     @property
     def n_replicas(self) -> int:
         return self.cfg.n_replicas
+
+    @property
+    def alive_replicas(self) -> List[int]:
+        """Replica indices still serving (killed ones are excluded from
+        dispatch, stealing, and the step loop; their traces survive)."""
+        return [i for i in range(self.cfg.n_replicas) if i not in self._dead]
+
+    @property
+    def alive_set(self) -> set:
+        return set(range(self.cfg.n_replicas)) - self._dead
 
     @property
     def heterogeneous(self) -> bool:
@@ -340,15 +403,32 @@ class Fleet:
         requests: Sequence[Request],
         iteration_policy_factory: Callable[[], IterationPolicy] = LagrangianPolicy,
         policy_name: str = "",
+        fault_plan: Optional[FaultPlan] = None,
     ) -> None:
         """Partition the offline backlog, open every replica's serve
-        session, and queue online arrivals for dispatch-on-arrival."""
+        session, and queue online arrivals for dispatch-on-arrival.
+        ``fault_plan`` schedules replica kill/slow events against the
+        fleet's virtual clock (see ``ReplicaFault``)."""
         for r in requests:
             r.reset()
         self._all_requests = list(requests)
         self.steal_events = 0
         self.steal_log = []
         self._resumed = False
+        self._dead = set()
+        self._pending_faults = list(fault_plan.faults) if fault_plan else []
+        for f in self._pending_faults:
+            if not 0 <= f.replica < self.cfg.n_replicas:
+                raise ValueError(
+                    f"fault targets replica {f.replica} of a "
+                    f"{self.cfg.n_replicas}-replica fleet"
+                )
+        if len({f.replica for f in self._pending_faults
+                if f.kind == "kill"}) >= self.cfg.n_replicas:
+            raise ValueError("fault plan kills every replica")
+        self.fault_log = []
+        self.recovered_requests = 0
+        self._lost_preemptions = 0
         if hasattr(self.dispatcher, "reset"):
             self.dispatcher.reset()
         offline = [r for r in requests if r.arrival <= 0.0]
@@ -477,6 +557,8 @@ class Fleet:
         queued); the steal commits only when the R||Cmax-priced finish time
         improves (``_steal_improves``)."""
         for i, eng in enumerate(self.engines):
+            if i in self._dead:
+                continue
             sched = eng._sv.scheduler
             idle_slots = [
                 s for s in eng.slots.free_slots if s not in eng._chunking
@@ -485,7 +567,8 @@ class Fleet:
                 continue
             donors = [
                 j for j, other in enumerate(self.engines)
-                if j != i and other._sv.scheduler.queued
+                if j != i and j not in self._dead
+                and other._sv.scheduler.queued
                 # a donor with a genuinely free slot runs its own queue next
                 # step — only steal from replicas whose slots are all busy
                 and all(
@@ -507,31 +590,125 @@ class Fleet:
                 self.steal_log.append({"rid": stolen.rid, "from": j, "to": i})
                 break
 
+    # ------------------------------------------------------------------ #
+    # Fault injection / recovery                                          #
+    # ------------------------------------------------------------------ #
+    def _apply_due_faults(self, now: float) -> int:
+        """Fire every pending fault whose instant the fleet clock has
+        reached. Returns how many fired (the step loop re-derives its
+        worker set when membership changed)."""
+        fired = 0
+        while self._pending_faults and self._pending_faults[0].at_s <= now:
+            f = self._pending_faults.pop(0)
+            if f.replica in self._dead:
+                continue                      # already gone; fault is moot
+            if f.kind == "kill":
+                if len(self._dead) + 1 >= self.cfg.n_replicas:
+                    raise RuntimeError("fault plan killed every replica")
+                self._kill_replica(f.replica, now)
+            else:
+                eng = self.engines[f.replica]
+                eng.speed_factor = eng.speed_factor * f.speed_factor
+                self.fault_log.append({
+                    "kind": "slow", "replica": f.replica, "at_s": f.at_s,
+                    "applied_at_s": now, "speed_factor": eng.speed_factor,
+                })
+            fired += 1
+        return fired
+
+    def _kill_replica(self, i: int, now: float) -> None:
+        """Remove replica ``i`` from the fleet and recover its outstanding
+        work onto survivors, exactly-once:
+
+          * **finished** requests stay finished — their tokens remain in
+            the dead engine's ``generated`` record and their trace rows in
+            its (kept) trace; they are never re-served;
+          * **in-flight** requests (bound decode slots, mid-chunk prefills)
+            are recovered with their generated-so-far prefix and re-queued
+            on a survivor for recompute-on-resume — the same mechanism as
+            preemption-by-eviction, so the resumed stream is bit-identical;
+          * **queued** requests simply move.
+
+        Recovered requests restart their trace life on the survivor: rows
+        the dead replica recorded for them (committed but unfinished) are
+        stripped from its trace and their preemption counters reset, so
+        both the dead trace and the survivor trace validate exactly-once
+        prefill accounting on their own. Pre-kill preemptions are
+        preserved in the report meta (``lost_preemptions``)."""
+        eng = self.engines[i]
+        sv = eng._sv
+        recovered: List[tuple] = []           # (request, prefix tokens)
+        # bound decode slots: salvage the emitted prefix for recompute
+        for slot in list(eng.slots.active_slots):
+            req = eng.slots.request_of[slot]
+            prefix = eng.generated.pop(req.rid, [])
+            eng.slots.release(slot)
+            sv.clients[slot].current = None
+            recovered.append((req, prefix))
+        # mid-chunk prefills: a resumed recompute chunk still carries its
+        # prefix; a fresh chunk has emitted nothing and restarts clean
+        for slot in list(eng._chunking):
+            st = eng._chunking.pop(slot)
+            eng.slots.free_pages_of(slot)
+            prefix = eng.generated.pop(st.req.rid, [])
+            recovered.append((st.req, prefix))
+        # queued: never started here — but an earlier preemptee waiting to
+        # resume still owns its prefix
+        for req in list(sv.scheduler.queued):
+            sv.scheduler.commit(None, req)    # remove from the dead queue
+            prefix = eng.generated.pop(req.rid, [])
+            recovered.append((req, prefix))
+        eng._resume_rids.clear()
+        # the dead trace keeps only work it *finished*; unfinished rows move
+        # with their requests to the survivor's trace
+        sv.trace.requests = [r for r in sv.trace.requests if r.t_done is not None]
+        self._dead.add(i)
+        self._pricing_key = None              # membership changed
+        for req, prefix in recovered:
+            self._lost_preemptions += req.preemptions
+            req.preemptions = 0
+            req.client = None
+            tgt = self.engines[self.dispatcher.choose(self, req)]
+            if prefix:
+                tgt.adopt_resume(req, prefix)
+            else:
+                tgt._sv.scheduler.push(req)
+        self.recovered_requests += len(recovered)
+        self.fault_log.append({
+            "kind": "kill", "replica": i, "at_s": now, "applied_at_s": now,
+            "recovered": len(recovered),
+        })
+
     def step(self) -> bool:
-        """Advance the fleet by one stage on the lowest-clock replica with
-        work. Returns False once every replica is drained and no arrivals
-        remain (the serve is complete)."""
+        """Advance the fleet by one stage on the lowest-clock alive replica
+        with work. Returns False once every alive replica is drained and no
+        arrivals remain (the serve is complete)."""
         while True:
-            workers = [i for i, e in enumerate(self.engines) if e.has_work()]
+            alive = self.alive_replicas
+            workers = [i for i in alive if self.engines[i].has_work()]
             if not workers:
                 if not self._central:
                     return False
-                # fleet-wide idle gap: everyone fast-forwards to the arrival
+                # fleet-wide idle gap: survivors fast-forward to the arrival
                 nxt = self._central[0].arrival
-                for eng in self.engines:
-                    eng.advance_clock(nxt)
+                if self._apply_due_faults(nxt):
+                    continue
+                for i in alive:
+                    self.engines[i].advance_clock(nxt)
                 self._route_arrivals(nxt)
                 continue
             now = min(self.engines[i].clock for i in workers)
+            if self._apply_due_faults(now):
+                continue                      # membership/queues changed
             # replicas without work have been idling in parallel — their
             # clocks track fleet time so routed arrivals start at "now"
-            for i, eng in enumerate(self.engines):
+            for i in alive:
                 if i not in workers:
-                    eng.advance_clock(now)
+                    self.engines[i].advance_clock(now)
             self._route_arrivals(now)
             if self.cfg.work_stealing:
                 self._try_steal()
-            workers = [i for i, e in enumerate(self.engines) if e.has_work()]
+            workers = [i for i in alive if self.engines[i].has_work()]
             i = min(workers, key=lambda j: (self.engines[j].clock, j))
             status = self.engines[i].serve_step()
             if status == "idle":
@@ -581,6 +758,11 @@ class Fleet:
                 self._offline_result.gap if self._offline_result else 0.0
             ),
         )
+        if self.fault_log:
+            report.meta["fault_events"] = float(len(self.fault_log))
+            report.meta["dead_replicas"] = float(len(self._dead))
+            report.meta["recovered_requests"] = float(self.recovered_requests)
+            report.meta["lost_preemptions"] = float(self._lost_preemptions)
         if not self._resumed:
             report.validate()
         return report
@@ -590,9 +772,13 @@ class Fleet:
         requests: Sequence[Request],
         iteration_policy_factory: Callable[[], IterationPolicy] = LagrangianPolicy,
         policy_name: str = "",
+        fault_plan: Optional[FaultPlan] = None,
     ) -> FleetReport:
         """Serve a request set to completion across all replicas."""
-        self.begin_serve(requests, iteration_policy_factory, policy_name)
+        self.begin_serve(
+            requests, iteration_policy_factory, policy_name,
+            fault_plan=fault_plan,
+        )
         while self.step():
             pass
         return self.finish_serve()

@@ -113,7 +113,9 @@ class BlockAllocator:
 
     Pure bookkeeping — page contents live on device; this hands out page ids
     and guarantees no two slots ever share a page. LIFO reuse keeps recently
-    freed (cache-warm) pages hot."""
+    freed (cache-warm) pages hot. A persistent free-*set* shadows the LIFO
+    list so double-free detection is O(pages released), not O(pool) — under
+    preemption churn every eviction releases pages, so this is a hot path."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages <= 0 or page_size <= 0:
@@ -121,6 +123,7 @@ class BlockAllocator:
         self.num_pages = num_pages
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._free_set: set = set(self._free)
 
     @property
     def num_free(self) -> int:
@@ -144,31 +147,47 @@ class BlockAllocator:
             )
         out = self._free[-n_pages:][::-1]
         del self._free[-n_pages:]
+        self._free_set.difference_update(out)
         return out
 
     def free(self, pages: Sequence[int]) -> None:
         for p in pages:
             if not 0 <= p < self.num_pages:
                 raise ValueError(f"page {p} out of range")
-        live = set(self._free)
-        if any(p in live for p in pages):
+        if any(p in self._free_set for p in pages):
             raise RuntimeError("double free of KV page")
         self._free.extend(pages)
+        self._free_set.update(pages)
+        self.check_consistency()
 
     def reset(self, in_use: Sequence[int] = ()) -> None:
         """Rebuild the free list from a known set of in-use pages (checkpoint
         restore)."""
         used = set(in_use)
         self._free = [p for p in range(self.num_pages - 1, -1, -1) if p not in used]
+        self._free_set = set(self._free)
+
+    def check_consistency(self) -> None:
+        """The free list and free set must always describe the same pages —
+        a divergence means a page was leaked or double-owned."""
+        if len(self._free) != len(self._free_set):
+            raise AssertionError(
+                f"allocator free list ({len(self._free)}) and free set "
+                f"({len(self._free_set)}) diverged"
+            )
 
 
 class PagedSlotManager:
     """SlotManager counterpart for the paged cache layout.
 
-    ``reserve`` hands a slot enough pages for its whole request up front
-    (prompt + decode bound), so decode can never fail mid-flight; admission
-    control in the engine checks ``allocator.can_allocate`` first. Block
-    table rows are mirrored to the device cache on reserve/release."""
+    ``reserve`` hands a slot pages covering an initial token span (the
+    engine decides how much: the prompt under on-demand paging, the whole
+    prompt + decode bound under up-front reservation) and ``ensure_tokens``
+    grows the slot's table page-by-page as decode crosses page boundaries.
+    When growth finds the pool exhausted the *engine* preempts a
+    lowest-priority slot (``free_pages_of`` + re-queue) — the manager only
+    does page bookkeeping. Block table rows are mirrored to the device cache
+    on reserve/grow/release."""
 
     def __init__(
         self,
@@ -217,6 +236,15 @@ class PagedSlotManager:
         )
 
     # -- page ownership ------------------------------------------------ #
+    def _mirror_row(self, slot: int) -> None:
+        """Push ``slot``'s host block-table row to the device cache."""
+        row = np.full((self.max_pages_per_slot,), -1, np.int32)
+        pages = self.tables[slot]
+        row[: len(pages)] = pages
+        self.cache["block_tables"] = (
+            self.cache["block_tables"].at[slot].set(jnp.asarray(row))
+        )
+
     def reserve(self, slot: int, n_tokens: int) -> None:
         """Give ``slot`` pages covering ``n_tokens`` and mirror its block
         table row to the device."""
@@ -226,11 +254,32 @@ class PagedSlotManager:
         pages = self.allocator.allocate(self.allocator.pages_for(n_tokens))
         self.tables[slot] = pages
         self.peak_pages = max(self.peak_pages, self.allocator.num_used)
-        row = np.full((self.max_pages_per_slot,), -1, np.int32)
-        row[: len(pages)] = pages
-        self.cache["block_tables"] = (
-            self.cache["block_tables"].at[slot].set(jnp.asarray(row))
+        self._mirror_row(slot)
+
+    def owned_tokens(self, slot: int) -> int:
+        """Token capacity of the pages ``slot`` currently owns."""
+        return len(self.tables[slot]) * self.page_size
+
+    def pages_to_cover(self, slot: int, n_tokens: int) -> int:
+        """Additional pages ``slot`` needs to hold ``n_tokens`` KV entries
+        (0 when its current pages already cover them)."""
+        n_tokens = min(n_tokens, self.max_len)
+        return max(
+            0, self.allocator.pages_for(n_tokens) - len(self.tables[slot])
         )
+
+    def ensure_tokens(self, slot: int, n_tokens: int) -> int:
+        """Grow ``slot``'s page span to cover ``n_tokens`` (on-demand decode
+        growth). Returns the pages added; raises if the pool cannot supply
+        them — the engine preempts a victim and retries."""
+        need = self.pages_to_cover(slot, n_tokens)
+        if need == 0:
+            return 0
+        pages = self.allocator.allocate(need)
+        self.tables[slot].extend(pages)
+        self.peak_pages = max(self.peak_pages, self.allocator.num_used)
+        self._mirror_row(slot)
+        return need
 
     def release(self, slot: int) -> Request:
         req = self.request_of[slot]

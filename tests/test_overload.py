@@ -1,0 +1,398 @@
+"""Overload control: allocator/slot invariants under preemption churn,
+SLO-aware admission throttling, deadline-online queue bypass, and
+fault-tolerant fleet recovery with exactly-once token streams."""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import (
+    ArrivalQueueScheduler,
+    ClientState,
+    CostModel,
+    GlobalQueueScheduler,
+    LagrangianPolicy,
+    Request,
+    build_clients,
+)
+from repro.core.online import SortingPreemptiveScheduler
+from repro.models.layers import init_params
+from repro.models.transformer import TransformerLM
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.fleet import FaultPlan, Fleet, FleetConfig, ReplicaFault
+from repro.serving.kv_slots import BlockAllocator, PagedSlotManager
+from repro.serving.overload import OverloadPolicy, SLOAwareOverloadPolicy
+
+CFG = ArchConfig(
+    name="demo", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256,
+)
+CM = CostModel(level_caps=(32, 64, 128))
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = TransformerLM(CFG)
+    params = init_params(jax.random.key(0), model.param_defs())
+    return model, params
+
+
+def _engine(model, params, overload=None, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_seq_buckets", (32,))
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("page_size", 16)
+    kw.setdefault("prefill_chunk", 16)
+    eng = Engine(model, params, EngineConfig(**kw), overload_policy=overload)
+    eng.profiler.cost_model = CM
+    return eng
+
+
+def _serve(eng, reqs, scheduler=None):
+    clients = build_clients(eng.cfg.n_slots, reqs, None)
+    sched = scheduler if scheduler is not None else GlobalQueueScheduler(reqs)
+    return eng.serve(reqs, clients, sched, LagrangianPolicy())
+
+
+# --------------------------------------------------------------------------- #
+# BlockAllocator invariants                                                   #
+# --------------------------------------------------------------------------- #
+def test_allocator_rejects_double_free():
+    alloc = BlockAllocator(num_pages=8, page_size=16)
+    pages = alloc.allocate(3)
+    alloc.free(pages)
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free(pages[:1])
+
+
+def test_allocator_rejects_out_of_range_free():
+    alloc = BlockAllocator(num_pages=8, page_size=16)
+    with pytest.raises(ValueError, match="out of range"):
+        alloc.free([8])
+
+
+def test_allocator_reset_in_use_round_trips():
+    alloc = BlockAllocator(num_pages=10, page_size=8)
+    held = alloc.allocate(4)
+    alloc.reset(in_use=held)
+    alloc.check_consistency()
+    assert alloc.num_used == 4
+    assert alloc.num_free == 6
+    # the held pages are NOT in the rebuilt free list: freeing them is legal,
+    # freeing them twice is not
+    alloc.free(held)
+    assert alloc.num_free == 10
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free(held[:2])
+
+
+def test_allocator_random_churn_never_diverges():
+    rng = random.Random(0)
+    alloc = BlockAllocator(num_pages=24, page_size=8)
+    owned = []                       # list of page-lists, one per fake slot
+    for _ in range(500):
+        if owned and rng.random() < 0.45:
+            alloc.free(owned.pop(rng.randrange(len(owned))))
+        else:
+            want = rng.randint(1, 4)
+            if alloc.can_allocate(want):
+                owned.append(alloc.allocate(want))
+        alloc.check_consistency()
+        flat = [p for ps in owned for p in ps]
+        assert len(flat) == len(set(flat))                 # no double-owned
+        assert len(flat) + alloc.num_free == alloc.num_pages   # no leak
+
+
+# --------------------------------------------------------------------------- #
+# PagedSlotManager ownership under reserve/grow/evict churn                   #
+# --------------------------------------------------------------------------- #
+def _assert_page_ownership(slots: PagedSlotManager):
+    flat = [p for t in slots.tables for p in t]
+    assert len(flat) == len(set(flat)), "page owned by two slots"
+    assert len(flat) + slots.allocator.num_free == slots.allocator.num_pages
+    slots.allocator.check_consistency()
+    # device block tables mirror the host tables exactly
+    bt = np.asarray(slots.cache["block_tables"])
+    for s, t in enumerate(slots.tables):
+        assert [int(p) for p in bt[s] if p >= 0] == t
+
+
+def test_paged_slots_reserve_grow_evict_churn(model_and_params):
+    model, params = model_and_params
+    rng = random.Random(7)
+    slots = PagedSlotManager(model, n_slots=4, max_len=64, page_size=8,
+                             num_pages=16)
+    toks = [0] * 4
+    for step in range(300):
+        s = rng.randrange(4)
+        if slots.request_of[s] is None:
+            if rng.random() < 0.7:
+                req = Request(rid=1000 + step, n_prefill=8, n_decode=8)
+                slots.bind(s, req)
+                n = rng.randint(1, 24)
+                if slots.allocator.can_allocate(slots.allocator.pages_for(n)):
+                    slots.reserve(s, n)
+                    toks[s] = n
+                else:
+                    slots.request_of[s] = None     # admission backpressure
+        else:
+            roll = rng.random()
+            if roll < 0.4:                          # decode growth
+                want = min(toks[s] + rng.randint(1, 12), slots.max_len)
+                if slots.allocator.can_allocate(slots.pages_to_cover(s, want)):
+                    slots.ensure_tokens(s, want)
+                    toks[s] = want
+            elif roll < 0.7:                        # eviction (preemption)
+                slots.free_pages_of(s)
+                slots.request_of[s] = None
+                toks[s] = 0
+            else:                                   # normal completion
+                slots.release(s)
+                toks[s] = 0
+        _assert_page_ownership(slots)
+
+
+# --------------------------------------------------------------------------- #
+# Preemption-by-eviction: bit-identical streams at random preemption points   #
+# --------------------------------------------------------------------------- #
+def test_preemption_streams_bit_identical_across_pool_sizes(model_and_params):
+    """Sweep pool sizes so preemption fires at different (workload-determined)
+    points; every serve must emit exactly the streams of the uncontended
+    pool. Decode lengths are staggered so victims hold partial prefixes."""
+    model, params = model_and_params
+
+    def reqs():
+        return [
+            Request(rid=i, n_prefill=12, n_decode=16 + 6 * (i % 3))
+            for i in range(6)
+        ]
+
+    def serve_with_pool(num_pages):
+        eng = _engine(model, params, n_slots=4, page_size=8,
+                      num_pages=num_pages)
+        _serve(eng, reqs())                                    # warm
+        trace = _serve(eng, reqs())
+        _assert_page_ownership(eng.slots)                      # drained clean
+        assert eng.slots.allocator.num_used == 0
+        return eng, trace
+
+    ref_eng, ref_trace = serve_with_pool(None)                 # full capacity
+    assert ref_eng.preemption_events == 0
+    preempted_somewhere = False
+    for num_pages in (16, 14, 12, 10):
+        eng, trace = serve_with_pool(num_pages)
+        trace.validate()
+        assert eng.generated.keys() == ref_eng.generated.keys()
+        for rid in ref_eng.generated:
+            assert eng.generated[rid] == ref_eng.generated[rid], (
+                f"stream diverged for rid {rid} at num_pages={num_pages}"
+            )
+        preempted_somewhere |= eng.preemption_events > 0
+    assert preempted_somewhere, "sweep never exercised preemption"
+
+
+# --------------------------------------------------------------------------- #
+# Admission: deadline-online bypasses a deferred offline head (no livelock)   #
+# --------------------------------------------------------------------------- #
+def test_propose_batch_exclude_skips_queue_head():
+    reqs = [
+        Request(rid=0, n_prefill=8, n_decode=4),               # offline head
+        Request(rid=1, n_prefill=8, n_decode=4, arrival=0.0, ttft_slo_s=1.0),
+    ]
+    sched = GlobalQueueScheduler(reqs)
+    clients = [ClientState(cid=0), ClientState(cid=1)]
+    plain = sched.propose_batch(clients, 64)
+    assert [r.rid for _, r in plain] == [0, 1]
+    bypass = sched.propose_batch(clients, 64, exclude={0})
+    assert [r.rid for _, r in bypass] == [1]
+
+
+def test_sorting_scheduler_propose_batch_accepts_exclude():
+    reqs = [Request(rid=i, n_prefill=8, n_decode=4) for i in range(3)]
+    clients = [ClientState(cid=0, backlog=list(reqs))]
+    sched = SortingPreemptiveScheduler(clients)
+    got = sched.propose_batch(clients, 64, exclude={reqs[0].rid})
+    assert reqs[0].rid not in {r.rid for _, r in got}
+
+
+def test_deferred_offline_head_does_not_starve_online(model_and_params):
+    """An SLO-aware engine deferring its offline FCFS head must still admit
+    the online request queued behind it the same round — and the deferred
+    offline work must still complete once online traffic drains."""
+    model, params = model_and_params
+    eng = _engine(model, params)
+    warm = [Request(rid=i, n_prefill=12, n_decode=8) for i in range(4)]
+    _serve(eng, warm, ArrivalQueueScheduler(warm))
+    eng.warm_serving_shapes()
+
+    pol = SLOAwareOverloadPolicy()
+    eng.overload = pol
+    reqs = [Request(rid=i, n_prefill=12, n_decode=8) for i in range(4)]
+    reqs.append(Request(rid=100, n_prefill=12, n_decode=8, arrival=1e-7,
+                        ttft_slo_s=10.0))
+    trace = eng.serve(reqs, build_clients(2, reqs, None),
+                      ArrivalQueueScheduler(reqs), LagrangianPolicy())
+    trace.validate()                       # every request completed exactly once
+    assert pol.deferrals > 0, "policy never engaged"
+    online = next(r for r in trace.requests if r.rid == 100)
+    offline_first_starts = sorted(
+        r.t_prefill_start for r in trace.requests if r.rid != 100
+    )
+    # the online request did not wait for the whole deferred backlog: at
+    # least one offline request prefilled AFTER it (bypass, not FIFO drain)
+    assert online.t_prefill_start < offline_first_starts[-1]
+
+
+# --------------------------------------------------------------------------- #
+# SLOAwareOverloadPolicy unit behavior                                        #
+# --------------------------------------------------------------------------- #
+class _FakeEngine:
+    def __init__(self, queued=()):
+        self._queued = tuple(queued)
+
+    def queued_requests(self):
+        return self._queued
+
+
+def _pairs(*reqs):
+    return [(object(), r) for r in reqs]
+
+
+def test_policy_passthrough_without_offline_pairs():
+    pol = SLOAwareOverloadPolicy()
+    on = Request(rid=1, n_prefill=4, n_decode=4, arrival=0.1, ttft_slo_s=0.5)
+    pairs = _pairs(on)
+    assert pol.filter_admissions(pairs, 1.0, _FakeEngine([on])) == pairs
+
+
+def test_policy_cold_start_defers_for_waiting_online():
+    pol = SLOAwareOverloadPolicy()
+    off = Request(rid=0, n_prefill=4, n_decode=4)
+    on = Request(rid=1, n_prefill=4, n_decode=4, arrival=0.1, ttft_slo_s=0.5)
+    # online arrived (now=0.2 > 0.1), no TTFT evidence yet -> defer offline
+    kept = pol.filter_admissions(_pairs(off), 0.2, _FakeEngine([off, on]))
+    assert kept == []
+    assert pol.deferrals == 1
+
+
+def test_policy_relaxes_once_slo_comfortably_met():
+    pol = SLOAwareOverloadPolicy()
+    pol.record_ttft(0.05, 0.5)             # ratio 0.1, far from headroom
+    off = Request(rid=0, n_prefill=4, n_decode=4)
+    on = Request(rid=1, n_prefill=4, n_decode=4, arrival=0.1, ttft_slo_s=0.5)
+    pairs = _pairs(off)
+    # arrived online has waited only 0.1s of a 0.5s budget: no pressure
+    assert pol.filter_admissions(pairs, 0.2, _FakeEngine([off, on])) == pairs
+
+
+def test_policy_attainment_pressure_defers():
+    pol = SLOAwareOverloadPolicy()
+    pol.record_ttft(0.46, 0.5)             # ratio 0.92 >= headroom 0.85
+    off = Request(rid=0, n_prefill=4, n_decode=4)
+    on = Request(rid=1, n_prefill=4, n_decode=4, arrival=5.0, ttft_slo_s=0.5)
+    kept = pol.filter_admissions(_pairs(off), 1.0, _FakeEngine([off, on]))
+    assert kept == []
+
+
+def test_policy_queue_pressure_defers_on_long_wait():
+    pol = SLOAwareOverloadPolicy()
+    pol.record_ttft(0.05, 0.5)             # healthy history
+    off = Request(rid=0, n_prefill=4, n_decode=4)
+    on = Request(rid=1, n_prefill=4, n_decode=4, arrival=0.1, ttft_slo_s=0.5)
+    # waited 0.45s of a 0.5s budget >= headroom 0.85
+    kept = pol.filter_admissions(_pairs(off), 0.55, _FakeEngine([off, on]))
+    assert kept == []
+
+
+def test_policy_stands_down_when_no_online_remains():
+    pol = SLOAwareOverloadPolicy()
+    pol.record_ttft(0.49, 0.5)             # attainment pressure on record
+    off = Request(rid=0, n_prefill=4, n_decode=4)
+    pairs = _pairs(off)
+    # queue holds only offline work: nothing left to protect, admit freely
+    assert pol.filter_admissions(pairs, 9.0, _FakeEngine([off])) == pairs
+    assert pol.deferrals == 0
+
+
+def test_base_policy_is_identity():
+    pol = OverloadPolicy()
+    off = Request(rid=0, n_prefill=4, n_decode=4)
+    pairs = _pairs(off)
+    assert pol.filter_admissions(pairs, 0.0, _FakeEngine([off])) is pairs
+
+
+# --------------------------------------------------------------------------- #
+# Fault injection: kill mid-serve, survivors finish exactly once              #
+# --------------------------------------------------------------------------- #
+def _fleet(model, params, **fc_kw):
+    fc_kw.setdefault("n_replicas", 2)
+    return Fleet(
+        model, params,
+        EngineConfig(n_slots=2, max_len=64, prefill_seq_buckets=(32,),
+                     kv_layout="paged", page_size=16, prefill_chunk=16),
+        FleetConfig(**fc_kw), cost_model=CM,
+    )
+
+
+def _fault_reqs():
+    return [
+        Request(rid=i, n_prefill=10, n_decode=12 + 6 * (i % 2))
+        for i in range(8)
+    ]
+
+
+def test_replica_kill_recovers_exactly_once(model_and_params):
+    model, params = model_and_params
+    base = _fleet(model, params)
+    base.serve(_fault_reqs(), LagrangianPolicy)                # warm
+    for eng in base.engines:
+        eng.warm_serving_shapes()
+    ref = base.serve(_fault_reqs(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    fl = _fleet(model, params)
+    fl.serve(_fault_reqs(), LagrangianPolicy)                  # warm
+    for eng in fl.engines:
+        eng.warm_serving_shapes()
+    report = fl.serve(
+        _fault_reqs(), LagrangianPolicy,
+        fault_plan=FaultPlan([ReplicaFault(replica=0,
+                                           at_s=0.25 * ref.makespan)]),
+    )
+    report.validate()
+    done = [r for t in report.traces for r in t.requests]
+    assert len(done) == 8 and all(r.t_done is not None for r in done)
+    assert len({r.rid for r in done}) == 8                     # exactly once
+    assert fl.recovered_requests > 0
+    assert fl.generated.keys() == ref_gen.keys()
+    for rid, toks in ref_gen.items():
+        assert fl.generated[rid] == toks, f"stream diverged for rid {rid}"
+    assert report.meta.get("dead_replicas") == 1.0
+
+
+def test_slow_fault_stretches_replica_not_correctness(model_and_params):
+    model, params = model_and_params
+    fl = _fleet(model, params)
+    fl.serve(_fault_reqs(), LagrangianPolicy)                  # warm
+    report = fl.serve(
+        _fault_reqs(), LagrangianPolicy,
+        fault_plan=FaultPlan([ReplicaFault(replica=1, at_s=0.0, kind="slow",
+                                           speed_factor=0.5)]),
+    )
+    report.validate()
+    done = [r for t in report.traces for r in t.requests]
+    assert len(done) == 8 and all(r.t_done is not None for r in done)
+    assert fl.engines[1].speed_factor == pytest.approx(0.5)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        ReplicaFault(replica=0, at_s=-1.0)
+    with pytest.raises(ValueError):
+        ReplicaFault(replica=0, at_s=0.0, kind="explode")
+    plan = FaultPlan([ReplicaFault(replica=1, at_s=2.0),
+                      ReplicaFault(replica=0, at_s=1.0)])
+    assert [f.replica for f in plan.faults] == [0, 1]          # time-sorted

@@ -110,6 +110,13 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
         "preemption_events": float(eng.preemption_events),
         "peak_concurrency": float(eng.peak_concurrency),
         "offline_deferrals": float(eng.offline_deferrals),
+        # recovery/migration accounting: tokens the engine re-prefilled for
+        # resumed (preempted/recovered) requests, and live-migration traffic
+        "recomputed_tokens": float(eng.recomputed_tokens),
+        "migrated_pages_in": float(eng.migrated_pages_in),
+        "migrated_pages_out": float(eng.migrated_pages_out),
+        "migrations_in": float(eng.migrations_in),
+        "migrations_out": float(eng.migrations_out),
     }
     m.update(decode_latency_percentiles(trace))
     if eng.cfg.kv_layout == "paged":
@@ -120,6 +127,19 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
         m["peak_kv_bytes"] = cap
         m["kv_capacity_bytes"] = cap
     return m
+
+
+def fleet_recovery_metrics(report) -> Dict[str, float]:
+    """Recovery/migration accounting for a fleet summary, read from the
+    FleetReport meta: tokens re-prefilled by recompute-on-resume, live
+    page-copy traffic, how displaced requests were recovered, and the
+    worst span from a fault/drain event to full re-admission."""
+    keys = (
+        "recomputed_tokens", "migration_events", "migrated_pages",
+        "recovered_requests", "recovered_page_copy", "recovered_recompute",
+        "time_to_recover_s",
+    )
+    return {k: float(report.meta.get(k, 0.0)) for k in keys}
 
 
 def run_serving_benchmark(

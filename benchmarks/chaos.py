@@ -1,0 +1,489 @@
+"""Chaos harness: randomized fault/drain/migration schedules, hard-checked.
+
+Live KV migration by page-copy turns a replica's mid-request state into a
+portable checkpoint. This harness is the proof it is *safe to fire at any
+moment*: three arms, each a hard-fail structural gate (stable on CPU —
+wall-clock magnitudes are reported, never asserted):
+
+  * **drain** — the page-copy value claim, at a deterministic instant
+    (replica 0 mid-decode, survivor idle): a graceful drain must complete
+    every request exactly once with ZERO recomputed tokens and streams
+    bit-identical to the fault-free serve; a hard kill at the same instant
+    must re-pay the full generated prefix (recomputed tokens > 0). The
+    gate: page-copy strictly beats recompute on tokens re-paid.
+  * **rebalance** — in-flight rebalancing: a long request decoding on a
+    4x-slow replica with the fast replica drained. Queued-only stealing
+    has nothing to take; extending the steal gate to RUNNING slots
+    (``FleetConfig.steal_running``) must strictly improve the fleet
+    makespan at exact token parity and zero recompute.
+  * **chaos** — N seeded schedules against a 3-replica fleet: random
+    kills (hard and soft), drains, slow faults, and random mid-serve
+    ``migrate_slot`` probes. Every schedule must preserve exactly-once
+    completion, bit-identical streams vs the fault-free serve, allocator
+    consistency and host<->device block-table agreement on every replica,
+    no orphaned pages, and monotone per-replica virtual clocks. A failing
+    seed writes its full event journal next to the JSON artifact and
+    hard-fails naming the seed.
+
+Run:  PYTHONPATH=src python -m benchmarks.chaos [--smoke] [--out DIR]
+Prints ``name,value,unit`` CSV and writes BENCH_chaos.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import time
+
+FULL = dict(
+    model=dict(n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+               vocab_size=512),
+    # drain/rebalance arms: 2 replicas, 2 slots
+    d_slots=2, d_max_len=64,
+    # chaos arm: 3 replicas so two fault events can fire per schedule
+    n_replicas=3, c_slots=2, c_max_len=96,
+    n_c=12, c_prefill_short=10, c_prefill_long=40, c_decode=16,
+    n_seeds=20, max_events=2, migration_probes=3,
+    seq_buckets=(32,), level_caps=(32, 64, 128),
+    page_size=16, prefill_chunk=16,
+)
+SMOKE = dict(
+    model=dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+               vocab_size=256),
+    d_slots=2, d_max_len=64,
+    n_replicas=3, c_slots=2, c_max_len=96,
+    n_c=9, c_prefill_short=10, c_prefill_long=40, c_decode=10,
+    n_seeds=6, max_events=2, migration_probes=2,
+    seq_buckets=(32,), level_caps=(32, 64, 128),
+    page_size=16, prefill_chunk=16,
+)
+
+
+def _model_and_params(cfg):
+    import jax
+
+    from repro.configs.base import ArchConfig
+    from repro.models.layers import init_params
+    from repro.models.transformer import TransformerLM
+
+    arch = ArchConfig(name="chaos-bench", family="dense", **cfg["model"])
+    model = TransformerLM(arch)
+    params = init_params(jax.random.key(0), model.param_defs())
+    return model, params
+
+
+def _engine_cfg(cfg, n_slots, max_len):
+    from repro.serving.engine import EngineConfig
+
+    return EngineConfig(
+        n_slots=n_slots, max_len=max_len,
+        prefill_seq_buckets=cfg["seq_buckets"], kv_layout="paged",
+        page_size=cfg["page_size"], prefill_chunk=cfg["prefill_chunk"],
+        decode_horizon=1, mixed_schedule=False,
+    )
+
+
+def _fleet(cfg, model, params, n_slots, max_len, specs=None, **fc_kw):
+    from repro.core import CostModel
+    from repro.serving.fleet import Fleet, FleetConfig
+
+    fc_kw.setdefault("n_replicas", 2)
+    fc_kw.setdefault("assign", "round_robin")
+    fc_kw.setdefault("dispatch", "round_robin")
+    fc_kw.setdefault("work_stealing", False)
+    return Fleet(
+        model, params, _engine_cfg(cfg, n_slots, max_len),
+        FleetConfig(**fc_kw),
+        cost_model=CostModel(level_caps=cfg["level_caps"]),
+        replica_specs=specs,
+    )
+
+
+def _check_consistency(fleet):
+    """Allocator + block-table invariants on every replica; raises on any
+    orphaned page or host/device divergence."""
+    for i, eng in enumerate(fleet.engines):
+        eng.slots.allocator.check_consistency()
+        eng.slots.check_block_table_mirror()
+        if eng.slots.allocator.num_used != 0:
+            raise AssertionError(
+                f"replica {i}: {eng.slots.allocator.num_used} orphaned "
+                f"pages after serve"
+            )
+
+
+# --------------------------------------------------------------------------- #
+# Arm 1: graceful drain (page-copy) vs hard kill (recompute)                  #
+# --------------------------------------------------------------------------- #
+def _drain_requests():
+    from repro.core import Request
+
+    out = []
+    for rid in range(6):
+        if rid % 2 == 0:
+            out.append(Request(rid=rid, n_prefill=10, n_decode=20))
+        else:
+            out.append(Request(rid=rid, n_prefill=8, n_decode=2))
+    return out
+
+
+def _step_until_survivor_idle(fleet, min_emitted):
+    while True:
+        e0, e1 = fleet.engines
+        ready = [
+            s for s in e0.slots.active_slots
+            if e0.slots.emitted[s] >= min_emitted
+        ]
+        if (ready and not e1.slots.active_slots and not e1._chunking
+                and not e1._sv.scheduler.queued):
+            return True
+        if not fleet.step():
+            return False
+
+
+def run_drain_arm(cfg, model, params):
+    from repro.core import LagrangianPolicy
+
+    from .bench_io import fleet_recovery_metrics
+
+    base = _fleet(cfg, model, params, cfg["d_slots"], cfg["d_max_len"])
+    base.warm_serving_shapes()
+    base.serve(_drain_requests(), LagrangianPolicy)        # warm
+    base.serve(_drain_requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    out = {"n_requests": len(_drain_requests())}
+    for mode, readable in (("drain", None), ("hard_kill", False)):
+        fleet = _fleet(cfg, model, params, cfg["d_slots"], cfg["d_max_len"])
+        fleet.serve(_drain_requests(), LagrangianPolicy)   # warm
+        fleet.begin_serve(_drain_requests(), LagrangianPolicy)
+        if not _step_until_survivor_idle(fleet, min_emitted=2):
+            raise SystemExit(f"{mode}: never reached the injection state")
+        t0 = time.perf_counter()
+        if mode == "drain":
+            fleet.drain_replica(0)
+        else:
+            fleet._kill_replica(0, fleet.engines[0].clock,
+                                pool_readable=readable)
+        while fleet.step():
+            pass
+        wall = time.perf_counter() - t0
+        report = fleet.finish_serve()
+        report.validate()
+        _check_consistency(fleet)
+        done = [r for t in report.traces for r in t.requests]
+        out[mode] = {
+            "completed": len(done),
+            "exactly_once": len({r.rid for r in done}) == len(done),
+            "token_parity": fleet.generated == ref_gen,
+            "makespan_s": report.makespan,
+            "post_event_wall_s": wall,
+            **fleet_recovery_metrics(report),
+        }
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Arm 2: in-flight rebalancing (running-slot steal)                           #
+# --------------------------------------------------------------------------- #
+def run_rebalance_arm(cfg, model, params):
+    from repro.core import LagrangianPolicy, Request
+    from repro.serving.fleet import ReplicaSpec
+
+    def requests():
+        # odd rid → slow replica under round-robin: the straggler decode
+        return [
+            Request(rid=0, n_prefill=8, n_decode=4),
+            Request(rid=1, n_prefill=10, n_decode=32),
+            Request(rid=2, n_prefill=8, n_decode=4),
+        ]
+
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.25)]
+    out = {}
+    for running in (True, False):
+        fleet = _fleet(
+            cfg, model, params, cfg["d_slots"], cfg["d_max_len"],
+            specs=specs, work_stealing=True, steal_running=running,
+        )
+        fleet.serve(requests(), LagrangianPolicy)          # warm
+        t0 = time.perf_counter()
+        report = fleet.serve(requests(), LagrangianPolicy)
+        wall = time.perf_counter() - t0
+        report.validate()
+        _check_consistency(fleet)
+        key = "running_steal" if running else "queued_only"
+        out[key] = {
+            "makespan_s": report.makespan,
+            "migration_events": fleet.migration_events,
+            "recomputed_tokens": report.meta["recomputed_tokens"],
+            "generated": {r: list(t) for r, t in fleet.generated.items()},
+            "wall_s": wall,
+        }
+    on, off = out["running_steal"], out["queued_only"]
+    out["token_parity"] = on.pop("generated") == off.pop("generated")
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Arm 3: seeded chaos schedules                                               #
+# --------------------------------------------------------------------------- #
+def _chaos_requests(cfg):
+    from repro.core import Request
+
+    out = []
+    for rid in range(cfg["n_c"]):
+        # every third prompt is long enough to chunk, so schedules can
+        # catch requests BETWEEN prefill chunks, not just mid-decode
+        n_pre = (cfg["c_prefill_long"] if rid % 3 == 2
+                 else cfg["c_prefill_short"])
+        out.append(Request(
+            rid=rid, n_prefill=n_pre,
+            n_decode=cfg["c_decode"] + 3 * (rid % 4),
+        ))
+    return out
+
+
+def _chaos_schedule(cfg, rng, base_makespan):
+    """A random fault plan: up to max_events kill/drain/slow events at
+    random fractions of the fault-free makespan, never retiring more than
+    n_replicas - 1 replicas."""
+    from repro.serving.fleet import ReplicaFault
+
+    events = []
+    retired = set()
+    for _ in range(rng.randint(1, cfg["max_events"])):
+        kind = rng.choice(["kill", "soft_kill", "drain", "slow"])
+        at = rng.uniform(0.05, 0.8) * base_makespan
+        replica = rng.randrange(cfg["n_replicas"])
+        if kind in ("kill", "soft_kill", "drain"):
+            if replica in retired or len(retired) + 1 >= cfg["n_replicas"]:
+                continue
+            retired.add(replica)
+            events.append(ReplicaFault(
+                replica=replica, at_s=at,
+                kind="drain" if kind == "drain" else "kill",
+                pool_readable=(kind == "soft_kill"),
+            ))
+        else:
+            events.append(ReplicaFault(
+                replica=replica, at_s=at, kind="slow",
+                speed_factor=rng.uniform(0.3, 0.8),
+            ))
+    return events
+
+
+def _run_one_schedule(cfg, model, params, seed, ref_gen, base_makespan):
+    """One seeded chaos serve. Returns (ok, journal); journal records the
+    schedule, every migration probe, and the first violated invariant."""
+    from repro.core import LagrangianPolicy
+    from repro.serving.fleet import FaultPlan
+
+    rng = random.Random(seed)
+    events = _chaos_schedule(cfg, rng, base_makespan)
+    journal = {
+        "seed": seed,
+        "schedule": [
+            dict(replica=f.replica, at_s=f.at_s, kind=f.kind,
+                 pool_readable=f.pool_readable, speed_factor=f.speed_factor)
+            for f in events
+        ],
+        "probes": [], "violation": None,
+    }
+    fleet = _fleet(
+        cfg, model, params, cfg["c_slots"], cfg["c_max_len"],
+        n_replicas=cfg["n_replicas"], assign="lpt", dispatch="least_load",
+        work_stealing=True,
+    )
+    # random mid-serve migration probes at pre-drawn step indices
+    probe_steps = sorted(
+        rng.randrange(10, 200) for _ in range(cfg["migration_probes"])
+    )
+    try:
+        fleet.begin_serve(
+            _chaos_requests(cfg), LagrangianPolicy,
+            fault_plan=FaultPlan(list(events)),
+        )
+        prev_clocks = [eng.clock for eng in fleet.engines]
+        steps = 0
+        while fleet.step():
+            steps += 1
+            clocks = [eng.clock for eng in fleet.engines]
+            for i, (a, b) in enumerate(zip(prev_clocks, clocks)):
+                if b < a - 1e-12:
+                    raise AssertionError(
+                        f"replica {i} clock moved backwards: {a} -> {b}"
+                    )
+            prev_clocks = clocks
+            if probe_steps and steps >= probe_steps[0]:
+                probe_steps.pop(0)
+                alive = fleet.alive_replicas
+                if len(alive) >= 2:
+                    src, dst = rng.sample(alive, 2)
+                    slots = list(fleet.engines[src].slots.active_slots)
+                    if slots:
+                        slot = rng.choice(slots)
+                        moved = fleet.migrate_slot(src, slot, dst)
+                        journal["probes"].append(
+                            dict(step=steps, src=src, dst=dst,
+                                 slot=slot, moved=moved)
+                        )
+        report = fleet.finish_serve()
+        report.validate()
+        _check_consistency(fleet)
+        done = [r for t in report.traces for r in t.requests]
+        if len(done) != cfg["n_c"] or len({r.rid for r in done}) != cfg["n_c"]:
+            raise AssertionError(
+                f"{len(done)} completions for {cfg['n_c']} requests"
+            )
+        if any(r.t_done is None for r in done):
+            raise AssertionError("request finished without a done time")
+        gen = {rid: list(t) for rid, t in fleet.generated.items()}
+        if gen != ref_gen:
+            bad = sorted(r for r in ref_gen if gen.get(r) != ref_gen[r])
+            raise AssertionError(f"streams diverged for rids {bad}")
+    except (AssertionError, RuntimeError) as e:
+        journal["violation"] = str(e)
+        return False, journal
+    journal["fault_log"] = fleet.fault_log
+    journal["migration_events"] = fleet.migration_events
+    journal["steps"] = steps
+    return True, journal
+
+
+def run_chaos_arm(cfg, model, params, out_dir):
+    from repro.core import LagrangianPolicy
+
+    base = _fleet(
+        cfg, model, params, cfg["c_slots"], cfg["c_max_len"],
+        n_replicas=cfg["n_replicas"], assign="lpt", dispatch="least_load",
+        work_stealing=True,
+    )
+    base.warm_serving_shapes()
+    base.serve(_chaos_requests(cfg), LagrangianPolicy)     # warm
+    ref = base.serve(_chaos_requests(cfg), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    journals, failed = [], []
+    t0 = time.perf_counter()
+    for seed in range(cfg["n_seeds"]):
+        ok, journal = _run_one_schedule(
+            cfg, model, params, seed, ref_gen, ref.makespan
+        )
+        journals.append(journal)
+        if not ok:
+            failed.append(seed)
+    wall = time.perf_counter() - t0
+    if failed:
+        path = os.path.join(out_dir or ".", "BENCH_chaos_journal.json")
+        with open(path, "w") as fh:
+            json.dump(journals, fh, indent=2)
+        raise SystemExit(
+            f"chaos arm: seeds {failed} violated invariants — "
+            f"event journal written to {path}"
+        )
+    events = [e for j in journals for e in j.get("fault_log", [])]
+    return {
+        "n_schedules": cfg["n_seeds"],
+        "n_requests": cfg["n_c"],
+        "all_passed": True,
+        "fault_events": len(events),
+        "drains": sum(1 for e in events if e["kind"] == "drain"),
+        "kills": sum(1 for e in events if e["kind"] == "kill"),
+        "slows": sum(1 for e in events if e["kind"] == "slow"),
+        "recovered_page_copy": sum(e.get("page_copy", 0) for e in events),
+        "recovered_recompute": sum(e.get("recompute", 0) for e in events),
+        "migration_probes_moved": sum(
+            1 for j in journals for p in j["probes"] if p["moved"]
+        ),
+        "migration_events": sum(j.get("migration_events", 0) for j in journals),
+        "wall_s": wall,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, not minutes)")
+    ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    args = ap.parse_args()
+    cfg = SMOKE if args.smoke else FULL
+
+    from .bench_io import emit_json
+
+    model, params = _model_and_params(cfg)
+    drain = run_drain_arm(cfg, model, params)
+    rebalance = run_rebalance_arm(cfg, model, params)
+    chaos = run_chaos_arm(cfg, model, params, args.out)
+
+    print("name,value,unit")
+    for mode in ("drain", "hard_kill"):
+        m = drain[mode]
+        print(f"{mode}_completed,{m['completed']},requests")
+        print(f"{mode}_recomputed_tokens,{int(m['recomputed_tokens'])},tokens")
+        print(f"{mode}_page_copy,{int(m['recovered_page_copy'])},requests")
+        print(f"{mode}_time_to_recover,{m['time_to_recover_s'] * 1e3:.2f},ms")
+        print(f"{mode}_token_parity,{int(m['token_parity'])},bool")
+    print(f"rebalance_queued_only_makespan,"
+          f"{rebalance['queued_only']['makespan_s'] * 1e3:.2f},ms")
+    print(f"rebalance_running_steal_makespan,"
+          f"{rebalance['running_steal']['makespan_s'] * 1e3:.2f},ms")
+    print(f"rebalance_migrations,"
+          f"{rebalance['running_steal']['migration_events']},events")
+    print(f"rebalance_token_parity,{int(rebalance['token_parity'])},bool")
+    print(f"chaos_schedules,{chaos['n_schedules']},runs")
+    print(f"chaos_fault_events,{chaos['fault_events']},events")
+    print(f"chaos_page_copy,{chaos['recovered_page_copy']},requests")
+    print(f"chaos_recompute,{chaos['recovered_recompute']},requests")
+    print(f"chaos_migrations,{chaos['migration_events']},events")
+
+    payload = {"drain": drain, "rebalance": rebalance, "chaos": chaos}
+    path = emit_json("chaos", payload, smoke=args.smoke, out_dir=args.out)
+    print(f"# wrote {path}")
+
+    # ---- hard-fail gates (stable structural signals) --------------------- #
+    for mode in ("drain", "hard_kill"):
+        m = drain[mode]
+        if m["completed"] != drain["n_requests"] or not m["exactly_once"]:
+            raise SystemExit(
+                f"{mode}: {m['completed']}/{drain['n_requests']} completions"
+            )
+        if not m["token_parity"]:
+            raise SystemExit(f"{mode}: streams diverged from fault-free serve")
+    if drain["drain"]["recomputed_tokens"] != 0:
+        raise SystemExit(
+            f"drain recomputed {int(drain['drain']['recomputed_tokens'])} "
+            f"tokens — page-copy must re-pay nothing"
+        )
+    if drain["drain"]["recovered_page_copy"] < 1:
+        raise SystemExit("drain never exercised the page-copy path")
+    if drain["hard_kill"]["recomputed_tokens"] <= 0:
+        raise SystemExit(
+            "hard kill re-paid no tokens — the injection state had no "
+            "generated prefix, the comparison is vacuous"
+        )
+    if not rebalance["token_parity"]:
+        raise SystemExit("rebalance: migration changed token streams")
+    if rebalance["running_steal"]["migration_events"] < 1:
+        raise SystemExit("rebalance: running-slot steal never fired")
+    if rebalance["running_steal"]["recomputed_tokens"] != 0:
+        raise SystemExit("rebalance: migration must not recompute")
+    if not (rebalance["running_steal"]["makespan_s"]
+            < rebalance["queued_only"]["makespan_s"]):
+        raise SystemExit(
+            f"running steal makespan "
+            f"{rebalance['running_steal']['makespan_s']:.4f}s not below "
+            f"queued-only {rebalance['queued_only']['makespan_s']:.4f}s"
+        )
+    if not chaos["all_passed"]:
+        raise SystemExit("chaos schedules failed")
+    if chaos["fault_events"] < cfg["n_seeds"]:
+        raise SystemExit(
+            f"only {chaos['fault_events']} fault events across "
+            f"{cfg['n_seeds']} schedules — the harness is under-injecting"
+        )
+    print("# all chaos gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -110,6 +110,8 @@ def _build_fleet(cfg, model, params, fleet_kind: str):
 
 
 def _fleet_metrics(report, wall_s: float):
+    from .bench_io import fleet_recovery_metrics
+
     s = report.summary()
     return {
         "makespan_s": s["makespan_s"],
@@ -123,6 +125,7 @@ def _fleet_metrics(report, wall_s: float):
         "replica_requests": s["replica_requests"],
         "lb_ratio_initial_cm": s["lb_ratio"],
         "wall_s": wall_s,
+        **fleet_recovery_metrics(report),
     }
 
 

@@ -124,6 +124,8 @@ def _build_fleet(cfg, model, params, mode: str):
 
 
 def _fleet_metrics(report, wall_s: float):
+    from .bench_io import fleet_recovery_metrics
+
     s = report.summary()
     return {
         "makespan_s": s["makespan_s"],
@@ -138,6 +140,7 @@ def _fleet_metrics(report, wall_s: float):
         "replica_requests": s["replica_requests"],
         "lb_ratio_live_cm": s["lb_ratio"],
         "wall_s": wall_s,
+        **fleet_recovery_metrics(report),
     }
 
 

@@ -127,6 +127,13 @@ def fleet_ascii_gantt(
             f" dead={int(report.meta['dead_replicas'])} "
             f"recovered={int(report.meta.get('recovered_requests', 0))}"
         )
+        if report.meta.get("drained_replicas"):
+            fault_tag += f" drained={int(report.meta['drained_replicas'])}"
+    if report.meta.get("migration_events"):
+        fault_tag += (
+            f" migrations={int(report.meta['migration_events'])}"
+            f"({int(report.meta.get('migrated_pages', 0))}pg)"
+        )
     out.write(
         f"Fleet Gantt [{report.policy_name}] replicas={report.n_replicas} "
         f"makespan={span:.2f}s util={report.utilization * 100:.2f}%"

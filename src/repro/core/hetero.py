@@ -97,6 +97,23 @@ def replica_request_weight(
     )
 
 
+def replica_resume_weight(
+    req: Request,
+    cost_model: CostModel,
+    slots_per_replica: int,
+    remaining_decode: int,
+) -> float:
+    """Service time of a page-copied (live-migrated) in-flight request on a
+    replica: decode-only. The import lands the request's KV pages directly
+    into the destination pool, so unlike ``replica_request_weight`` no
+    prefill is ever re-paid — which is exactly why moving a running
+    straggler can price in where re-queueing it could not. The running-slot
+    steal gate and the drain placement both price through this rule."""
+    return cost_model.estimated_decode_completion(
+        max(remaining_decode, 0), slots_per_replica
+    )
+
+
 def hetero_weights(
     requests: Sequence[Request],
     cost_models: Sequence[CostModel],

@@ -218,6 +218,13 @@ class ScheduleTrace:
     # engine fills e.g. mixed_rounds / prefill_stall_time_s); merged into
     # ``summary()`` so serve() results carry them without schema changes.
     meta: Dict[str, float] = field(default_factory=dict)
+    # rid -> prefill completions the request performed on OTHER traces
+    # before it was live-migrated (KV page-copy) into this one. A migrated
+    # request arrives mid-decode without ever prefilling here, so validate()
+    # credits these against the 1 + preemptions expectation; the exporter
+    # drops the request from its own trace, keeping fleet-level accounting
+    # exactly-once.
+    external_prefills: Dict[int, int] = field(default_factory=dict)
 
     @property
     def makespan(self) -> float:
@@ -438,11 +445,13 @@ class ScheduleTrace:
                     prefilled[rid] = prefilled.get(rid, 0) + 1
         for r in self.requests:
             expected = 1 + r.preemptions
-            if prefilled.get(r.rid, 0) != expected:
+            actual = prefilled.get(r.rid, 0) + self.external_prefills.get(r.rid, 0)
+            if actual != expected:
                 raise AssertionError(
-                    f"request {r.rid} prefilled {prefilled.get(r.rid, 0)} "
+                    f"request {r.rid} prefilled {actual} "
                     f"times (expected {expected} for {r.preemptions} "
-                    f"preemptions)"
+                    f"preemptions; "
+                    f"{self.external_prefills.get(r.rid, 0)} external)"
                 )
             if r.decoded != r.n_decode:
                 raise AssertionError(

@@ -1,5 +1,5 @@
 from ..core.hetero import ReplicaSpec
-from .engine import Engine, EngineConfig
+from .engine import Engine, EngineConfig, SlotCheckpoint
 from .fleet import (
     DISPATCH_POLICIES,
     FaultPlan,

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -160,6 +161,13 @@ class EngineConfig:
     # pure function of (seed, request id, token index) — independent of
     # horizon grouping, slot placement, batch composition, or KV layout.
     sample_seed: int = 0
+    # Invariant checking (paged layout): assert allocator free-list/free-set
+    # consistency plus the host↔device block-table mirror at every stage
+    # boundary and every migration export/import. Each check costs a device
+    # sync, so it must stay out of timed regions: None resolves from the
+    # REPRO_DEBUG_INVARIANTS env var — the test suite turns it on globally
+    # (tests/conftest.py), benchmarks leave it off.
+    debug_invariants: Optional[bool] = None
 
 
 def _bucket(x: int, buckets: Sequence[int]) -> int:
@@ -223,6 +231,42 @@ class _ChunkState:
     @property
     def remaining(self) -> int:
         return self.total - self.done
+
+
+@dataclasses.dataclass
+class SlotCheckpoint:
+    """Portable mid-request slot state for live KV migration by page-copy.
+
+    ``Engine.export_slot`` gathers everything a destination engine needs to
+    continue a request bit-identically with ZERO recomputed tokens: the
+    slot's KV pages (gathered out of the source pool, page-id-agnostic),
+    the pending token awaiting its next decode round, the sampler cursor
+    (``emitted`` — sampling is a pure function of (seed, rid, token index),
+    so the destination resumes the exact stream), the generated-so-far
+    prefix (output record + budget bookkeeping), and mid-chunk prefill
+    progress for requests migrated before their prompt finished.
+
+    ``prefill_credit`` is the number of prefill completions the request has
+    performed on OTHER traces so far: a bound slot has completed all
+    ``1 + preemptions`` it will ever need; a mid-chunk prefill has completed
+    ``preemptions`` (its current pass is still in flight). The importer
+    records it in ``ScheduleTrace.external_prefills`` so exactly-once
+    prefill accounting validates on both sides of the move."""
+
+    req: Request
+    kind: str                             # "bound" | "chunking"
+    emitted: int                          # sampler cursor (bound slots)
+    pending_token: int                    # next decode round's input token
+    kv_length: int                        # valid KV entries in the payload
+    k_pages: Any                          # (L, KV, n_pages, page_size, D)
+    v_pages: Any
+    n_pages: int
+    prefix: List[int]                     # every token generated so far
+    prefill_credit: int
+    # mid-chunk prefill progress (kind == "chunking" only)
+    chunk_done: int = 0
+    resume_emitted: int = 0
+    resume_pending: int = -1
 
 
 def _fused_decode(
@@ -346,6 +390,23 @@ class Engine:
         self._resume_rids: set = set()
         self.preemption_events = 0
         self.offline_deferrals = 0
+        # Recovery/migration accounting. ``recomputed_tokens`` counts every
+        # token re-prefilled on a recompute-on-resume pass (prompt + restored
+        # prefix — work that had already been paid for once); page-copy
+        # migration contributes zero here by construction, which is what the
+        # chaos bench hard-gates. ``migrated_pages_in/out`` count KV pages
+        # that physically moved through export/import.
+        self.recomputed_tokens = 0
+        self.migrated_pages_in = 0
+        self.migrated_pages_out = 0
+        self.migrations_in = 0
+        self.migrations_out = 0
+        # Stage-boundary invariant checks (see EngineConfig.debug_invariants)
+        self.debug_invariants = (
+            config.debug_invariants
+            if config.debug_invariants is not None
+            else os.environ.get("REPRO_DEBUG_INVARIANTS", "") == "1"
+        )
         # High-water mark of simultaneously in-flight requests (bound slots
         # + mid-chunk prefills) — the admission-concurrency metric the
         # on-demand-vs-upfront reservation comparison is judged on.
@@ -642,6 +703,10 @@ class Engine:
                         prompt = np.concatenate(
                             [prompt, np.asarray(prefix[:-1], np.int32)]
                         )
+                    # the whole re-prefilled span (prompt + prefix) is work
+                    # this request already paid for once — the cost page-copy
+                    # migration exists to avoid
+                    self.recomputed_tokens += len(prompt)
             if self.cfg.page_reserve == "upfront":
                 span = self._tokens_bound(req)
             else:
@@ -1062,6 +1127,11 @@ class Engine:
         self.preemption_events = 0
         self.offline_deferrals = 0
         self.peak_concurrency = 0
+        self.recomputed_tokens = 0
+        self.migrated_pages_in = 0
+        self.migrated_pages_out = 0
+        self.migrations_in = 0
+        self.migrations_out = 0
         self._sv = _ServeSession(
             trace=trace, clients=clients, scheduler=request_scheduler,
             policy=iteration_policy, track_requests=track_requests,
@@ -1114,6 +1184,151 @@ class Engine:
         self.generated[req.rid] = list(prefix)
         self._resume_rids.add(req.rid)
         self._sv.scheduler.push(req)
+
+    # ------------------------------------------------------------------ #
+    # Live migration by page-copy (fleet drain / rebalancing / recovery)  #
+    # ------------------------------------------------------------------ #
+    def _check_invariants(self) -> None:
+        """debug_invariants hook: allocator free-list/free-set consistency
+        plus the host↔device block-table mirror (paged layout only)."""
+        if self.cfg.kv_layout != "paged":
+            return
+        self.slots.allocator.check_consistency()
+        self.slots.check_block_table_mirror()
+
+    def _local_prefill_completions(self, rid: int) -> int:
+        """Prefill completions for ``rid`` recorded in THIS session's trace
+        so far — the same counting rule ``ScheduleTrace.validate`` applies.
+        An import must subtract these from the checkpoint's total credit so
+        a request that leaves and later returns is not double-counted."""
+        cnt = 0
+        for s in self._sv.trace.stages:
+            if s.kind is StageKind.PREFILL:
+                cnt += sum(1 for r in s.busy.values() if r == rid)
+            elif s.kind is StageKind.MIXED:
+                cnt += sum(1 for r in s.prefilled.values() if r == rid)
+        return cnt
+
+    def can_import(self, n_pages: int) -> bool:
+        """Whether this engine can host a migrated slot of ``n_pages`` right
+        now: a truly free slot, and pool headroom beyond the pages its own
+        active decoders need for their next round — an import must never be
+        the thing that immediately forces a preemption here."""
+        if self.cfg.kv_layout != "paged" or self._sv is None:
+            return False
+        if not any(s not in self._chunking for s in self.slots.free_slots):
+            return False
+        free = self.slots.allocator.num_free - self._decode_growth_pages(1)
+        return n_pages <= free
+
+    def slot_pages(self, slot: int) -> int:
+        """Pages ``slot`` currently owns (capacity probe for migration)."""
+        return len(self.slots.tables[slot])
+
+    def export_slot(self, slot: int) -> SlotCheckpoint:
+        """Extract ``slot``'s full mid-request state as a portable
+        ``SlotCheckpoint`` and release the slot: gather its KV pages off the
+        pool, capture the pending token / sampler cursor / generated prefix
+        (and mid-chunk prefill progress), free the pages, and drop the
+        request from this trace — it continues its life, exactly-once, on
+        whichever engine imports the checkpoint."""
+        sv = self._sv
+        if slot in self._chunking:
+            st = self._chunking[slot]
+            req = st.req
+            kind = "chunking"
+            emitted = st.resume_emitted
+            pending = st.resume_pending
+            chunk_done = st.done
+            resume_emitted = st.resume_emitted
+            resume_pending = st.resume_pending
+            # the in-flight pass hasn't completed; earlier passes number
+            # exactly req.preemptions (0 for a fresh prompt)
+            credit = req.preemptions
+        elif self.slots.request_of[slot] is not None:
+            req = self.slots.request_of[slot]
+            kind = "bound"
+            emitted = self.slots.emitted[slot]
+            pending = int(self.pending_token[slot])
+            chunk_done = 0
+            resume_emitted = 0
+            resume_pending = -1
+            # a bound slot has completed every prefill it will ever need
+            credit = 1 + req.preemptions
+        else:
+            raise RuntimeError(f"slot {slot} holds no in-flight request")
+        pages, k_pages, v_pages, kv_length = self.slots.export_pages(slot)
+        if kind == "chunking":
+            del self._chunking[slot]
+            self.slots.free_pages_of(slot)
+        else:
+            self.slots.release(slot)
+            sv.clients[slot].current = None
+        prefix = self.generated.pop(req.rid, [])
+        sv.trace.requests = [r for r in sv.trace.requests if r.rid != req.rid]
+        sv.trace.external_prefills.pop(req.rid, None)
+        self.migrations_out += 1
+        self.migrated_pages_out += len(pages)
+        if self.debug_invariants:
+            self._check_invariants()
+        return SlotCheckpoint(
+            req=req, kind=kind, emitted=emitted, pending_token=pending,
+            kv_length=kv_length, k_pages=k_pages, v_pages=v_pages,
+            n_pages=len(pages), prefix=list(prefix), prefill_credit=credit,
+            chunk_done=chunk_done, resume_emitted=resume_emitted,
+            resume_pending=resume_pending,
+        )
+
+    def import_slot(self, ckpt: SlotCheckpoint) -> int:
+        """Land a migrated slot in this engine: allocate fresh pages,
+        scatter the KV payload, and rebind the request exactly where it
+        left off — same pending token, same sampler cursor, so the stream
+        continues bit-identical with zero recomputed tokens. Returns the
+        destination slot. Callers gate on ``can_import`` first."""
+        sv = self._sv
+        free = [s for s in self.slots.free_slots if s not in self._chunking]
+        if not free:
+            raise RuntimeError("no free slot to import into")
+        slot = free[0]
+        self.slots.import_pages(slot, ckpt.k_pages, ckpt.v_pages, ckpt.kv_length)
+        req = ckpt.req
+        if ckpt.prefix:
+            self.generated[req.rid] = list(ckpt.prefix)
+        if ckpt.kind == "bound":
+            self.slots.bind(slot, req)
+            self.slots.emitted[slot] = ckpt.emitted
+            self.pending_token[slot] = ckpt.pending_token
+            # decode stages read pending tokens from the device copy when
+            # one is live — it predates this import and must be rebuilt
+            self._dev_pending = None
+            sv.clients[slot].current = req
+            req.decoded = ckpt.emitted
+        else:
+            prompt = self._prompt_tokens(req)
+            if ckpt.resume_emitted > 1:
+                prompt = np.concatenate(
+                    [prompt, np.asarray(ckpt.prefix[:-1], np.int32)]
+                )
+            self._chunking[slot] = _ChunkState(
+                slot=slot, req=req, prompt=prompt, done=ckpt.chunk_done,
+                resume_emitted=ckpt.resume_emitted,
+                resume_pending=ckpt.resume_pending,
+            )
+        req.client = slot
+        known = {r.rid for r in sv.trace.requests}
+        if req.rid not in known:
+            sv.trace.requests.append(req)
+        # credit only the completions THIS trace hasn't recorded locally (a
+        # request can leave and come back; its earlier local stages remain)
+        sv.trace.external_prefills[req.rid] = (
+            ckpt.prefill_credit - self._local_prefill_completions(req.rid)
+        )
+        self._note_concurrency()
+        self.migrations_in += 1
+        self.migrated_pages_in += ckpt.n_pages
+        if self.debug_invariants:
+            self._check_invariants()
+        return slot
 
     def _filter_overload(
         self,
@@ -1401,6 +1616,8 @@ class Engine:
                     return "ran"      # clock progress counts as progress
                 return "idle"
             sv.stages_run += 1
+            if self.debug_invariants:
+                self._check_invariants()
             return "ran"
         raise RuntimeError(
             "engine livelock: policy kept refusing the only runnable stage"
@@ -1419,6 +1636,9 @@ class Engine:
             preemption_events=self.preemption_events,
             peak_concurrency=self.peak_concurrency,
             offline_deferrals=self.offline_deferrals,
+            recomputed_tokens=self.recomputed_tokens,
+            migrations_in=self.migrations_in,
+            migrations_out=self.migrations_out,
         )
         if validate:
             trace.validate()

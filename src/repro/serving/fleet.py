@@ -52,6 +52,7 @@ execution can beat.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -62,6 +63,7 @@ from ..core.hetero import (
     evaluate_hetero_assignment,
     hetero_theoretical_lower_bound,
     replica_request_weight,
+    replica_resume_weight,
     solve_hetero,
 )
 from ..core.iteration import IterationPolicy, LagrangianPolicy
@@ -153,15 +155,27 @@ class ReplicaFault:
     request. ``kind="slow"`` multiplies the replica's ``speed_factor`` by
     ``speed_factor`` (< 1 degrades it — e.g. thermal throttling, a noisy
     neighbor), which both stretches its virtual-time stages and, through
-    its profiler's refits, repels future dispatch and invites stealing."""
+    its profiler's refits, repels future dispatch and invites stealing.
+
+    ``kind="drain"`` gracefully decommissions the replica at ``at_s``
+    (rolling restart): dispatch stops, its in-flight slots live-migrate to
+    survivors by KV page-copy, its queued work is re-placed through the
+    R||Cmax pricing, and the replica retires with zero dropped or
+    recomputed tokens. ``pool_readable=True`` on a kill marks a soft
+    failure (process exit, host and KV pool still reachable): recovery
+    then prefers the same page-copy path, falling back to
+    recompute-on-resume only when no survivor can host the pages; a hard
+    kill (the default) always recomputes — the pool died with the
+    replica."""
 
     replica: int
     at_s: float
-    kind: str = "kill"                    # "kill" | "slow"
+    kind: str = "kill"                    # "kill" | "slow" | "drain"
     speed_factor: float = 0.5             # for kind="slow" only
+    pool_readable: bool = False           # for kind="kill" only
 
     def __post_init__(self):
-        if self.kind not in ("kill", "slow"):
+        if self.kind not in ("kill", "slow", "drain"):
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.at_s < 0:
             raise ValueError("fault time must be >= 0")
@@ -210,6 +224,15 @@ class FleetConfig:
     dispatch: str = "least_load"         # key into DISPATCH_POLICIES
     work_stealing: bool = True
     local_search_rounds: int = 200
+    # In-flight rebalancing: when a starving replica finds no profitable
+    # QUEUED steal, allow it to live-migrate the longest-remaining RUNNING
+    # request off the most-loaded donor by KV page-copy — same double-gated
+    # R||Cmax makespan check as queued stealing, but priced decode-only
+    # (``replica_resume_weight``: the import skips the prefill entirely).
+    # Off by default: queued-only stealing is the paper's Algorithm 1
+    # baseline; ``benchmarks/chaos.py`` gates that this flag strictly
+    # improves fleet makespan on the straggler-tail workload.
+    steal_running: bool = False
 
 
 class Fleet:
@@ -277,10 +300,21 @@ class Fleet:
         self._resumed = False
         # fault-injection state (per serve; see begin_serve / ReplicaFault)
         self._dead: set = set()
+        self._drained: set = set()
         self._pending_faults: List[ReplicaFault] = []
         self.fault_log: List[Dict[str, Any]] = []
         self.recovered_requests = 0
         self._lost_preemptions = 0
+        # live-migration accounting (drain / rebalancing / soft-kill paths)
+        self.migration_events = 0
+        self.migrated_pages = 0
+        self.migration_log: List[Dict[str, Any]] = []
+        # fault/drain events whose displaced requests are not all re-admitted
+        # yet: entries {"entry": fault_log row, "t0": s, "pending": {rid: req}}
+        # — drained when ``_note_recoveries`` sees every displaced request
+        # bound/chunking on a survivor (or finished), stamping the event's
+        # ``recover_s`` (time-to-recover)
+        self._recovery_watch: List[Dict[str, Any]] = []
         # pricing_cost_models memo (invalidated by refits/restores via key)
         self._pricing_key: Optional[tuple] = None
         self._pricing_models: List[CostModel] = []
@@ -424,11 +458,16 @@ class Fleet:
                     f"{self.cfg.n_replicas}-replica fleet"
                 )
         if len({f.replica for f in self._pending_faults
-                if f.kind == "kill"}) >= self.cfg.n_replicas:
-            raise ValueError("fault plan kills every replica")
+                if f.kind in ("kill", "drain")}) >= self.cfg.n_replicas:
+            raise ValueError("fault plan kills or drains every replica")
         self.fault_log = []
         self.recovered_requests = 0
         self._lost_preemptions = 0
+        self._drained = set()
+        self.migration_events = 0
+        self.migrated_pages = 0
+        self.migration_log = []
+        self._recovery_watch = []
         if hasattr(self.dispatcher, "reset"):
             self.dispatcher.reset()
         offline = [r for r in requests if r.arrival <= 0.0]
@@ -550,12 +589,75 @@ class Fleet:
         after = max(thief_done + w_thief / n, donor_done - w_donor / n)
         return after < before - 1e-12
 
+    def _migration_improves(
+        self, thief: int, donor: int, victim: Request, remaining: int
+    ) -> bool:
+        """The in-flight analogue of ``_steal_improves``, priced decode-only
+        (``replica_resume_weight`` — a page-copy import re-pays no prefill).
+        The victim is RUNNING on the donor right now, so its status-quo
+        finish is the donor's clock plus its remaining decode at the donor's
+        speed (no slot wait); both the finish-time gate and the pair-makespan
+        gate must still improve for the migration to commit — on a
+        homogeneous pair neither can, which is exactly right: moving a
+        running request between equal machines buys nothing."""
+        cms = self.pricing_cost_models()
+        n = self.engine_cfg.n_slots
+        w_thief = replica_resume_weight(victim, cms[thief], n, remaining)
+        w_donor = replica_resume_weight(victim, cms[donor], n, remaining)
+        thief_finish = self.engines[thief].clock + w_thief
+        donor_finish = self.engines[donor].clock + w_donor
+        if thief_finish >= donor_finish:
+            return False
+        thief_done = self.engines[thief].clock + self.estimated_load_s(thief)
+        donor_done = self.engines[donor].clock + self.estimated_load_s(donor)
+        before = max(thief_done, donor_done)
+        after = max(thief_done + w_thief / n, donor_done - w_donor / n)
+        return after < before - 1e-12
+
+    def _try_steal_running(self, thief: int) -> bool:
+        """In-flight rebalancing (``FleetConfig.steal_running``): migrate
+        the longest-remaining RUNNING request off the most-loaded donor onto
+        the starving thief by KV page-copy, when the double-gated makespan
+        check approves. This is the straggler-tail case queued-only stealing
+        structurally cannot touch: once every queue is empty, the only work
+        left to rebalance is already bound to a slot."""
+        for j in sorted(
+            (k for k in self.alive_replicas if k != thief),
+            key=lambda k: (-self.estimated_load_s(k), k),
+        ):
+            donor = self.engines[j]
+            best: Optional[tuple] = None     # (remaining, slot, req)
+            for slot in donor.slots.active_slots:
+                req = donor.slots.request_of[slot]
+                rem = (
+                    int(req.n_decode_est or req.n_decode)
+                    - donor.slots.emitted[slot]
+                )
+                if rem <= 1:
+                    continue                 # nothing meaningful left to move
+                if best is None or rem > best[0]:
+                    best = (rem, slot, req)
+            if best is None:
+                continue
+            rem, slot, req = best
+            if not self._migration_improves(thief, j, req, rem):
+                continue
+            if not self.migrate_slot(j, slot, thief):
+                continue
+            self.steal_log.append(
+                {"rid": req.rid, "from": j, "to": thief, "running": 1}
+            )
+            return True
+        return False
+
     def _try_steal(self) -> None:
         """Move the longest queued request from the most-loaded replica to
         each starving one (idle slot, empty queue). Queued work cannot start
         on its owner (all donor slots busy — otherwise it would not be
         queued); the steal commits only when the R||Cmax-priced finish time
-        improves (``_steal_improves``)."""
+        improves (``_steal_improves``). With ``steal_running`` on, a thief
+        that finds no profitable queued steal escalates to migrating a
+        running slot (``_try_steal_running``)."""
         for i, eng in enumerate(self.engines):
             if i in self._dead:
                 continue
@@ -575,6 +677,7 @@ class Fleet:
                     s in other._chunking for s in other.slots.free_slots
                 )
             ]
+            stole = False
             # most-loaded donors first (Algorithm 1's argmax remain_token)
             for j in sorted(
                 donors, key=lambda k: (-self.estimated_load_s(k), k)
@@ -588,7 +691,10 @@ class Fleet:
                 sched.push(stolen)
                 self.steal_events += 1
                 self.steal_log.append({"rid": stolen.rid, "from": j, "to": i})
+                stole = True
                 break
+            if not stole and self.cfg.steal_running:
+                self._try_steal_running(i)
 
     # ------------------------------------------------------------------ #
     # Fault injection / recovery                                          #
@@ -602,10 +708,19 @@ class Fleet:
             f = self._pending_faults.pop(0)
             if f.replica in self._dead:
                 continue                      # already gone; fault is moot
-            if f.kind == "kill":
+            if f.kind in ("kill", "drain"):
                 if len(self._dead) + 1 >= self.cfg.n_replicas:
-                    raise RuntimeError("fault plan killed every replica")
-                self._kill_replica(f.replica, now)
+                    raise RuntimeError(
+                        "fault plan killed or drained every replica"
+                    )
+                if f.kind == "drain":
+                    self._evacuate_replica(
+                        f.replica, now, pool_readable=True, kind="drain"
+                    )
+                else:
+                    self._kill_replica(
+                        f.replica, now, pool_readable=f.pool_readable
+                    )
             else:
                 eng = self.engines[f.replica]
                 eng.speed_factor = eng.speed_factor * f.speed_factor
@@ -616,68 +731,218 @@ class Fleet:
             fired += 1
         return fired
 
-    def _kill_replica(self, i: int, now: float) -> None:
+    def _placement_cost(self, j: int, req: Request, in_flight: bool) -> float:
+        """Estimated absolute fleet time at which survivor ``j`` would
+        finish a displaced request: its clock, plus its outstanding load,
+        plus the request's own service time — decode-only for an in-flight
+        page-copy (no prefill is re-paid), full weight for queued work.
+        Every term prices through replica ``j``'s own fitted cost model:
+        drain and recovery placement are R||Cmax decisions like any other."""
+        cm = self.replica_cost_model(j)
+        est = int(req.n_decode_est or req.n_decode)
+        if in_flight:
+            w = replica_resume_weight(
+                req, cm, self.engine_cfg.n_slots, max(est - req.decoded, 0)
+            )
+        else:
+            w = self._request_weight_s(req, est, cm)
+        return self.engines[j].clock + self.estimated_load_s(j) + w
+
+    def migrate_slot(self, src: int, slot: int, dst: int) -> bool:
+        """Live-migrate one in-flight slot from replica ``src`` to ``dst``
+        by KV page-copy: export the slot checkpoint (pages + pending token
+        + sampler cursor), import it into freshly allocated pages on the
+        destination, zero recomputed tokens, bit-identical stream. Returns
+        False — with no state changed — when ``dst`` cannot host it (no
+        free slot, or too little pool headroom)."""
+        if src == dst:
+            raise ValueError("migration source and destination coincide")
+        src_eng, dst_eng = self.engines[src], self.engines[dst]
+        if not dst_eng.can_import(src_eng.slot_pages(slot)):
+            return False
+        ckpt = src_eng.export_slot(slot)
+        dst_eng.import_slot(ckpt)
+        self.migration_events += 1
+        self.migrated_pages += ckpt.n_pages
+        self.migration_log.append({
+            "rid": ckpt.req.rid, "from": src, "to": dst,
+            "pages": ckpt.n_pages, "kind": ckpt.kind,
+        })
+        return True
+
+    def drain_replica(self, i: int, now: Optional[float] = None) -> Dict[str, Any]:
+        """Gracefully retire replica ``i`` mid-serve (rolling restart):
+        stop dispatching to it, live-migrate its in-flight slots to
+        survivors by page-copy, re-place its queued work through the
+        R||Cmax pricing, and mark it retired — zero dropped requests and
+        (pool headroom permitting) zero recomputed tokens. Returns the
+        fault-log entry recording what moved and how."""
+        if i in self._dead:
+            raise ValueError(f"replica {i} is already retired")
+        if len(self._dead) + 1 >= self.cfg.n_replicas:
+            raise RuntimeError("cannot drain the last alive replica")
+        if now is None:
+            now = self.engines[i].clock
+        return self._evacuate_replica(i, now, pool_readable=True, kind="drain")
+
+    def _kill_replica(
+        self, i: int, now: float, pool_readable: bool = False
+    ) -> None:
         """Remove replica ``i`` from the fleet and recover its outstanding
-        work onto survivors, exactly-once:
+        work onto survivors, exactly-once. A hard kill (the default) lost
+        its KV pool with the process: in-flight requests recompute their
+        generated prefix on a survivor. With ``pool_readable=True`` (soft
+        failure) recovery prefers page-copy migration — see
+        ``_evacuate_replica``."""
+        self._evacuate_replica(i, now, pool_readable=pool_readable, kind="kill")
+
+    def _evacuate_replica(
+        self, i: int, now: float, pool_readable: bool, kind: str
+    ) -> Dict[str, Any]:
+        """Move every piece of replica ``i``'s outstanding work onto
+        survivors and retire it, exactly-once:
 
           * **finished** requests stay finished — their tokens remain in
             the dead engine's ``generated`` record and their trace rows in
             its (kept) trace; they are never re-served;
           * **in-flight** requests (bound decode slots, mid-chunk prefills)
-            are recovered with their generated-so-far prefix and re-queued
-            on a survivor for recompute-on-resume — the same mechanism as
-            preemption-by-eviction, so the resumed stream is bit-identical;
-          * **queued** requests simply move.
+            live-migrate by KV page-copy when the source pool is readable
+            (drain / soft kill) and a survivor can host the pages — zero
+            recomputed tokens, the stream just continues; otherwise they
+            fall back to PR-6-style recompute-on-resume (generated prefix
+            re-prefilled on the survivor, stream still bit-identical);
+          * **queued** requests move to the cheapest-completion survivor
+            (``_placement_cost``, the R||Cmax pricing).
 
-        Recovered requests restart their trace life on the survivor: rows
-        the dead replica recorded for them (committed but unfinished) are
-        stripped from its trace and their preemption counters reset, so
-        both the dead trace and the survivor trace validate exactly-once
-        prefill accounting on their own. Pre-kill preemptions are
-        preserved in the report meta (``lost_preemptions``)."""
+        Recompute-recovered requests restart their trace life on the
+        survivor: rows the dead replica recorded for them are stripped from
+        its trace and their preemption counters reset (preserved in the
+        report meta as ``lost_preemptions``). Page-copied requests instead
+        carry their full prefill history with them via the checkpoint's
+        prefill credit — nothing resets, the destination trace simply
+        credits the completions that happened elsewhere."""
         eng = self.engines[i]
         sv = eng._sv
-        recovered: List[tuple] = []           # (request, prefix tokens)
-        # bound decode slots: salvage the emitted prefix for recompute
-        for slot in list(eng.slots.active_slots):
-            req = eng.slots.request_of[slot]
-            prefix = eng.generated.pop(req.rid, [])
-            eng.slots.release(slot)
-            sv.clients[slot].current = None
-            recovered.append((req, prefix))
-        # mid-chunk prefills: a resumed recompute chunk still carries its
-        # prefix; a fresh chunk has emitted nothing and restarts clean
-        for slot in list(eng._chunking):
-            st = eng._chunking.pop(slot)
-            eng.slots.free_pages_of(slot)
-            prefix = eng.generated.pop(st.req.rid, [])
-            recovered.append((st.req, prefix))
+        # retire FIRST so placement/pricing never targets the victim
+        self._dead.add(i)
+        if kind == "drain":
+            self._drained.add(i)
+        self._pricing_key = None              # membership changed
+        page_copied = 0
+        recompute: List[tuple] = []           # (request, prefix tokens)
+        displaced: Dict[int, Request] = {}
+        # in-flight work: page-copy where possible, recompute otherwise
+        in_flight = [(s, True) for s in list(eng.slots.active_slots)]
+        in_flight += [(s, False) for s in list(eng._chunking)]
+        for slot, bound in in_flight:
+            req = (
+                eng.slots.request_of[slot] if bound
+                else eng._chunking[slot].req
+            )
+            displaced[req.rid] = req
+            if pool_readable:
+                n_pages = eng.slot_pages(slot)
+                cands = [
+                    j for j in self.alive_replicas
+                    if self.engines[j].can_import(n_pages)
+                ]
+                if cands:
+                    dst = min(
+                        cands,
+                        key=lambda j: (self._placement_cost(j, req, bound), j),
+                    )
+                    self.migrate_slot(i, slot, dst)
+                    page_copied += 1
+                    continue
+            # hard kill, or no survivor can host the pages right now
+            if bound:
+                prefix = eng.generated.pop(req.rid, [])
+                eng.slots.release(slot)
+                sv.clients[slot].current = None
+            else:
+                st = eng._chunking.pop(slot)
+                eng.slots.free_pages_of(slot)
+                prefix = eng.generated.pop(st.req.rid, [])
+            recompute.append((req, prefix))
+        n_recompute = len(recompute)          # in-flight fallbacks only
         # queued: never started here — but an earlier preemptee waiting to
         # resume still owns its prefix
+        moved_queued = 0
         for req in list(sv.scheduler.queued):
             sv.scheduler.commit(None, req)    # remove from the dead queue
+            displaced[req.rid] = req
             prefix = eng.generated.pop(req.rid, [])
-            recovered.append((req, prefix))
+            recompute.append((req, prefix))
+            moved_queued += 1
         eng._resume_rids.clear()
         # the dead trace keeps only work it *finished*; unfinished rows move
         # with their requests to the survivor's trace
         sv.trace.requests = [r for r in sv.trace.requests if r.t_done is not None]
-        self._dead.add(i)
-        self._pricing_key = None              # membership changed
-        for req, prefix in recovered:
+        for req, prefix in recompute:
             self._lost_preemptions += req.preemptions
             req.preemptions = 0
             req.client = None
-            tgt = self.engines[self.dispatcher.choose(self, req)]
+            if kind == "drain":
+                tgt_i = min(
+                    self.alive_replicas,
+                    key=lambda j: (self._placement_cost(j, req, False), j),
+                )
+            else:
+                tgt_i = self.dispatcher.choose(self, req)
+            tgt = self.engines[tgt_i]
             if prefix:
                 tgt.adopt_resume(req, prefix)
             else:
                 tgt._sv.scheduler.push(req)
-        self.recovered_requests += len(recovered)
-        self.fault_log.append({
-            "kind": "kill", "replica": i, "at_s": now, "applied_at_s": now,
-            "recovered": len(recovered),
-        })
+        self.recovered_requests += len(displaced)
+        entry: Dict[str, Any] = {
+            "kind": kind, "replica": i, "at_s": now, "applied_at_s": now,
+            "recovered": len(displaced),
+            "page_copy": page_copied, "recompute": n_recompute,
+            "moved_queued": moved_queued,
+        }
+        self.fault_log.append(entry)
+        if displaced:
+            self._recovery_watch.append(
+                {"entry": entry, "t0": now, "pending": dict(displaced)}
+            )
+            # page-copied work is re-admitted within the event itself
+            self._note_recoveries(now)
+        return entry
+
+    def _request_admitted(self, req: Request) -> bool:
+        """A displaced request counts as re-admitted once it is in flight
+        (bound slot or mid-chunk prefill) on an alive replica — or done."""
+        if req.t_done is not None:
+            return True
+        for j in self.alive_replicas:
+            eng = self.engines[j]
+            for slot in eng.slots.active_slots:
+                if eng.slots.request_of[slot].rid == req.rid:
+                    return True
+            for st in eng._chunking.values():
+                if st.req.rid == req.rid:
+                    return True
+        return False
+
+    def _note_recoveries(self, now: float) -> None:
+        """Stamp time-to-recover on fault/drain events: the span from the
+        event to the instant ALL its displaced requests are re-admitted
+        somewhere alive. Page-copy evacuations recover at the event itself
+        (recover_s = 0); recompute paths pay queueing plus the re-prefill."""
+        if not self._recovery_watch:
+            return
+        remaining = []
+        for w in self._recovery_watch:
+            w["pending"] = {
+                rid: req for rid, req in w["pending"].items()
+                if not self._request_admitted(req)
+            }
+            if w["pending"]:
+                remaining.append(w)
+            else:
+                w["entry"]["recover_s"] = max(now - w["t0"], 0.0)
+        self._recovery_watch = remaining
 
     def step(self) -> bool:
         """Advance the fleet by one stage on the lowest-clock alive replica
@@ -715,9 +980,16 @@ class Fleet:
                 raise RuntimeError(
                     f"replica {i} idle with pending work — fleet routing bug"
                 )
+            self._note_recoveries(self.engines[i].clock)
             return True
 
     def finish_serve(self) -> FleetReport:
+        if self._recovery_watch:
+            end = max(
+                (self.engines[i].clock for i in self.alive_replicas),
+                default=0.0,
+            )
+            self._note_recoveries(end)
         traces = [
             eng.finish_serve(validate=not self._resumed)
             for eng in self.engines
@@ -758,11 +1030,30 @@ class Fleet:
                 self._offline_result.gap if self._offline_result else 0.0
             ),
         )
+        report.meta["recomputed_tokens"] = float(
+            sum(eng.recomputed_tokens for eng in self.engines)
+        )
+        if self.migration_events:
+            report.meta["migration_events"] = float(self.migration_events)
+            report.meta["migrated_pages"] = float(self.migrated_pages)
         if self.fault_log:
             report.meta["fault_events"] = float(len(self.fault_log))
             report.meta["dead_replicas"] = float(len(self._dead))
+            report.meta["drained_replicas"] = float(len(self._drained))
             report.meta["recovered_requests"] = float(self.recovered_requests)
             report.meta["lost_preemptions"] = float(self._lost_preemptions)
+            report.meta["recovered_page_copy"] = float(
+                sum(e.get("page_copy", 0) for e in self.fault_log)
+            )
+            report.meta["recovered_recompute"] = float(
+                sum(e.get("recompute", 0) for e in self.fault_log)
+            )
+            report.meta["time_to_recover_s"] = float(
+                max(
+                    (e["recover_s"] for e in self.fault_log if "recover_s" in e),
+                    default=0.0,
+                )
+            )
         if not self._resumed:
             report.validate()
         return report
@@ -835,6 +1126,16 @@ class Fleet:
             ),
             "steal_events": self.steal_events,
             "dispatch_cursor": int(getattr(self.dispatcher, "cursor", 0)),
+            # fault/recovery state: a fleet restored after a mid-serve kill
+            # or drain must keep pricing/dispatch away from dead replicas
+            # and keep its accounting (lost preemptions, fault events)
+            "dead": np.asarray(sorted(self._dead), dtype=np.int32),
+            "drained": np.asarray(sorted(self._drained), dtype=np.int32),
+            "lost_preemptions": int(self._lost_preemptions),
+            "recovered_requests": int(self.recovered_requests),
+            # JSON string: survives np.asarray round-trips that flatten
+            # checkpoint leaves (a list of dicts would not)
+            "fault_log": json.dumps(self.fault_log),
         }
 
     def load_state_dict(
@@ -860,6 +1161,16 @@ class Fleet:
                 )
         self._resumed = True
         self.steal_events = int(state.get("steal_events", 0))
+        self._dead = {int(i) for i in np.asarray(state.get("dead", []))}
+        self._drained = {int(i) for i in np.asarray(state.get("drained", []))}
+        self._lost_preemptions = int(state.get("lost_preemptions", 0))
+        self.recovered_requests = int(state.get("recovered_requests", 0))
+        raw_log = state.get("fault_log", "[]")
+        if not isinstance(raw_log, str):      # np.str_ after tree_map
+            raw_log = str(np.asarray(raw_log))
+        self.fault_log = json.loads(raw_log)
+        self._recovery_watch = []             # recover_s already stamped
+        self._pricing_key = None
         # steal_log entries are not checkpointed (steal_events is), and any
         # offline solve belongs to the pre-checkpoint serve — clear both so
         # a reused Fleet object cannot report stale metadata

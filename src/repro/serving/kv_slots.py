@@ -297,6 +297,71 @@ class PagedSlotManager:
         self.cache["block_tables"] = self.cache["block_tables"].at[slot].set(-1)
         self.cache["length"] = self.cache["length"].at[slot].set(0)
 
+    # -- page-copy migration (live cross-engine slot transfer) ---------- #
+    def export_pages(self, slot: int) -> Tuple[List[int], jax.Array, jax.Array, int]:
+        """Gather ``slot``'s KV pages out of the pool for migration.
+
+        Returns ``(pages, k_payload, v_payload, kv_length)`` where the
+        payloads are ``(L, KV, n_pages, page_size, D)`` device arrays — a
+        plain gather along the pool's page axis, independent of *which*
+        page ids the destination pool will assign. The caller frees the
+        source pages afterwards (``release`` / ``free_pages_of``)."""
+        pages = list(self.tables[slot])
+        if not pages:
+            raise RuntimeError(f"slot {slot} holds no pages to export")
+        idx = jnp.asarray(pages, jnp.int32)
+        k = jnp.take(self.cache["k"], idx, axis=2)
+        v = jnp.take(self.cache["v"], idx, axis=2)
+        length = int(np.asarray(self.cache["length"][slot]))
+        return pages, k, v, length
+
+    def import_pages(
+        self, slot: int, k_pages: jax.Array, v_pages: jax.Array, kv_length: int
+    ) -> List[int]:
+        """Land exported KV payloads in freshly allocated pages of THIS
+        pool: allocate, scatter, point ``slot``'s block table at the new
+        pages, and restore its valid-KV length. The page ids differ from
+        the source's — only the block-table indirection has to agree, which
+        is the whole point of the paged layout. Returns the new pages."""
+        if self.tables[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        n = int(k_pages.shape[2])
+        pages = self.allocator.allocate(n)
+        idx = jnp.asarray(pages, jnp.int32)
+        self.cache["k"] = self.cache["k"].at[:, :, idx].set(
+            k_pages.astype(self.cache["k"].dtype)
+        )
+        self.cache["v"] = self.cache["v"].at[:, :, idx].set(
+            v_pages.astype(self.cache["v"].dtype)
+        )
+        self.tables[slot] = pages
+        self.peak_pages = max(self.peak_pages, self.allocator.num_used)
+        self._mirror_row(slot)
+        self.cache["length"] = self.cache["length"].at[slot].set(int(kv_length))
+        return pages
+
+    def check_block_table_mirror(self) -> None:
+        """The host ``tables`` and the device ``block_tables`` must describe
+        the same page ownership row for row, and a slot owning no pages must
+        hold no KV length — a divergence means a reserve/grow/release path
+        skipped its mirror write (``EngineConfig.debug_invariants`` asserts
+        this at stage boundaries)."""
+        bt = np.asarray(self.cache["block_tables"])
+        lengths = np.asarray(self.cache["length"])
+        for slot, pages in enumerate(self.tables):
+            row = np.full((self.max_pages_per_slot,), -1, np.int32)
+            row[: len(pages)] = pages
+            if not np.array_equal(bt[slot], row):
+                raise AssertionError(
+                    f"slot {slot}: host block table {pages} diverged from "
+                    f"device row {bt[slot].tolist()}"
+                )
+            if not pages and int(lengths[slot]) != 0:
+                raise AssertionError(
+                    f"slot {slot}: owns no pages but device KV length is "
+                    f"{int(lengths[slot])}"
+                )
+
     def sync_from_device(self) -> None:
         """Rebuild host tables + allocator from the device block table
         (checkpoint restore path — the device array is the durable record)."""

@@ -1,0 +1,485 @@
+"""Live KV migration by page-copy: mid-request slot export/import parity
+at every decode step, graceful drain with zero drops, soft-kill page-copy
+recovery vs hard-kill recompute, in-flight rebalancing, fault-state
+checkpoint round-trips, and the debug-invariants tripwire."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import CostModel, LagrangianPolicy, Request
+from repro.models.layers import init_params
+from repro.models.transformer import TransformerLM
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.fleet import (
+    FaultPlan,
+    Fleet,
+    FleetConfig,
+    ReplicaFault,
+    ReplicaSpec,
+)
+from repro.serving.sampler import TopPSampler, greedy
+
+CFG = ArchConfig(
+    name="demo", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256,
+)
+CM = CostModel(level_caps=(32, 64, 128))
+ENGINE_CFG = dict(
+    n_slots=2, max_len=64, prefill_seq_buckets=(32,),
+    kv_layout="paged", page_size=16, prefill_chunk=16,
+    decode_horizon=1, mixed_schedule=False,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = TransformerLM(CFG)
+    params = init_params(jax.random.key(0), model.param_defs())
+    return model, params
+
+
+def _fleet(model, params, engine_kw=None, sampler=greedy, specs=None, **fc_kw):
+    fc_kw.setdefault("n_replicas", 2)
+    fc_kw.setdefault("assign", "round_robin")
+    fc_kw.setdefault("dispatch", "round_robin")
+    fc_kw.setdefault("work_stealing", False)
+    return Fleet(
+        model, params, EngineConfig(**{**ENGINE_CFG, **(engine_kw or {})}),
+        FleetConfig(**fc_kw), cost_model=CM, sampler=sampler,
+        replica_specs=specs,
+    )
+
+
+def _assert_no_leaks(fleet):
+    """Every pool empty and consistent, host and device tables agreeing."""
+    for eng in fleet.engines:
+        assert eng.slots.allocator.num_used == 0, "orphaned pages"
+        eng.slots.allocator.check_consistency()
+        eng.slots.check_block_table_mirror()
+
+
+def _serve_with_bound_migration(fleet, reqs, rid, emitted_at):
+    """Manual fleet loop migrating ``rid`` off replica 0 the moment its
+    bound slot has emitted exactly ``emitted_at`` tokens."""
+    fleet.begin_serve(reqs, LagrangianPolicy)
+    migrated = False
+    while True:
+        eng = fleet.engines[0]
+        if not migrated:
+            for slot in list(eng.slots.active_slots):
+                if (eng.slots.request_of[slot].rid == rid
+                        and eng.slots.emitted[slot] == emitted_at):
+                    assert fleet.migrate_slot(0, slot, 1)
+                    migrated = True
+                    break
+        if not fleet.step():
+            break
+    report = fleet.finish_serve()
+    return report, migrated
+
+
+# --------------------------------------------------------------------------- #
+# Tentpole: page-copy parity at every decode step × pools × samplers          #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("num_pages", [None, 8])
+@pytest.mark.parametrize(
+    "sampler", [greedy, TopPSampler(top_p=0.9)], ids=["greedy", "top_p"]
+)
+def test_bound_migration_parity_every_decode_step(
+    model_and_params, num_pages, sampler
+):
+    model, params = model_and_params
+    n_decode = 6
+
+    def requests():
+        # rid 0 → replica 0 (round-robin), rid 1 keeps replica 1 non-trivial
+        return [
+            Request(rid=0, n_prefill=10, n_decode=n_decode),
+            Request(rid=1, n_prefill=8, n_decode=3),
+        ]
+
+    engine_kw = dict(num_pages=num_pages)
+    base = _fleet(model, params, engine_kw=engine_kw, sampler=sampler)
+    base.serve(requests(), LagrangianPolicy)           # warm
+    base.serve(requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+    _assert_no_leaks(base)
+
+    # a bound slot exists with emitted = 1 (right after prefill) through
+    # n_decode - 1; at n_decode the slot is already released
+    for e in range(1, n_decode):
+        fleet = _fleet(model, params, engine_kw=engine_kw, sampler=sampler)
+        report, migrated = _serve_with_bound_migration(
+            fleet, requests(), rid=0, emitted_at=e
+        )
+        assert migrated, f"never saw rid 0 bound with emitted == {e}"
+        report.validate()
+        done = {r.rid for t in report.traces for r in t.requests}
+        assert done == {0, 1}
+        # zero recomputed tokens: the stream continued, nothing re-prefilled
+        assert all(eng.recomputed_tokens == 0 for eng in fleet.engines)
+        assert fleet.migration_events == 1
+        assert report.meta["migration_events"] == 1.0
+        assert report.meta["recomputed_tokens"] == 0.0
+        assert fleet.generated == ref_gen, f"stream diverged at emitted={e}"
+        _assert_no_leaks(fleet)
+        # the request finished on the destination replica's trace
+        assert 0 in {r.rid for r in report.traces[1].requests}
+
+
+def test_mid_chunk_migration_parity(model_and_params):
+    """A request migrated BETWEEN prefill chunks (kind='chunking') resumes
+    its remaining chunks on the destination with an identical stream."""
+    model, params = model_and_params
+
+    def requests():
+        # 40-token prompt at prefill_chunk=16 → 3 chunks on replica 0
+        return [
+            Request(rid=0, n_prefill=40, n_decode=5),
+            Request(rid=1, n_prefill=8, n_decode=3),
+        ]
+
+    base = _fleet(model, params)
+    base.serve(requests(), LagrangianPolicy)           # warm
+    base.serve(requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    fleet = _fleet(model, params)
+    fleet.begin_serve(requests(), LagrangianPolicy)
+    migrated = False
+    while True:
+        eng = fleet.engines[0]
+        if not migrated:
+            for slot, st in list(eng._chunking.items()):
+                if st.req.rid == 0 and st.done > 0:
+                    assert fleet.migrate_slot(0, slot, 1)
+                    migrated = True
+                    break
+        if not fleet.step():
+            break
+    report = fleet.finish_serve()
+    assert migrated, "never saw rid 0 between prefill chunks"
+    report.validate()
+    assert all(eng.recomputed_tokens == 0 for eng in fleet.engines)
+    assert fleet.generated == ref_gen
+    _assert_no_leaks(fleet)
+
+
+def test_migrate_slot_refuses_without_headroom(model_and_params):
+    """migrate_slot returns False (state untouched) when the destination
+    has no free slot to bind the migrated request to."""
+    model, params = model_and_params
+    # one slot per replica: while rid 1 decodes on replica 1, its only
+    # slot is taken and an import there must be refused
+    fleet = _fleet(model, params, engine_kw=dict(n_slots=1))
+    fleet.begin_serve(
+        [Request(rid=0, n_prefill=10, n_decode=4),
+         Request(rid=1, n_prefill=8, n_decode=30)],
+        LagrangianPolicy,
+    )
+    probed = False
+    while True:
+        eng = fleet.engines[0]
+        slots = list(eng.slots.active_slots)
+        if slots and not probed and fleet.engines[1].slots.active_slots:
+            assert not fleet.migrate_slot(0, slots[0], 1)
+            assert eng.slots.request_of[slots[0]] is not None   # untouched
+            assert fleet.migration_events == 0
+            probed = True
+        if not fleet.step():
+            break
+    assert probed, "rid 0 and rid 1 were never in flight simultaneously"
+    fleet.finish_serve().validate()
+    with pytest.raises(ValueError, match="coincide"):
+        fleet.migrate_slot(0, 0, 0)
+
+
+# --------------------------------------------------------------------------- #
+# Graceful drain: zero drops, zero recompute                                  #
+# --------------------------------------------------------------------------- #
+def _drain_requests():
+    # even rids (→ replica 0) decode-heavy; odd rids (→ replica 1) finish
+    # fast, so at drain time the survivor has free slots and pool headroom
+    out = []
+    for rid in range(6):
+        if rid % 2 == 0:
+            out.append(Request(rid=rid, n_prefill=10, n_decode=20))
+        else:
+            out.append(Request(rid=rid, n_prefill=8, n_decode=2))
+    return out
+
+
+def _step_until_survivor_idle(fleet, min_emitted=1):
+    """Step until replica 0 has a bound slot with >= min_emitted tokens
+    while replica 1 has fully drained its own work (free slots + headroom
+    for a page-copy). Returns False if the serve ended first."""
+    while True:
+        e0, e1 = fleet.engines
+        ready = [
+            s for s in e0.slots.active_slots
+            if e0.slots.emitted[s] >= min_emitted
+        ]
+        if (ready and not e1.slots.active_slots and not e1._chunking
+                and not e1._sv.scheduler.queued):
+            return True
+        if not fleet.step():
+            return False
+
+
+def test_drain_replica_zero_drops_zero_recompute(model_and_params):
+    model, params = model_and_params
+    base = _fleet(model, params)
+    base.serve(_drain_requests(), LagrangianPolicy)    # warm
+    base.serve(_drain_requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    fleet = _fleet(model, params)
+    fleet.serve(_drain_requests(), LagrangianPolicy)   # warm
+    fleet.begin_serve(_drain_requests(), LagrangianPolicy)
+    # drain at a deterministic instant: replica 0 mid-decode, survivor idle
+    assert _step_until_survivor_idle(fleet)
+    n_in_flight = len(fleet.engines[0].slots.active_slots)
+    entry = fleet.drain_replica(0)
+    while fleet.step():
+        pass
+    report = fleet.finish_serve()
+    report.validate()
+    done = [r for t in report.traces for r in t.requests]
+    assert len(done) == 6 and all(r.t_done is not None for r in done)
+    assert len({r.rid for r in done}) == 6             # zero drops
+    assert fleet.generated == ref_gen                  # bit-identical
+    # page-copy only: nothing re-prefilled anywhere in the fleet
+    assert entry["page_copy"] == n_in_flight
+    assert entry["recompute"] == 0
+    assert report.meta["recomputed_tokens"] == 0.0
+    assert report.meta["drained_replicas"] == 1.0
+    assert report.meta["recovered_page_copy"] >= 1.0
+    assert report.meta["recovered_recompute"] == 0.0
+    _assert_no_leaks(fleet)
+
+
+def test_drain_fault_plan_zero_drops(model_and_params):
+    """kind='drain' in a FaultPlan: whatever instant the virtual clock
+    crosses, every request still completes exactly once, bit-identically."""
+    model, params = model_and_params
+    base = _fleet(model, params)
+    base.serve(_drain_requests(), LagrangianPolicy)    # warm
+    ref = base.serve(_drain_requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    fleet = _fleet(model, params)
+    fleet.serve(_drain_requests(), LagrangianPolicy)   # warm
+    report = fleet.serve(
+        _drain_requests(), LagrangianPolicy,
+        fault_plan=FaultPlan([
+            ReplicaFault(replica=0, at_s=0.5 * ref.makespan, kind="drain"),
+        ]),
+    )
+    report.validate()
+    done = [r for t in report.traces for r in t.requests]
+    assert len(done) == 6 and all(r.t_done is not None for r in done)
+    assert len({r.rid for r in done}) == 6             # zero drops
+    assert fleet.generated == ref_gen                  # bit-identical
+    assert report.meta["drained_replicas"] == 1.0
+    _assert_no_leaks(fleet)
+
+
+def test_drain_replica_api_guards(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    fleet.begin_serve(_drain_requests(), LagrangianPolicy)
+    for _ in range(4):
+        fleet.step()
+    fleet.drain_replica(0)
+    with pytest.raises(ValueError, match="already retired"):
+        fleet.drain_replica(0)
+    with pytest.raises(RuntimeError, match="last alive"):
+        fleet.drain_replica(1)
+    while fleet.step():
+        pass
+    report = fleet.finish_serve()
+    report.validate()
+    assert {r.rid for t in report.traces for r in t.requests} == set(range(6))
+    _assert_no_leaks(fleet)
+
+
+# --------------------------------------------------------------------------- #
+# Recovery: soft kill prefers page-copy, hard kill recomputes                 #
+# --------------------------------------------------------------------------- #
+def test_soft_kill_page_copy_beats_hard_kill_recompute(model_and_params):
+    model, params = model_and_params
+    base = _fleet(model, params)
+    base.serve(_drain_requests(), LagrangianPolicy)    # warm
+    base.serve(_drain_requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    recomputed = {}
+    for readable in (True, False):
+        fleet = _fleet(model, params)
+        fleet.serve(_drain_requests(), LagrangianPolicy)   # warm
+        fleet.begin_serve(_drain_requests(), LagrangianPolicy)
+        # kill at a deterministic instant: replica 0 has emitted >= 2
+        # tokens on a bound slot (so a hard kill has a prefix to re-pay)
+        # and the survivor can host a page-copy
+        assert _step_until_survivor_idle(fleet, min_emitted=2)
+        fleet._kill_replica(
+            0, fleet.engines[0].clock, pool_readable=readable
+        )
+        while fleet.step():
+            pass
+        report = fleet.finish_serve()
+        report.validate()
+        done = {r.rid for t in report.traces for r in t.requests}
+        assert done == set(range(6))
+        assert fleet.generated == ref_gen, f"diverged (readable={readable})"
+        recomputed[readable] = report.meta["recomputed_tokens"]
+        assert fleet.fault_log[0]["kind"] == "kill"
+        if readable:
+            assert report.meta["recovered_page_copy"] >= 1.0
+            assert report.meta["recovered_recompute"] == 0.0
+        else:
+            assert report.meta["recovered_page_copy"] == 0.0
+            assert report.meta["recovered_recompute"] >= 1.0
+            assert report.meta["time_to_recover_s"] > 0.0
+        _assert_no_leaks(fleet)
+    # the point of page-copy recovery: the hard kill re-pays generated
+    # prefixes; the soft kill pays nothing
+    assert recomputed[True] == 0.0
+    assert recomputed[False] > 0.0
+
+
+# --------------------------------------------------------------------------- #
+# In-flight rebalancing: stealing RUNNING slots off a straggler              #
+# --------------------------------------------------------------------------- #
+def test_running_steal_improves_straggler_makespan(model_and_params):
+    """One long request RUNNING on the slow replica, nothing queued: the
+    queued-only thief has nothing to take, the running-slot thief migrates
+    the decode mid-flight and strictly improves the fleet makespan — at
+    exact token parity and zero recompute."""
+    model, params = model_and_params
+    specs = [ReplicaSpec(speed_factor=1.0), ReplicaSpec(speed_factor=0.25)]
+
+    def requests():
+        # odd rid (→ slow replica 1 under round-robin) is the straggler
+        return [
+            Request(rid=0, n_prefill=8, n_decode=4),
+            Request(rid=1, n_prefill=10, n_decode=32),
+            Request(rid=2, n_prefill=8, n_decode=4),
+        ]
+
+    results = {}
+    for running in (True, False):
+        fleet = _fleet(
+            model, params, specs=specs,
+            work_stealing=True, steal_running=running,
+        )
+        fleet.serve(requests(), LagrangianPolicy)      # warm
+        report = fleet.serve(requests(), LagrangianPolicy)
+        report.validate()
+        assert all(eng.recomputed_tokens == 0 for eng in fleet.engines)
+        _assert_no_leaks(fleet)
+        results[running] = (report, dict(fleet.generated), fleet)
+    on_report, on_gen, on_fleet = results[True]
+    off_report, off_gen, _ = results[False]
+    assert on_fleet.migration_events >= 1
+    # the migrated slot moved fast-ward: slow donor (1) → fast thief (0)
+    assert any(
+        e.get("running") for e in on_fleet.steal_log
+    ), "no running-slot steal recorded"
+    assert on_gen == off_gen                           # placement-invariant
+    assert on_report.makespan < off_report.makespan
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: fleet checkpoints round-trip fault state                         #
+# --------------------------------------------------------------------------- #
+def test_fleet_checkpoint_round_trips_fault_state(model_and_params):
+    model, params = model_and_params
+
+    def requests():
+        return [Request(rid=i, n_prefill=10, n_decode=10) for i in range(6)]
+
+    fleet = _fleet(model, params)
+    fleet.begin_serve(
+        requests(), LagrangianPolicy,
+        fault_plan=FaultPlan([ReplicaFault(replica=0, at_s=0.0)]),
+    )
+    steps = 0
+    while not fleet.fault_log and fleet.step():
+        steps += 1
+    assert fleet.fault_log, "kill never applied"
+    for _ in range(3):
+        fleet.step()
+    state = jax.tree_util.tree_map(np.asarray, fleet.state_dict())
+    pre = {rid: list(t) for rid, t in fleet.generated.items()}
+    lost = fleet._lost_preemptions
+
+    fleet2 = _fleet(model, params)
+    fleet2.load_state_dict(state, {r.rid: r for r in requests()})
+    # the regression: a restored fleet used to forget who was dead — it
+    # would dispatch to the killed replica and drop the fault accounting
+    assert fleet2._dead == {0}
+    assert fleet2.alive_replicas == [1]
+    assert fleet2._lost_preemptions == lost
+    assert fleet2.recovered_requests == fleet.recovered_requests
+    assert fleet2.fault_log == fleet.fault_log
+    while fleet2.step():
+        pass
+    report2 = fleet2.finish_serve()
+    assert report2.meta["dead_replicas"] == 1.0
+    assert report2.meta["fault_events"] == 1.0
+    assert report2.meta["lost_preemptions"] == float(lost)
+    post = fleet2.generated
+    # pre-checkpoint + post-restore tokens cover every request exactly once
+    uninterrupted = _fleet(model, params)
+    full = uninterrupted.serve(
+        requests(), LagrangianPolicy,
+        fault_plan=FaultPlan([ReplicaFault(replica=0, at_s=0.0)]),
+    )
+    full.validate()
+    for rid, toks in uninterrupted.generated.items():
+        assert pre.get(rid, []) + post.get(rid, []) == toks, f"rid {rid}"
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: debug_invariants wiring                                          #
+# --------------------------------------------------------------------------- #
+def _engine(model, params, **kw):
+    eng = Engine(model, params, EngineConfig(**{**ENGINE_CFG, **kw}))
+    eng.profiler.cost_model = CM
+    return eng
+
+
+def test_debug_invariants_resolution(model_and_params, monkeypatch):
+    model, params = model_and_params
+    # conftest exports REPRO_DEBUG_INVARIANTS=1 → on by default under pytest
+    assert _engine(model, params).debug_invariants is True
+    # explicit config wins over the environment, both ways
+    assert _engine(model, params, debug_invariants=False).debug_invariants \
+        is False
+    monkeypatch.delenv("REPRO_DEBUG_INVARIANTS", raising=False)
+    assert _engine(model, params).debug_invariants is False
+    assert _engine(model, params, debug_invariants=True).debug_invariants \
+        is True
+
+
+def test_debug_invariants_catch_tampered_block_table(model_and_params):
+    """The stage-boundary check actually trips: corrupting the device
+    block-table mirror mid-serve fails the very next stage."""
+    model, params = model_and_params
+    from repro.core import GlobalQueueScheduler, build_clients
+
+    eng = _engine(model, params)
+    reqs = [Request(rid=0, n_prefill=10, n_decode=8)]
+    clients = build_clients(eng.cfg.n_slots, reqs, None)
+    eng.begin_serve(reqs, clients, GlobalQueueScheduler(reqs),
+                    LagrangianPolicy())
+    while not eng.slots.active_slots:
+        eng.serve_step()
+    slot = eng.slots.active_slots[0]
+    eng.slots.cache["block_tables"] = (
+        eng.slots.cache["block_tables"].at[slot, 0].add(1)
+    )
+    with pytest.raises(AssertionError, match="diverged from"):
+        eng.serve_step()

@@ -142,6 +142,23 @@ def fleet_recovery_metrics(report) -> Dict[str, float]:
     return {k: float(report.meta.get(k, 0.0)) for k in keys}
 
 
+def fleet_detection_metrics(report) -> Dict[str, float]:
+    """Failure-detection/fencing accounting for a fleet summary, read from
+    the FleetReport meta: health-monitor transitions (suspicions, false
+    positives, condemnations, gray-degrade flags), redispatches of work
+    stranded on SUSPECT replicas, stale claims/exports refused by epoch
+    fencing, and KV page imports rejected by checksum. All keys default to
+    0.0 so fault-free serves (or fleets without a monitor) report clean
+    zeros rather than missing columns."""
+    keys = (
+        "suspect_events", "false_suspicions", "condemned_replicas",
+        "degraded_events", "redispatch_events",
+        "fenced_stale_completions", "fenced_stale_exports",
+        "integrity_rejections",
+    )
+    return {k: float(report.meta.get(k, 0.0)) for k in keys}
+
+
 def run_serving_benchmark(
     cfg: Dict,
     workload_factory=None,

@@ -16,14 +16,20 @@ wall-clock magnitudes are reported, never asserted):
     has nothing to take; extending the steal gate to RUNNING slots
     (``FleetConfig.steal_running``) must strictly improve the fleet
     makespan at exact token parity and zero recompute.
-  * **chaos** — N seeded schedules against a 3-replica fleet: random
-    kills (hard and soft), drains, slow faults, and random mid-serve
+  * **chaos** — N seeded schedules against a 3-replica fleet with the
+    health monitor enabled: random kills (hard and soft), drains, slow
+    faults, *undeclared* hangs and gray degrades (the fleet is never told —
+    detection is the heartbeat monitor's job), and random mid-serve
     ``migrate_slot`` probes. Every schedule must preserve exactly-once
     completion, bit-identical streams vs the fault-free serve, allocator
     consistency and host<->device block-table agreement on every replica,
     no orphaned pages, and monotone per-replica virtual clocks. A failing
     seed writes its full event journal next to the JSON artifact and
-    hard-fails naming the seed.
+    hard-fails naming the seed with its one-command repro.
+
+Seeds: ``--n-seeds N`` runs seeds 0..N-1, ``--seeds`` takes an explicit
+comma list, and ``REPRO_CHAOS_SEEDS`` (same syntax, or a bare count) sets
+the default for both.
 
 Run:  PYTHONPATH=src python -m benchmarks.chaos [--smoke] [--out DIR]
 Prints ``name,value,unit`` CSV and writes BENCH_chaos.json.
@@ -245,25 +251,42 @@ def _chaos_requests(cfg):
 
 
 def _chaos_schedule(cfg, rng, base_makespan):
-    """A random fault plan: up to max_events kill/drain/slow events at
-    random fractions of the fault-free makespan, never retiring more than
-    n_replicas - 1 replicas."""
+    """A random fault plan: up to max_events events at random fractions of
+    the fault-free makespan, never retiring more than n_replicas - 1
+    replicas. Declared kinds (kill/drain/slow) tell the fleet; undeclared
+    kinds (hang/degrade) only feed the injection layer — the health
+    monitor has to notice them from heartbeats alone. A hung replica that
+    gets condemned retires at runtime, so hangs count against the retire
+    budget too (conservatively — a short hang may wake first)."""
     from repro.serving.fleet import ReplicaFault
 
     events = []
     retired = set()
     for _ in range(rng.randint(1, cfg["max_events"])):
-        kind = rng.choice(["kill", "soft_kill", "drain", "slow"])
+        kind = rng.choice(
+            ["kill", "soft_kill", "drain", "slow", "hang", "degrade"]
+        )
         at = rng.uniform(0.05, 0.8) * base_makespan
         replica = rng.randrange(cfg["n_replicas"])
-        if kind in ("kill", "soft_kill", "drain"):
+        if kind in ("kill", "soft_kill", "drain", "hang"):
             if replica in retired or len(retired) + 1 >= cfg["n_replicas"]:
                 continue
             retired.add(replica)
+            if kind == "hang":
+                events.append(ReplicaFault(
+                    replica=replica, at_s=at, kind="hang",
+                    until_s=at + rng.uniform(0.5, 3.0) * base_makespan,
+                ))
+            else:
+                events.append(ReplicaFault(
+                    replica=replica, at_s=at,
+                    kind="drain" if kind == "drain" else "kill",
+                    pool_readable=(kind == "soft_kill"),
+                ))
+        elif kind == "degrade":
             events.append(ReplicaFault(
-                replica=replica, at_s=at,
-                kind="drain" if kind == "drain" else "kill",
-                pool_readable=(kind == "soft_kill"),
+                replica=replica, at_s=at, kind="degrade",
+                speed_factor=rng.uniform(0.2, 0.6),
             ))
         else:
             events.append(ReplicaFault(
@@ -279,21 +302,27 @@ def _run_one_schedule(cfg, model, params, seed, ref_gen, base_makespan):
     from repro.core import LagrangianPolicy
     from repro.serving.fleet import FaultPlan
 
+    from repro.serving.health import HealthConfig
+
     rng = random.Random(seed)
     events = _chaos_schedule(cfg, rng, base_makespan)
     journal = {
         "seed": seed,
         "schedule": [
             dict(replica=f.replica, at_s=f.at_s, kind=f.kind,
-                 pool_readable=f.pool_readable, speed_factor=f.speed_factor)
+                 until_s=f.until_s, pool_readable=f.pool_readable,
+                 speed_factor=f.speed_factor)
             for f in events
         ],
         "probes": [], "violation": None,
     }
+    # the health monitor is live during chaos: undeclared hangs must be
+    # detected from heartbeat silence alone, and a condemned-then-woken
+    # zombie must have its stale claims fenced for parity to survive
     fleet = _fleet(
         cfg, model, params, cfg["c_slots"], cfg["c_max_len"],
         n_replicas=cfg["n_replicas"], assign="lpt", dispatch="least_load",
-        work_stealing=True,
+        work_stealing=True, health=HealthConfig(),
     )
     # random mid-serve migration probes at pre-drawn step indices
     probe_steps = sorted(
@@ -344,14 +373,20 @@ def _run_one_schedule(cfg, model, params, seed, ref_gen, base_makespan):
             raise AssertionError(f"streams diverged for rids {bad}")
     except (AssertionError, RuntimeError) as e:
         journal["violation"] = str(e)
+        journal["fault_log"] = list(getattr(fleet, "fault_log", []))
+        journal["injected_log"] = list(getattr(fleet, "injected_log", []))
         return False, journal
+    from .bench_io import fleet_detection_metrics
+
     journal["fault_log"] = fleet.fault_log
+    journal["injected_log"] = fleet.injected_log
+    journal["detection"] = fleet_detection_metrics(report)
     journal["migration_events"] = fleet.migration_events
     journal["steps"] = steps
     return True, journal
 
 
-def run_chaos_arm(cfg, model, params, out_dir):
+def run_chaos_arm(cfg, model, params, out_dir, seeds, smoke):
     from repro.core import LagrangianPolicy
 
     base = _fleet(
@@ -366,7 +401,7 @@ def run_chaos_arm(cfg, model, params, out_dir):
 
     journals, failed = [], []
     t0 = time.perf_counter()
-    for seed in range(cfg["n_seeds"]):
+    for seed in seeds:
         ok, journal = _run_one_schedule(
             cfg, model, params, seed, ref_gen, ref.makespan
         )
@@ -378,19 +413,38 @@ def run_chaos_arm(cfg, model, params, out_dir):
         path = os.path.join(out_dir or ".", "BENCH_chaos_journal.json")
         with open(path, "w") as fh:
             json.dump(journals, fh, indent=2)
+        repro = (
+            f"PYTHONPATH=src python -m benchmarks.chaos"
+            f"{' --smoke' if smoke else ''} "
+            f"--seeds {','.join(str(s) for s in failed)}"
+        )
         raise SystemExit(
             f"chaos arm: seeds {failed} violated invariants — "
-            f"event journal written to {path}"
+            f"event journal written to {path}\n# repro: {repro}"
         )
     events = [e for j in journals for e in j.get("fault_log", [])]
+    injected = [e for j in journals for e in j.get("injected_log", [])]
+    det_keys = (
+        "suspect_events", "false_suspicions", "condemned_replicas",
+        "degraded_events", "fenced_stale_completions", "fenced_stale_exports",
+    )
+    detection = {
+        k: sum(j.get("detection", {}).get(k, 0.0) for j in journals)
+        for k in det_keys
+    }
     return {
-        "n_schedules": cfg["n_seeds"],
+        "n_schedules": len(seeds),
+        "seeds": list(seeds),
         "n_requests": cfg["n_c"],
         "all_passed": True,
         "fault_events": len(events),
+        "injected_events": len(injected),
         "drains": sum(1 for e in events if e["kind"] == "drain"),
         "kills": sum(1 for e in events if e["kind"] == "kill"),
         "slows": sum(1 for e in events if e["kind"] == "slow"),
+        "hangs": sum(1 for e in injected if e["kind"] == "hang"),
+        "degrades": sum(1 for e in injected if e["kind"] == "degrade"),
+        **detection,
         "recovered_page_copy": sum(e.get("page_copy", 0) for e in events),
         "recovered_recompute": sum(e.get("recompute", 0) for e in events),
         "migration_probes_moved": sum(
@@ -401,20 +455,40 @@ def run_chaos_arm(cfg, model, params, out_dir):
     }
 
 
+def _parse_seeds(args, cfg):
+    """Seed list: --seeds wins, then --n-seeds, then REPRO_CHAOS_SEEDS
+    (a comma list or a bare count), then the config default."""
+    if args.seeds:
+        return [int(s) for s in args.seeds.split(",") if s.strip()]
+    if args.n_seeds is not None:
+        return list(range(args.n_seeds))
+    env = os.environ.get("REPRO_CHAOS_SEEDS", "").strip()
+    if env:
+        if "," in env:
+            return [int(s) for s in env.split(",") if s.strip()]
+        return list(range(int(env)))
+    return list(range(cfg["n_seeds"]))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI (seconds, not minutes)")
     ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    ap.add_argument("--n-seeds", type=int, default=None,
+                    help="chaos arm: run seeds 0..N-1")
+    ap.add_argument("--seeds", default=None,
+                    help="chaos arm: explicit comma-separated seed list")
     args = ap.parse_args()
     cfg = SMOKE if args.smoke else FULL
+    seeds = _parse_seeds(args, cfg)
 
     from .bench_io import emit_json
 
     model, params = _model_and_params(cfg)
     drain = run_drain_arm(cfg, model, params)
     rebalance = run_rebalance_arm(cfg, model, params)
-    chaos = run_chaos_arm(cfg, model, params, args.out)
+    chaos = run_chaos_arm(cfg, model, params, args.out, seeds, args.smoke)
 
     print("name,value,unit")
     for mode in ("drain", "hard_kill"):
@@ -433,6 +507,12 @@ def main() -> None:
     print(f"rebalance_token_parity,{int(rebalance['token_parity'])},bool")
     print(f"chaos_schedules,{chaos['n_schedules']},runs")
     print(f"chaos_fault_events,{chaos['fault_events']},events")
+    print(f"chaos_injected_events,{chaos['injected_events']},events")
+    print(f"chaos_hangs,{chaos['hangs']},events")
+    print(f"chaos_degrades,{chaos['degrades']},events")
+    print(f"chaos_condemned,{int(chaos['condemned_replicas'])},replicas")
+    print(f"chaos_fenced_claims,"
+          f"{int(chaos['fenced_stale_completions'])},claims")
     print(f"chaos_page_copy,{chaos['recovered_page_copy']},requests")
     print(f"chaos_recompute,{chaos['recovered_recompute']},requests")
     print(f"chaos_migrations,{chaos['migration_events']},events")
@@ -477,10 +557,14 @@ def main() -> None:
         )
     if not chaos["all_passed"]:
         raise SystemExit("chaos schedules failed")
-    if chaos["fault_events"] < cfg["n_seeds"]:
+    # under-injection gate: declared faults land in fault_log, undeclared
+    # hangs/degrades only in injected_log — count both, or a hang-heavy
+    # draw would trip this even though every schedule injected something
+    n_injections = chaos["fault_events"] + chaos["injected_events"]
+    if n_injections < len(seeds):
         raise SystemExit(
-            f"only {chaos['fault_events']} fault events across "
-            f"{cfg['n_seeds']} schedules — the harness is under-injecting"
+            f"only {n_injections} fault/injection events across "
+            f"{len(seeds)} schedules — the harness is under-injecting"
         )
     print("# all chaos gates passed")
 

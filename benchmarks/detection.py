@@ -1,0 +1,500 @@
+"""Failure-detection harness: oracle-free hang/gray-failure detection, gated.
+
+PR 7's chaos harness told the fleet about every fault (the fault plan *was*
+the detector). This harness injects faults the fleet is NOT told about —
+hangs (a replica silently stops, later silently resumes) and gray degrades
+(×4-slow but progressing) — and hard-gates that the heartbeat/suspicion
+monitor plus epoch fencing recover exactly-once without an oracle:
+
+  * **hang** — replica 0 stops mid-serve and stays silent ~10 makespans.
+    The adaptive detector must condemn it long before it would resume, the
+    fleet must finish every request exactly once with streams bit-identical
+    to the fault-free serve, and the ghost's late claims must all be fenced.
+  * **ablation** — the same hang against the fixed-timeout detector
+    (timeout derived from the clean serve's own observed stage gaps, the
+    honest way an operator would set it). The adaptive detector must beat
+    it on detection latency — or, failing that, on clean-serve false
+    positives — at token parity. Both detectors' clean-serve false-positive
+    counts are measured directly; the adaptive one must be zero.
+  * **zombie** — seeded schedules where the hang RESUMES before the serve
+    ends: the condemned replica wakes and replays the work it held under
+    its fenced epoch. Every seed must finish with zero double-served tokens
+    (bit-identical streams, one completion per request) and a fenced
+    stale-completion count > 0 — fencing, not luck of timing.
+  * **gray** — a ×4 silent degrade mid-serve: the monitor must flag the
+    replica *degraded* (SUSPECT, priced out of dispatch) while it keeps
+    progressing, with zero condemnations and exact token parity.
+
+Seeds for the zombie arm: ``--n-seeds N`` runs seeds 0..N-1, ``--seeds``
+takes an explicit comma list, and ``REPRO_DETECTION_SEEDS`` (same syntax as
+``--seeds``, or a bare count) sets the default for both. A failing seed
+writes the full journal next to the JSON artifact and prints the
+one-command repro.
+
+Run:  PYTHONPATH=src python -m benchmarks.detection [--smoke] [--out DIR]
+Prints ``name,value,unit`` CSV and writes BENCH_detection.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import time
+
+FULL = dict(
+    model=dict(n_layers=2, d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+               vocab_size=512),
+    n_slots=2, max_len=64, n_replicas=2,
+    prefills=(10, 8, 12, 8), decodes=(16, 16, 12, 12),
+    calib_prefill=4, calib_decode=8,
+    hang_at_frac=0.3, hang_until_factor=10.0,
+    degrade_at_frac=0.3, degrade_speed=0.25,
+    n_seeds=5,
+    seq_buckets=(32,), level_caps=(32, 64, 128),
+    page_size=16, prefill_chunk=16,
+)
+SMOKE = dict(
+    model=dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+               vocab_size=256),
+    n_slots=2, max_len=64, n_replicas=2,
+    prefills=(10, 8, 12, 8), decodes=(16, 16, 12, 12),
+    calib_prefill=4, calib_decode=8,
+    hang_at_frac=0.3, hang_until_factor=10.0,
+    degrade_at_frac=0.3, degrade_speed=0.25,
+    n_seeds=2,
+    seq_buckets=(32,), level_caps=(32, 64, 128),
+    page_size=16, prefill_chunk=16,
+)
+
+
+def _model_and_params(cfg):
+    import jax
+
+    from repro.configs.base import ArchConfig
+    from repro.models.layers import init_params
+    from repro.models.transformer import TransformerLM
+
+    arch = ArchConfig(name="detection-bench", family="dense", **cfg["model"])
+    model = TransformerLM(arch)
+    params = init_params(jax.random.key(0), model.param_defs())
+    return model, params
+
+
+def _engine_cfg(cfg):
+    from repro.serving.engine import EngineConfig
+
+    return EngineConfig(
+        n_slots=cfg["n_slots"], max_len=cfg["max_len"],
+        prefill_seq_buckets=cfg["seq_buckets"], kv_layout="paged",
+        page_size=cfg["page_size"], prefill_chunk=cfg["prefill_chunk"],
+        decode_horizon=1, mixed_schedule=False,
+    )
+
+
+def _fleet(cfg, model, params, health):
+    from repro.core import CostModel
+    from repro.serving.fleet import Fleet, FleetConfig
+
+    return Fleet(
+        model, params, _engine_cfg(cfg),
+        FleetConfig(
+            n_replicas=cfg["n_replicas"], assign="round_robin",
+            dispatch="round_robin", work_stealing=False, health=health,
+        ),
+        cost_model=CostModel(level_caps=cfg["level_caps"]),
+    )
+
+
+def _requests(cfg):
+    from repro.core import Request
+
+    return [
+        Request(rid=i, n_prefill=p, n_decode=d)
+        for i, (p, d) in enumerate(zip(cfg["prefills"], cfg["decodes"]))
+    ]
+
+
+def _calib_requests(cfg):
+    from repro.core import Request
+
+    # prefill totals differ from the measured set so each replica's
+    # profiler sees >= 2 distinct prefill sizes and reaches its first full
+    # refit (a replica batches all its offline prompts into one stage)
+    return [
+        Request(rid=90 + i, n_prefill=cfg["calib_prefill"],
+                n_decode=cfg["calib_decode"])
+        for i in range(len(cfg["prefills"]))
+    ]
+
+
+def _fit_and_reference(cfg, model, params, health):
+    """Warm + calibrate a fleet until every replica has a full cost-model
+    fit, then serve the measured workload once for the fitted reference.
+    Returns (fleet, clean_report, ref_gen)."""
+    from repro.core import LagrangianPolicy
+
+    fleet = _fleet(cfg, model, params, health)
+    fleet.serve(_calib_requests(cfg), LagrangianPolicy)    # warm/compile
+    fleet.serve(_requests(cfg), LagrangianPolicy)
+    if not all(e.profiler.full_fits > 0 for e in fleet.engines):
+        raise SystemExit("calibration never reached a full cost-model fit")
+    rep = fleet.serve(_requests(cfg), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in fleet.generated.items()}
+    return fleet, rep, ref_gen
+
+
+def _check_consistency(fleet):
+    for i, eng in enumerate(fleet.engines):
+        eng.slots.allocator.check_consistency()
+        eng.slots.check_block_table_mirror()
+        if eng.slots.allocator.num_used != 0:
+            raise AssertionError(f"replica {i}: orphaned pages after serve")
+
+
+def _condemned_at(fleet):
+    from repro.serving.health import CONDEMNED
+
+    return next(
+        (tr["at_s"] for tr in fleet.monitor.transitions
+         if tr["state"] == CONDEMNED),
+        None,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Arm 1 + 2: mid-serve hang, adaptive detector vs fixed-timeout ablation      #
+# --------------------------------------------------------------------------- #
+def run_hang_arm(cfg, model, params, health, label):
+    from repro.core import LagrangianPolicy
+    from repro.serving.fleet import FaultPlan, ReplicaFault
+
+    from .bench_io import fleet_recovery_metrics
+
+    fleet, clean, ref_gen = _fit_and_reference(cfg, model, params, health)
+    mk = clean.makespan
+    clean_false = clean.meta["suspect_events"]
+
+    at_s = cfg["hang_at_frac"] * mk
+    until_s = cfg["hang_until_factor"] * mk
+    t0 = time.perf_counter()
+    rep = fleet.serve(
+        _requests(cfg), LagrangianPolicy,
+        fault_plan=FaultPlan([ReplicaFault(
+            replica=0, at_s=at_s, kind="hang", until_s=until_s,
+        )]),
+    )
+    wall = time.perf_counter() - t0
+    rep.validate()
+    _check_consistency(fleet)
+    applied = next(
+        e["applied_at_s"] for e in fleet.injected_log if e["kind"] == "hang"
+    )
+    condemned_at = _condemned_at(fleet)
+    done = [r for t in rep.traces for r in t.requests]
+    return {
+        "detector": label,
+        "makespan_clean_s": mk,
+        "makespan_s": rep.makespan,
+        "hang_at_s": applied,
+        "hang_until_s": until_s,
+        "condemned": condemned_at is not None,
+        "detection_latency_s": (
+            condemned_at - applied if condemned_at is not None else None
+        ),
+        "clean_false_suspicions": clean_false,
+        "completed": len(done),
+        "exactly_once": len({r.rid for r in done}) == len(done),
+        "token_parity": (
+            {r: list(t) for r, t in fleet.generated.items()} == ref_gen
+        ),
+        "fenced_stale_completions": rep.meta.get(
+            "fenced_stale_completions", 0.0
+        ),
+        "epoch_bumped": fleet.epochs[0] >= 1,
+        "wall_s": wall,
+        **fleet_recovery_metrics(rep),
+    }
+
+
+def _derive_fixed_timeout(cfg, model, params):
+    """The honest fixed timeout an operator would configure: 3x the largest
+    inter-beat gap the clean fitted serve actually exhibited."""
+    from repro.serving.health import HealthConfig
+
+    fleet, _, _ = _fit_and_reference(
+        cfg, model, params, HealthConfig()
+    )
+    max_gap = max(
+        (g for r in fleet.monitor.replicas for g in r.gaps), default=0.0
+    )
+    if max_gap <= 0.0:
+        raise SystemExit("calibration serve produced no heartbeat gaps")
+    return 3.0 * max_gap
+
+
+# --------------------------------------------------------------------------- #
+# Arm 3: seeded zombie schedules (condemn, then the hang resumes)             #
+# --------------------------------------------------------------------------- #
+def run_zombie_seed(cfg, model, params, seed):
+    from repro.core import LagrangianPolicy
+    from repro.serving.fleet import FaultPlan, ReplicaFault
+    from repro.serving.health import HealthConfig
+
+    rng = random.Random(seed)
+    fleet, clean, ref_gen = _fit_and_reference(
+        cfg, model, params, HealthConfig()
+    )
+    mk = clean.makespan
+    at_s = rng.uniform(0.25, 0.45) * mk
+    until_s = rng.uniform(0.8, 0.95) * mk
+    journal = {
+        "seed": seed, "replica": rng.randrange(cfg["n_replicas"]),
+        "at_s": at_s, "until_s": until_s, "makespan_clean_s": mk,
+        "violation": None,
+    }
+    try:
+        rep = fleet.serve(
+            _requests(cfg), LagrangianPolicy,
+            fault_plan=FaultPlan([ReplicaFault(
+                replica=journal["replica"], at_s=at_s, kind="hang",
+                until_s=until_s,
+            )]),
+        )
+        rep.validate()
+        _check_consistency(fleet)
+        condemned_at = _condemned_at(fleet)
+        journal["condemned_at_s"] = condemned_at
+        journal["fenced"] = rep.meta.get("fenced_stale_completions", 0.0)
+        journal["fenced_reasons"] = sorted(
+            {e["reason"] for e in fleet.fenced_log}
+        )
+        kinds = [e["kind"] for e in fleet.injected_log]
+        journal["woke"] = "hang_end" in kinds
+        done = [r for t in rep.traces for r in t.requests]
+        if condemned_at is None:
+            raise AssertionError("hang never condemned")
+        if condemned_at >= until_s:
+            raise AssertionError(
+                f"condemned at {condemned_at:.4f}s, after the wake-up at "
+                f"{until_s:.4f}s — the schedule exercised no zombie"
+            )
+        if journal["fenced"] <= 0:
+            raise AssertionError("zombie claims were never fenced")
+        if len(done) != len(ref_gen) or len({r.rid for r in done}) != len(done):
+            raise AssertionError(
+                f"{len(done)} completions for {len(ref_gen)} requests"
+            )
+        gen = {rid: list(t) for rid, t in fleet.generated.items()}
+        if gen != ref_gen:
+            bad = sorted(r for r in ref_gen if gen.get(r) != ref_gen[r])
+            raise AssertionError(
+                f"double-serve or divergence: streams differ for rids {bad}"
+            )
+    except (AssertionError, RuntimeError, SystemExit) as e:
+        journal["violation"] = str(e)
+        return False, journal
+    return True, journal
+
+
+# --------------------------------------------------------------------------- #
+# Arm 4: x4 gray degrade, flagged while progressing                           #
+# --------------------------------------------------------------------------- #
+def run_gray_arm(cfg, model, params):
+    from repro.core import LagrangianPolicy
+    from repro.serving.fleet import FaultPlan, ReplicaFault
+    from repro.serving.health import SUSPECT, HealthConfig
+
+    fleet, clean, ref_gen = _fit_and_reference(
+        cfg, model, params, HealthConfig()
+    )
+    mk = clean.makespan
+    rep = fleet.serve(
+        _requests(cfg), LagrangianPolicy,
+        fault_plan=FaultPlan([ReplicaFault(
+            replica=0, at_s=cfg["degrade_at_frac"] * mk, kind="degrade",
+            speed_factor=cfg["degrade_speed"],
+        )]),
+    )
+    rep.validate()
+    _check_consistency(fleet)
+    h = fleet.monitor.replicas[0]
+    return {
+        "degraded_events": rep.meta["degraded_events"],
+        "flagged_suspect": fleet.monitor.state(0) == SUSPECT,
+        "suspect_reason": h.suspect_reason,
+        "slowdown_level": h.slowdown_level,
+        "slowdown_baseline": h.slowdown_baseline,
+        "condemned_replicas": rep.meta["condemned_replicas"],
+        "survivor_false_suspicions": rep.meta["false_suspicions"],
+        "token_parity": (
+            {r: list(t) for r, t in fleet.generated.items()} == ref_gen
+        ),
+        "makespan_s": rep.makespan,
+    }
+
+
+def _parse_seeds(args, cfg):
+    """Seed list: --seeds wins, then --n-seeds, then REPRO_DETECTION_SEEDS
+    (a comma list or a bare count), then the config default."""
+    if args.seeds:
+        return [int(s) for s in args.seeds.split(",") if s.strip()]
+    if args.n_seeds is not None:
+        return list(range(args.n_seeds))
+    env = os.environ.get("REPRO_DETECTION_SEEDS", "").strip()
+    if env:
+        if "," in env:
+            return [int(s) for s in env.split(",") if s.strip()]
+        return list(range(int(env)))
+    return list(range(cfg["n_seeds"]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, not minutes)")
+    ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    ap.add_argument("--n-seeds", type=int, default=None,
+                    help="zombie arm: run seeds 0..N-1")
+    ap.add_argument("--seeds", default=None,
+                    help="zombie arm: explicit comma-separated seed list")
+    args = ap.parse_args()
+    cfg = SMOKE if args.smoke else FULL
+    seeds = _parse_seeds(args, cfg)
+
+    from .bench_io import emit_json
+
+    from repro.serving.health import HealthConfig
+
+    model, params = _model_and_params(cfg)
+
+    fixed_timeout = _derive_fixed_timeout(cfg, model, params)
+    adaptive = run_hang_arm(
+        cfg, model, params, HealthConfig(), "adaptive"
+    )
+    fixed = run_hang_arm(
+        cfg, model, params,
+        HealthConfig(detector="fixed", fixed_timeout_s=fixed_timeout),
+        "fixed",
+    )
+
+    journals, failed = [], []
+    t0 = time.perf_counter()
+    for seed in seeds:
+        ok, journal = run_zombie_seed(cfg, model, params, seed)
+        journals.append(journal)
+        if not ok:
+            failed.append(seed)
+    zombie_wall = time.perf_counter() - t0
+    if failed:
+        out_dir = args.out or "."
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, "BENCH_detection_journal.json")
+        with open(path, "w") as fh:
+            json.dump(journals, fh, indent=2)
+        raise SystemExit(
+            f"zombie arm: seeds {failed} violated invariants — journal "
+            f"written to {path}; repro with: PYTHONPATH=src python -m "
+            f"benchmarks.detection{' --smoke' if args.smoke else ''} "
+            f"--seeds {','.join(str(s) for s in failed)}"
+        )
+    zombie = {
+        "n_schedules": len(seeds),
+        "seeds": list(seeds),
+        "all_passed": True,
+        "fenced_total": sum(j["fenced"] for j in journals),
+        "woke_mid_serve": sum(1 for j in journals if j["woke"]),
+        "wall_s": zombie_wall,
+    }
+    gray = run_gray_arm(cfg, model, params)
+
+    print("name,value,unit")
+    print(f"fixed_timeout_derived,{fixed_timeout * 1e3:.3f},ms")
+    for arm in (adaptive, fixed):
+        p = arm["detector"]
+        lat = arm["detection_latency_s"]
+        print(f"{p}_condemned,{int(arm['condemned'])},bool")
+        print(f"{p}_detection_latency,"
+              f"{(lat * 1e3 if lat is not None else -1.0):.3f},ms")
+        print(f"{p}_clean_false_suspicions,"
+              f"{int(arm['clean_false_suspicions'])},events")
+        print(f"{p}_token_parity,{int(arm['token_parity'])},bool")
+        print(f"{p}_fenced,{int(arm['fenced_stale_completions'])},claims")
+    print(f"zombie_schedules,{zombie['n_schedules']},runs")
+    print(f"zombie_fenced_total,{int(zombie['fenced_total'])},claims")
+    print(f"gray_degraded_events,{int(gray['degraded_events'])},events")
+    print(f"gray_flagged_suspect,{int(gray['flagged_suspect'])},bool")
+    print(f"gray_token_parity,{int(gray['token_parity'])},bool")
+
+    payload = {
+        "fixed_timeout_derived_s": fixed_timeout,
+        "hang_adaptive": adaptive,
+        "hang_fixed": fixed,
+        "zombie": zombie,
+        "gray": gray,
+    }
+    path = emit_json("detection", payload, smoke=args.smoke, out_dir=args.out)
+    print(f"# wrote {path}")
+
+    # ---- hard-fail gates ------------------------------------------------- #
+    # (a) the hang is detected without an oracle and served exactly once
+    if not adaptive["condemned"]:
+        raise SystemExit("adaptive detector never condemned the hung replica")
+    if adaptive["detection_latency_s"] >= (
+        adaptive["hang_until_s"] - adaptive["hang_at_s"]
+    ):
+        raise SystemExit("hang detected only after it would have resumed")
+    if not adaptive["epoch_bumped"]:
+        raise SystemExit("condemnation did not bump the fencing epoch")
+    if adaptive["fenced_stale_completions"] <= 0:
+        raise SystemExit("the condemned replica's stale claims never fenced")
+    if not (adaptive["exactly_once"] and adaptive["token_parity"]):
+        raise SystemExit("hang arm: not exactly-once / streams diverged")
+    if adaptive["clean_false_suspicions"] != 0:
+        raise SystemExit(
+            f"adaptive detector false-suspected "
+            f"{int(adaptive['clean_false_suspicions'])} times on a clean serve"
+        )
+    # (b) adaptive beats the fixed-timeout ablation at token parity
+    if not (fixed["exactly_once"] and fixed["token_parity"]):
+        raise SystemExit("fixed arm: not exactly-once / streams diverged")
+    adaptive_wins_latency = (
+        fixed["detection_latency_s"] is None
+        or (adaptive["detection_latency_s"]
+            < fixed["detection_latency_s"])
+    )
+    adaptive_wins_fp = (
+        adaptive["clean_false_suspicions"] < fixed["clean_false_suspicions"]
+    )
+    if not (adaptive_wins_latency or adaptive_wins_fp):
+        raise SystemExit(
+            f"adaptive detector beat fixed on neither detection latency "
+            f"({adaptive['detection_latency_s']:.5f}s vs "
+            f"{fixed['detection_latency_s']:.5f}s) nor clean-serve false "
+            f"positives ({int(adaptive['clean_false_suspicions'])} vs "
+            f"{int(fixed['clean_false_suspicions'])})"
+        )
+    # (c) zombie schedules: fenced > 0, zero double-serve — gated per seed
+    if not zombie["all_passed"]:
+        raise SystemExit("zombie schedules failed")
+    if zombie["woke_mid_serve"] != zombie["n_schedules"]:
+        raise SystemExit(
+            f"only {zombie['woke_mid_serve']}/{zombie['n_schedules']} "
+            f"zombies woke mid-serve — the schedule is not testing the fence"
+        )
+    # (d) the x4 gray failure is flagged while progressing
+    if gray["degraded_events"] < 1:
+        raise SystemExit("x4 degrade never flagged degraded")
+    if not gray["flagged_suspect"] or gray["suspect_reason"] != "degraded":
+        raise SystemExit("degraded replica not held SUSPECT")
+    if gray["condemned_replicas"] != 0:
+        raise SystemExit("gray degrade must not condemn a progressing replica")
+    if gray["survivor_false_suspicions"] != 0:
+        raise SystemExit("gray arm produced false suspicions")
+    if not gray["token_parity"]:
+        raise SystemExit("gray arm: streams diverged")
+    print("# all detection gates passed")
+
+
+if __name__ == "__main__":
+    main()

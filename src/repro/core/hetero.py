@@ -118,16 +118,28 @@ def hetero_weights(
     requests: Sequence[Request],
     cost_models: Sequence[CostModel],
     slots_per_replica: int,
+    replica_penalties: Optional[Sequence[float]] = None,
 ) -> np.ndarray:
     """The R||Cmax weight matrix ``T[i, j]``: request ``i``'s estimated
     service time on replica ``j`` (``replica_request_weight`` evaluated
     per replica cost model — the same pricing ``least_load`` dispatch
-    uses)."""
+    uses). ``replica_penalties`` multiplies whole columns (≥ 1.0 each):
+    the health layer prices SUSPECT replicas out of the offline solve by
+    inflating their columns, rather than deleting them — the solver's
+    shape stays R-wide and a penalized replica still takes work if every
+    alternative is worse."""
     n_i, n_j = len(requests), len(cost_models)
+    if replica_penalties is not None and len(replica_penalties) != n_j:
+        raise ValueError(
+            f"{len(replica_penalties)} penalties for {n_j} replicas"
+        )
     t = np.zeros((n_i, n_j), dtype=np.float64)
     for j, cm in enumerate(cost_models):
+        pen = 1.0 if replica_penalties is None else float(replica_penalties[j])
+        if pen < 1.0:
+            raise ValueError("replica penalties must be >= 1.0")
         for i, r in enumerate(requests):
-            t[i, j] = replica_request_weight(r, cm, slots_per_replica)
+            t[i, j] = pen * replica_request_weight(r, cm, slots_per_replica)
     return t
 
 
@@ -447,16 +459,23 @@ def solve_hetero(
     cost_models: Sequence[CostModel],
     slots_per_replica: int,
     local_search_rounds: int = 200,
+    replica_penalties: Optional[Sequence[float]] = None,
 ) -> OfflineResult:
     """Solve the R||Cmax offline assignment: speed-scaled LPT seed + local
     search re-priced through each replica's own cost model. Returns the same
     ``OfflineResult`` shape as ``solve_offline`` (per-replica rid lists
     ordered longest-first, loads, makespan estimate, LP lower bound), so the
-    fleet layer treats both solvers identically."""
+    fleet layer treats both solvers identically. ``replica_penalties``
+    inflates whole columns of the weight matrix (see ``hetero_weights``) —
+    how SUSPECT replicas are priced out of a solve without changing its
+    shape."""
     if not cost_models:
         raise ValueError("need at least one replica cost model")
     t0 = time.perf_counter()
-    weights = hetero_weights(requests, cost_models, slots_per_replica)
+    weights = hetero_weights(
+        requests, cost_models, slots_per_replica,
+        replica_penalties=replica_penalties,
+    )
     assignment = hetero_lpt_assign(weights, slots_per_replica)
     assignment = hetero_local_search(
         assignment, weights, slots_per_replica, max_rounds=local_search_rounds

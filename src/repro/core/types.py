@@ -77,6 +77,11 @@ class Request:
     # re-queued with its generated prefix). A preempted request re-prefills,
     # so trace validation expects 1 + preemptions prefill completions.
     preemptions: int = 0
+    # Times this request was pulled off a SUSPECT replica's queue and
+    # re-placed on a healthy one (deadline-aware backoff redispatch). The
+    # request never started on the suspect, so redispatch — unlike
+    # preemption — changes no prefill accounting.
+    redispatches: int = 0
 
     def __post_init__(self) -> None:
         if self.n_prefill <= 0:
@@ -152,6 +157,7 @@ class Request:
         self.t_done = None
         self.t_first_token = None
         self.preemptions = 0
+        self.redispatches = 0
 
 
 @dataclass

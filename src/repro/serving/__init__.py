@@ -10,7 +10,19 @@ from .fleet import (
     ReplicaFault,
     RoundRobinDispatch,
 )
-from .kv_slots import BlockAllocator, PagedSlotManager, SlotManager
+from .health import (
+    ALIVE,
+    CONDEMNED,
+    SUSPECT,
+    HealthConfig,
+    ReplicaHealthMonitor,
+)
+from .kv_slots import (
+    BlockAllocator,
+    PageIntegrityError,
+    PagedSlotManager,
+    SlotManager,
+)
 from .overload import OverloadPolicy, SLOAwareOverloadPolicy
 from .profiler import OnlineProfiler
 from .sampler import (

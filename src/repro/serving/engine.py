@@ -251,7 +251,15 @@ class SlotCheckpoint:
     ``1 + preemptions`` it will ever need; a mid-chunk prefill has completed
     ``preemptions`` (its current pass is still in flight). The importer
     records it in ``ScheduleTrace.external_prefills`` so exactly-once
-    prefill accounting validates on both sides of the move."""
+    prefill accounting validates on both sides of the move.
+
+    ``checksum`` is the KV payload's content CRC, computed at
+    ``export_pages`` and verified at ``import_pages`` — a corrupted
+    transfer raises ``PageIntegrityError`` instead of silently resuming a
+    poisoned stream. ``src_replica``/``src_epoch`` are the exporter's
+    ``(replica, epoch)`` lease, stamped by the fleet: an export from an
+    epoch that has since been fenced (the source was condemned mid-flight)
+    is discarded at the fleet layer, never imported."""
 
     req: Request
     kind: str                             # "bound" | "chunking"
@@ -267,6 +275,11 @@ class SlotCheckpoint:
     chunk_done: int = 0
     resume_emitted: int = 0
     resume_pending: int = -1
+    # KV payload integrity (None = exporter predates checksums)
+    checksum: Optional[int] = None
+    # (replica, epoch) lease of the exporter (fleet-stamped; -1 = unset)
+    src_replica: int = -1
+    src_epoch: int = -1
 
 
 def _fused_decode(
@@ -1257,7 +1270,9 @@ class Engine:
             credit = 1 + req.preemptions
         else:
             raise RuntimeError(f"slot {slot} holds no in-flight request")
-        pages, k_pages, v_pages, kv_length = self.slots.export_pages(slot)
+        pages, k_pages, v_pages, kv_length, checksum = (
+            self.slots.export_pages(slot)
+        )
         if kind == "chunking":
             del self._chunking[slot]
             self.slots.free_pages_of(slot)
@@ -1276,7 +1291,7 @@ class Engine:
             kv_length=kv_length, k_pages=k_pages, v_pages=v_pages,
             n_pages=len(pages), prefix=list(prefix), prefill_credit=credit,
             chunk_done=chunk_done, resume_emitted=resume_emitted,
-            resume_pending=resume_pending,
+            resume_pending=resume_pending, checksum=checksum,
         )
 
     def import_slot(self, ckpt: SlotCheckpoint) -> int:
@@ -1290,7 +1305,12 @@ class Engine:
         if not free:
             raise RuntimeError("no free slot to import into")
         slot = free[0]
-        self.slots.import_pages(slot, ckpt.k_pages, ckpt.v_pages, ckpt.kv_length)
+        # verifies the payload CRC before any pool state changes — a
+        # corrupted transfer raises PageIntegrityError with nothing bound
+        self.slots.import_pages(
+            slot, ckpt.k_pages, ckpt.v_pages, ckpt.kv_length,
+            checksum=ckpt.checksum,
+        )
         req = ckpt.req
         if ckpt.prefix:
             self.generated[req.rid] = list(ckpt.prefix)

@@ -75,12 +75,26 @@ from ..core.offline import (
     theoretical_lower_bound,
 )
 from ..core.online import GlobalQueueScheduler, build_clients
-from ..core.types import FleetReport, Request
+from ..core.types import FleetReport, Request, StageKind
 from .engine import Engine, EngineConfig
+from .health import (
+    ALIVE,
+    CONDEMNED,
+    SUSPECT,
+    HealthConfig,
+    ReplicaHealthMonitor,
+)
+from .kv_slots import PageIntegrityError
 from .profiler import OnlineProfiler
 from .sampler import greedy
 
 Tree = Any
+
+# Weight-column multiplier pricing a SUSPECT replica out of the offline
+# R||Cmax solve: large enough that any trusted replica wins every
+# assignment comparison, finite so a degenerate all-suspect fleet still
+# partitions instead of dividing by infinity.
+HEALTH_SUSPECT_PENALTY = 1024.0
 
 
 # --------------------------------------------------------------------------- #
@@ -100,13 +114,15 @@ class LeastLoadDispatch(ReplicaDispatchPolicy):
     (queued + in-flight, priced by each replica's *current fitted* cost
     model — so a replica whose profiler has learned it is slow prices its
     own queue accordingly) — the replica-level analogue of LPT's
-    least-loaded-client rule, made speed-aware."""
+    least-loaded-client rule, made speed-aware. SUSPECT replicas are
+    priced out entirely (``dispatchable_replicas``): new work never lands
+    on a replica the health monitor distrusts."""
 
     name = "least_load"
 
     def choose(self, fleet: "Fleet", req: Request) -> int:
         return min(
-            fleet.alive_replicas,
+            fleet.dispatchable_replicas,
             key=lambda i: (fleet.estimated_load_s(i), i),
         )
 
@@ -127,10 +143,11 @@ class RoundRobinDispatch(ReplicaDispatchPolicy):
         self.cursor = 0
 
     def choose(self, fleet: "Fleet", req: Request) -> int:
+        ok = set(fleet.dispatchable_replicas)
         for _ in range(fleet.n_replicas):
             i = self.cursor % fleet.n_replicas
             self.cursor += 1
-            if i in fleet.alive_set:
+            if i in ok:
                 return i
         raise RuntimeError("no alive replica to dispatch to")
 
@@ -166,21 +183,46 @@ class ReplicaFault:
     then prefers the same page-copy path, falling back to
     recompute-on-resume only when no survivor can host the pages; a hard
     kill (the default) always recomputes — the pool died with the
-    replica."""
+    replica.
+
+    **Undeclared faults** — the failure modes the oracle never announces,
+    which only the health monitor (``serving.health``) can catch:
+
+      * ``kind="hang"`` stops the replica's progress at ``at_s`` and
+        silently resumes it at ``until_s``. The fleet is NOT told: no
+        ``fault_log`` entry fires, no recovery is triggered by the plan.
+        The replica simply stops heartbeating; detection, condemnation,
+        and evacuation are entirely the monitor's job. If it is condemned
+        before ``until_s``, the wake-up is a *zombie*: its stale
+        completions arrive carrying a fenced epoch and are discarded.
+      * ``kind="degrade"`` multiplies the replica's ``speed_factor``
+        silently (gray failure: ``speed_factor=0.25`` makes it ×4-slow but
+        still progressing), restoring the original speed at ``until_s``
+        when given. Unlike ``kind="slow"`` — the declared ablation —
+        nothing is logged at apply time; the monitor must notice the
+        observed/predicted stage-duration ratio departing from the
+        replica's own baseline."""
 
     replica: int
     at_s: float
-    kind: str = "kill"                    # "kill" | "slow" | "drain"
-    speed_factor: float = 0.5             # for kind="slow" only
+    kind: str = "kill"        # "kill" | "slow" | "drain" | "hang" | "degrade"
+    speed_factor: float = 0.5             # for kind="slow" / "degrade"
     pool_readable: bool = False           # for kind="kill" only
+    until_s: Optional[float] = None       # hang resume / degrade restore time
 
     def __post_init__(self):
-        if self.kind not in ("kill", "slow", "drain"):
+        if self.kind not in ("kill", "slow", "drain", "hang", "degrade"):
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.at_s < 0:
             raise ValueError("fault time must be >= 0")
-        if self.kind == "slow" and self.speed_factor <= 0:
-            raise ValueError("slow fault needs a positive speed_factor")
+        if self.kind in ("slow", "degrade") and self.speed_factor <= 0:
+            raise ValueError(f"{self.kind} fault needs a positive speed_factor")
+        if self.kind == "hang":
+            if self.until_s is None or self.until_s <= self.at_s:
+                raise ValueError("hang fault needs until_s > at_s")
+        if self.kind == "degrade" and self.until_s is not None:
+            if self.until_s <= self.at_s:
+                raise ValueError("degrade restore needs until_s > at_s")
 
 
 @dataclasses.dataclass
@@ -233,6 +275,14 @@ class FleetConfig:
     # baseline; ``benchmarks/chaos.py`` gates that this flag strictly
     # improves fleet makespan on the straggler-tail workload.
     steal_running: bool = False
+    # Oracle-free failure detection (serving.health): when set, the fleet
+    # stamps per-replica heartbeats at every stage boundary, scores silence
+    # through the configured detector, prices SUSPECT replicas out of
+    # dispatch/stealing, and condemns + epoch-fences + evacuates replicas
+    # the monitor gives up on. None (the default) keeps the PR-7 behavior:
+    # only declared faults (the plan / drain_replica calls) trigger
+    # recovery.
+    health: Optional[HealthConfig] = None
 
 
 class Fleet:
@@ -318,6 +368,37 @@ class Fleet:
         # pricing_cost_models memo (invalidated by refits/restores via key)
         self._pricing_key: Optional[tuple] = None
         self._pricing_models: List[CostModel] = []
+        # --- oracle-free health monitoring + epoch fencing (PR 8) ------- #
+        self.monitor: Optional[ReplicaHealthMonitor] = (
+            ReplicaHealthMonitor(self.cfg.n_replicas, self.cfg.health)
+            if self.cfg.health is not None else None
+        )
+        # per-serve frozen prediction models for the gray-failure signal:
+        # the live profiler keeps refitting to *measured* stages, so a ×4
+        # slowdown would be normalized into the very model it is judged
+        # against within one refit cycle — predictions for health come from
+        # the model as-of-serve-start instead (None until first full fit)
+        self._health_cms: List[Optional[CostModel]] = (
+            [None] * self.cfg.n_replicas
+        )
+        # per-replica fencing epoch: bumped BEFORE any evacuation moves
+        # state, so every lease granted under the old epoch is dead the
+        # instant recovery begins — a zombie's late completions/exports
+        # carry a stale epoch and are discarded, never double-served
+        self.epochs: List[int] = [0] * self.cfg.n_replicas
+        # rid -> (replica, epoch): which replica may complete each request
+        self._leases: Dict[int, tuple] = {}
+        self.fenced_completions = 0
+        self.fenced_exports = 0
+        self.fenced_log: List[Dict[str, Any]] = []
+        self.redispatch_events = 0
+        self.redispatch_log: List[Dict[str, Any]] = []
+        self.integrity_rejections = 0
+        # undeclared-fault injection state (the monitor NEVER reads these)
+        self._hangs: Dict[int, ReplicaFault] = {}
+        self._restores: List[Dict[str, Any]] = []
+        self._ghosts: Dict[int, Dict[str, Any]] = {}
+        self.injected_log: List[Dict[str, Any]] = []
 
     @property
     def n_replicas(self) -> int:
@@ -332,6 +413,40 @@ class Fleet:
     @property
     def alive_set(self) -> set:
         return set(range(self.cfg.n_replicas)) - self._dead
+
+    @property
+    def healthy_replicas(self) -> List[int]:
+        """Alive replicas the health monitor currently trusts (ALIVE, not
+        SUSPECT). Falls back to all alive replicas when the monitor
+        distrusts everyone — work has to land somewhere."""
+        alive = self.alive_replicas
+        if self.monitor is None:
+            return alive
+        ok = [i for i in alive if self.monitor.is_healthy(i)]
+        return ok or alive
+
+    @property
+    def dispatchable_replicas(self) -> List[int]:
+        """Where new work may be routed: healthy replicas, which prices
+        SUSPECT replicas out of dispatch entirely (they keep serving what
+        they already hold until cleared or condemned)."""
+        return self.healthy_replicas
+
+    @property
+    def dispatchable_set(self) -> set:
+        return set(self.dispatchable_replicas)
+
+    def health_penalties(self) -> Optional[List[float]]:
+        """Per-replica weight-column multipliers for the R||Cmax solve
+        (``core.hetero.hetero_weights``): 1.0 for trusted replicas, a
+        large penalty for SUSPECT ones so the offline partition only
+        assigns them work when capacity leaves no alternative."""
+        if self.monitor is None:
+            return None
+        return [
+            1.0 if self.monitor.is_healthy(i) else HEALTH_SUSPECT_PENALTY
+            for i in range(self.cfg.n_replicas)
+        ]
 
     @property
     def heterogeneous(self) -> bool:
@@ -468,6 +583,28 @@ class Fleet:
         self.migrated_pages = 0
         self.migration_log = []
         self._recovery_watch = []
+        # health/fencing state is per serve: replica clocks restart at 0,
+        # so heartbeat cursors and epochs from an earlier serve would be in
+        # a different timebase (checkpoint restore — load_state_dict —
+        # keeps them instead, which is satellite-tested)
+        if self.monitor is not None:
+            self.monitor.reset()
+        self._health_cms = [
+            eng.profiler.cost_model if eng.profiler.full_fits > 0 else None
+            for eng in self.engines
+        ]
+        self.epochs = [0] * self.cfg.n_replicas
+        self._leases = {}
+        self.fenced_completions = 0
+        self.fenced_exports = 0
+        self.fenced_log = []
+        self.redispatch_events = 0
+        self.redispatch_log = []
+        self.integrity_rejections = 0
+        self._hangs = {}
+        self._restores = []
+        self._ghosts = {}
+        self.injected_log = []
         if hasattr(self.dispatcher, "reset"):
             self.dispatcher.reset()
         offline = [r for r in requests if r.arrival <= 0.0]
@@ -484,6 +621,7 @@ class Fleet:
             self._offline_result = solve_hetero(
                 offline, live_cms, slots,
                 local_search_rounds=self.cfg.local_search_rounds,
+                replica_penalties=self.health_penalties(),
             )
         elif self.cfg.assign in ("lpt", "lpt_blind"):
             blind = solve_offline(
@@ -518,10 +656,19 @@ class Fleet:
             # per-replica FCFS queue over the partition, longest-first
             # (Algorithm 1's sort); fleet dispatch/stealing push into it
             sched = GlobalQueueScheduler(parts[i], sort_longest_first=True)
+            for r in parts[i]:
+                self._grant_lease(r.rid, i)
             eng.begin_serve(
                 [], clients, sched, iteration_policy_factory(),
                 policy_name=f"{base}/r{i}", track_requests=True,
             )
+
+    def _grant_lease(self, rid: int, replica: int) -> None:
+        """Record that ``replica`` (at its CURRENT epoch) owns ``rid``.
+        Every ownership transfer — offline partition, dispatch, steal,
+        migration, recovery placement, redispatch — re-grants, so exactly
+        one ``(replica, epoch)`` pair may ever complete the request."""
+        self._leases[rid] = (replica, self.epochs[replica])
 
     def _route_arrivals(self, now: float) -> None:
         """Admit every central request whose arrival has passed, each to the
@@ -530,6 +677,7 @@ class Fleet:
         while self._central and self._central[0].arrival <= now:
             req = self._central.pop(0)
             i = self.dispatcher.choose(self, req)
+            self._grant_lease(req.rid, i)
             self.engines[i]._sv.scheduler.push(req)
 
     def _earliest_slot_free_s(self, j: int) -> float:
@@ -620,9 +768,14 @@ class Fleet:
         the starving thief by KV page-copy, when the double-gated makespan
         check approves. This is the straggler-tail case queued-only stealing
         structurally cannot touch: once every queue is empty, the only work
-        left to rebalance is already bound to a slot."""
+        left to rebalance is already bound to a slot. Donors must be
+        healthy: a page-copy export is exactly the operation a replica the
+        monitor distrusts should not be performing."""
         for j in sorted(
-            (k for k in self.alive_replicas if k != thief),
+            (
+                k for k in self.healthy_replicas
+                if k != thief and k not in self._hangs
+            ),
             key=lambda k: (-self.estimated_load_s(k), k),
         ):
             donor = self.engines[j]
@@ -657,9 +810,16 @@ class Fleet:
         queued); the steal commits only when the R||Cmax-priced finish time
         improves (``_steal_improves``). With ``steal_running`` on, a thief
         that finds no profitable queued steal escalates to migrating a
-        running slot (``_try_steal_running``)."""
+        running slot (``_try_steal_running``).
+
+        A thief must be healthy (stealing INTO a SUSPECT replica would pile
+        work onto a machine the monitor distrusts) and not hung (a stalled
+        process cannot execute its steal loop). Queued-steal *donors* may be
+        SUSPECT — draining a distrusted replica's queue is desirable."""
         for i, eng in enumerate(self.engines):
-            if i in self._dead:
+            if i in self._dead or i in self._hangs:
+                continue
+            if self.monitor is not None and not self.monitor.is_healthy(i):
                 continue
             sched = eng._sv.scheduler
             idle_slots = [
@@ -689,6 +849,7 @@ class Fleet:
                 stolen = donor_sched.steal_longest()
                 assert stolen is victim
                 sched.push(stolen)
+                self._grant_lease(stolen.rid, i)
                 self.steal_events += 1
                 self.steal_log.append({"rid": stolen.rid, "from": j, "to": i})
                 stole = True
@@ -702,7 +863,15 @@ class Fleet:
     def _apply_due_faults(self, now: float) -> int:
         """Fire every pending fault whose instant the fleet clock has
         reached. Returns how many fired (the step loop re-derives its
-        worker set when membership changed)."""
+        worker set when membership changed).
+
+        Declared kinds (kill/slow/drain) tell the fleet — they append to
+        ``fault_log`` and trigger recovery directly. Undeclared kinds
+        (hang/degrade) only mutate the injection layer (``_hangs``, the
+        engine's ``speed_factor``) and the chaos harness's ground-truth
+        ``injected_log``; the fleet's scheduling/recovery code and the
+        health monitor learn of them solely through missing or slowed
+        heartbeats."""
         fired = 0
         while self._pending_faults and self._pending_faults[0].at_s <= now:
             f = self._pending_faults.pop(0)
@@ -721,6 +890,26 @@ class Fleet:
                     self._kill_replica(
                         f.replica, now, pool_readable=f.pool_readable
                     )
+            elif f.kind == "hang":
+                self._hangs[f.replica] = f
+                self.injected_log.append({
+                    "kind": "hang", "replica": f.replica, "at_s": f.at_s,
+                    "applied_at_s": now, "until_s": f.until_s,
+                })
+            elif f.kind == "degrade":
+                eng = self.engines[f.replica]
+                prev = eng.speed_factor
+                eng.speed_factor = prev * f.speed_factor
+                if f.until_s is not None:
+                    self._restores.append({
+                        "at_s": f.until_s, "replica": f.replica,
+                        "speed_factor": prev,
+                    })
+                self.injected_log.append({
+                    "kind": "degrade", "replica": f.replica, "at_s": f.at_s,
+                    "applied_at_s": now, "speed_factor": eng.speed_factor,
+                    "until_s": f.until_s,
+                })
             else:
                 eng = self.engines[f.replica]
                 eng.speed_factor = eng.speed_factor * f.speed_factor
@@ -730,6 +919,123 @@ class Fleet:
                 })
             fired += 1
         return fired
+
+    def _apply_due_injections(self, now: float) -> int:
+        """Advance the undeclared-fault injection layer to ``now``: restore
+        degraded speeds whose window ended, and wake hung replicas whose
+        ``until_s`` has passed. A wake-up of a replica that was condemned
+        while hung fires its ghost — the zombie replays its stale in-flight
+        completions, which ``deliver_completion`` must fence."""
+        fired = 0
+        still: List[Dict[str, Any]] = []
+        for r in self._restores:
+            if r["at_s"] <= now:
+                if r["replica"] not in self._dead:
+                    self.engines[r["replica"]].speed_factor = r["speed_factor"]
+                self.injected_log.append({
+                    "kind": "degrade_end", "replica": r["replica"],
+                    "at_s": r["at_s"], "applied_at_s": now,
+                })
+                fired += 1
+            else:
+                still.append(r)
+        self._restores = still
+        for i, f in list(self._hangs.items()):
+            if f.until_s is not None and f.until_s <= now:
+                del self._hangs[i]
+                self.injected_log.append({
+                    "kind": "hang_end", "replica": i,
+                    "at_s": f.until_s, "applied_at_s": now,
+                })
+                self._fire_ghost(i, now)
+                fired += 1
+        return fired
+
+    def _fire_ghost(self, i: int, now: float) -> None:
+        """Replay replica ``i``'s ghost: the in-flight work it held at
+        condemnation, delivered now that the 'dead' process woke up. Every
+        delivery carries the pre-condemnation epoch, so the fence discards
+        them all — the hard acceptance gate is zero double-served tokens."""
+        g = self._ghosts.pop(i, None)
+        if g is None:
+            return
+        for rid, tokens in g["work"]:
+            self.deliver_completion(i, g["epoch"], rid, tokens, now)
+
+    def deliver_completion(
+        self, replica: int, epoch: int, rid: int, tokens: List[int], now: float
+    ) -> bool:
+        """The fleet's single completion-acceptance gate: replica
+        ``replica`` claims (under lease epoch ``epoch``) to have produced
+        ``tokens`` for ``rid``. Accepted only when the epoch is the
+        replica's CURRENT epoch, the request's lease names exactly this
+        ``(replica, epoch)``, and the replica is not dead — otherwise the
+        delivery is a zombie's and is fenced: counted, logged, discarded.
+
+        In-process engines write their tokens directly (their lease is
+        implicit in where the fleet queued the request); this explicit path
+        exists for late/out-of-band deliveries — ghosts of condemned
+        replicas replaying what they held. If the fence ever failed open,
+        the stale write would land in a second engine's ``generated`` and
+        the ``Fleet.generated`` merge would raise — a tripwire, not a
+        handler."""
+        reason = None
+        if replica in self._dead:
+            reason = "replica dead"
+        elif epoch != self.epochs[replica]:
+            reason = f"stale epoch {epoch} (current {self.epochs[replica]})"
+        elif self._leases.get(rid) != (replica, epoch):
+            reason = f"lease mismatch (held {self._leases.get(rid)})"
+        if reason is not None:
+            self.fenced_completions += 1
+            self.fenced_log.append({
+                "kind": "completion", "replica": replica, "epoch": epoch,
+                "rid": rid, "n_tokens": len(tokens), "at_s": now,
+                "reason": reason,
+            })
+            return False
+        self.engines[replica].generated[rid] = list(tokens)
+        return True
+
+    def _condemn_replica(self, i: int, now: float, reason: str) -> None:
+        """Act on the monitor's verdict: fence replica ``i`` (epoch bump
+        happens inside ``_evacuate_replica``, before any state moves) and
+        evacuate its work onto survivors. Pool-readable page-copy is
+        attempted first — condemnation is a *suspicion*, the host may well
+        be reachable — with recompute-on-resume as the fallback.
+
+        Before evacuating, the replica's in-flight work is snapshotted as a
+        ghost under the pre-condemnation epoch: if the replica was merely
+        stalled and later wakes, it replays those completions and the fence
+        must discard every one.
+
+        Refuses to condemn the last alive replica (a fleet that beheads
+        itself on suspicion is worse than one that waits): the monitor's
+        verdict is demoted back to SUSPECT and re-evaluated as the gap
+        evidence accumulates."""
+        if len(self._dead) + 1 >= self.cfg.n_replicas:
+            self.monitor._transition(
+                i, SUSPECT, now, "condemn refused: last alive"
+            )
+            return
+        eng = self.engines[i]
+        old_epoch = self.epochs[i]
+        ghost_work: List[tuple] = []
+        for slot in list(eng.slots.active_slots):
+            rid = eng.slots.request_of[slot].rid
+            ghost_work.append((rid, list(eng.generated.get(rid, []))))
+        for st in eng._chunking.values():
+            rid = st.req.rid
+            ghost_work.append((rid, list(eng.generated.get(rid, []))))
+        # queued work too: a stalled-but-not-dead process still holds its
+        # queue and would serve it on wake — every one of those deliveries
+        # must hit the fence
+        for req in eng._sv.scheduler.queued:
+            ghost_work.append((req.rid, list(eng.generated.get(req.rid, []))))
+        self._ghosts[i] = {"epoch": old_epoch, "work": ghost_work}
+        entry = self._evacuate_replica(i, now, pool_readable=True, kind="condemn")
+        entry["reason"] = reason
+        entry["fenced_epoch"] = old_epoch
 
     def _placement_cost(self, j: int, req: Request, in_flight: bool) -> float:
         """Estimated absolute fleet time at which survivor ``j`` would
@@ -748,27 +1054,69 @@ class Fleet:
             w = self._request_weight_s(req, est, cm)
         return self.engines[j].clock + self.estimated_load_s(j) + w
 
-    def migrate_slot(self, src: int, slot: int, dst: int) -> bool:
+    def migrate_slot(
+        self, src: int, slot: int, dst: int, src_epoch: Optional[int] = None
+    ):
         """Live-migrate one in-flight slot from replica ``src`` to ``dst``
         by KV page-copy: export the slot checkpoint (pages + pending token
         + sampler cursor), import it into freshly allocated pages on the
-        destination, zero recomputed tokens, bit-identical stream. Returns
-        False — with no state changed — when ``dst`` cannot host it (no
-        free slot, or too little pool headroom)."""
+        destination, zero recomputed tokens, bit-identical stream.
+
+        Returns ``"page_copy"`` on the clean path; ``"recompute"`` when the
+        payload failed its integrity check at import (the corrupted pages
+        are rejected and the request falls back to recompute-on-resume from
+        its trusted generated prefix — stream still bit-identical); False —
+        with no state changed — when ``dst`` cannot host it, or when
+        ``src_epoch`` is given and stale (the exporter was fenced
+        mid-flight: the export is discarded, never imported). Both success
+        strings are truthy, so boolean callers keep working."""
         if src == dst:
             raise ValueError("migration source and destination coincide")
+        if src_epoch is not None and src_epoch != self.epochs[src]:
+            self.fenced_exports += 1
+            self.fenced_log.append({
+                "kind": "export", "replica": src, "epoch": src_epoch,
+                "slot": slot, "to": dst,
+                "reason": f"stale epoch {src_epoch} "
+                          f"(current {self.epochs[src]})",
+            })
+            return False
         src_eng, dst_eng = self.engines[src], self.engines[dst]
         if not dst_eng.can_import(src_eng.slot_pages(slot)):
             return False
         ckpt = src_eng.export_slot(slot)
-        dst_eng.import_slot(ckpt)
+        ckpt.src_replica = src
+        ckpt.src_epoch = self.epochs[src]
+        req = ckpt.req
+        try:
+            dst_eng.import_slot(ckpt)
+        except PageIntegrityError:
+            # the export already consumed the source slot, so the pages are
+            # unrecoverable — but the generated prefix in the checkpoint is
+            # host memory, not KV payload, and stays trusted: recompute it
+            # on the destination (the PR-6 recovery path)
+            self.integrity_rejections += 1
+            self._lost_preemptions += req.preemptions
+            req.preemptions = 0
+            req.client = None
+            self._grant_lease(req.rid, dst)
+            if ckpt.prefix:
+                dst_eng.adopt_resume(req, ckpt.prefix)
+            else:
+                dst_eng._sv.scheduler.push(req)
+            self.migration_log.append({
+                "rid": req.rid, "from": src, "to": dst,
+                "pages": 0, "kind": ckpt.kind, "integrity_rejected": 1,
+            })
+            return "recompute"
+        self._grant_lease(req.rid, dst)
         self.migration_events += 1
         self.migrated_pages += ckpt.n_pages
         self.migration_log.append({
-            "rid": ckpt.req.rid, "from": src, "to": dst,
+            "rid": req.rid, "from": src, "to": dst,
             "pages": ckpt.n_pages, "kind": ckpt.kind,
         })
-        return True
+        return "page_copy"
 
     def drain_replica(self, i: int, now: Optional[float] = None) -> Dict[str, Any]:
         """Gracefully retire replica ``i`` mid-serve (rolling restart):
@@ -823,12 +1171,17 @@ class Fleet:
         credits the completions that happened elsewhere."""
         eng = self.engines[i]
         sv = eng._sv
-        # retire FIRST so placement/pricing never targets the victim
+        # retire FIRST so placement/pricing never targets the victim, and
+        # fence BEFORE any state moves: every lease granted to this replica
+        # dies here, so nothing it later claims (a zombie waking from a
+        # hang) can be mistaken for current work
         self._dead.add(i)
+        self.epochs[i] += 1
         if kind == "drain":
             self._drained.add(i)
         self._pricing_key = None              # membership changed
         page_copied = 0
+        integrity_fb = 0                      # corrupted-payload fallbacks
         recompute: List[tuple] = []           # (request, prefix tokens)
         displaced: Dict[int, Request] = {}
         # in-flight work: page-copy where possible, recompute otherwise
@@ -843,7 +1196,7 @@ class Fleet:
             if pool_readable:
                 n_pages = eng.slot_pages(slot)
                 cands = [
-                    j for j in self.alive_replicas
+                    j for j in self.healthy_replicas
                     if self.engines[j].can_import(n_pages)
                 ]
                 if cands:
@@ -851,8 +1204,11 @@ class Fleet:
                         cands,
                         key=lambda j: (self._placement_cost(j, req, bound), j),
                     )
-                    self.migrate_slot(i, slot, dst)
-                    page_copied += 1
+                    res = self.migrate_slot(i, slot, dst)
+                    if res == "page_copy":
+                        page_copied += 1
+                    else:                     # integrity-rejected payload
+                        integrity_fb += 1
                     continue
             # hard kill, or no survivor can host the pages right now
             if bound:
@@ -882,13 +1238,14 @@ class Fleet:
             self._lost_preemptions += req.preemptions
             req.preemptions = 0
             req.client = None
-            if kind == "drain":
+            if kind in ("drain", "condemn"):
                 tgt_i = min(
-                    self.alive_replicas,
+                    self.healthy_replicas,
                     key=lambda j: (self._placement_cost(j, req, False), j),
                 )
             else:
                 tgt_i = self.dispatcher.choose(self, req)
+            self._grant_lease(req.rid, tgt_i)
             tgt = self.engines[tgt_i]
             if prefix:
                 tgt.adopt_resume(req, prefix)
@@ -898,7 +1255,8 @@ class Fleet:
         entry: Dict[str, Any] = {
             "kind": kind, "replica": i, "at_s": now, "applied_at_s": now,
             "recovered": len(displaced),
-            "page_copy": page_copied, "recompute": n_recompute,
+            "page_copy": page_copied,
+            "recompute": n_recompute + integrity_fb,
             "moved_queued": moved_queued,
         }
         self.fault_log.append(entry)
@@ -956,40 +1314,173 @@ class Fleet:
                     return False
                 # fleet-wide idle gap: survivors fast-forward to the arrival
                 nxt = self._central[0].arrival
-                if self._apply_due_faults(nxt):
+                if self._apply_due_faults(nxt) or self._apply_due_injections(nxt):
                     continue
                 for i in alive:
                     self.engines[i].advance_clock(nxt)
                 self._route_arrivals(nxt)
                 continue
             now = min(self.engines[i].clock for i in workers)
-            if self._apply_due_faults(now):
+            if self._apply_due_faults(now) or self._apply_due_injections(now):
                 continue                      # membership/queues changed
             # replicas without work have been idling in parallel — their
-            # clocks track fleet time so routed arrivals start at "now"
+            # clocks track fleet time so routed arrivals start at "now";
+            # the clock advance doubles as their passive liveness beat
+            # (hung replicas excluded: a stalled process stamps nothing)
             for i in alive:
                 if i not in workers:
                     self.engines[i].advance_clock(now)
+                    if self.monitor is not None and i not in self._hangs:
+                        self.monitor.beat(i, self.engines[i].clock)
             self._route_arrivals(now)
             if self.cfg.work_stealing:
                 self._try_steal()
             workers = [i for i in alive if self.engines[i].has_work()]
             i = min(workers, key=lambda j: (self.engines[j].clock, j))
+            if i in self._hangs:
+                # the hung replica would be next: it silently makes no
+                # progress, so fleet virtual time flows around it — jump its
+                # clock to the wake-up instant and let the other replicas'
+                # stages carry the clock (and the monitor's evidence)
+                # forward. No heartbeat is stamped: that IS the failure.
+                self.engines[i].advance_clock(self._hangs[i].until_s)
+                continue
+            n_stages = len(self.engines[i]._sv.trace.stages)
             status = self.engines[i].serve_step()
             if status == "idle":
                 raise RuntimeError(
                     f"replica {i} idle with pending work — fleet routing bug"
                 )
+            if self.monitor is not None:
+                self._health_beat(i, n_stages)
+                self._health_evaluate(now)
             self._note_recoveries(self.engines[i].clock)
             return True
 
-    def finish_serve(self) -> FleetReport:
-        if self._recovery_watch:
-            end = max(
-                (self.engines[i].clock for i in self.alive_replicas),
-                default=0.0,
+    # ------------------------------------------------------------------ #
+    # Health monitoring (heartbeats → suspicion → condemnation)          #
+    # ------------------------------------------------------------------ #
+    def _predicted_stage_s(self, i: int, st) -> Optional[float]:
+        """What replica ``i``'s OWN fitted cost model predicted the just-run
+        stage should have taken — the denominator of the gray-failure
+        slowdown signal. The model is the one FROZEN at serve start, not
+        the live profiler fit: the live fit keeps learning from measured
+        stages, so after one refit cycle it predicts the degraded speed and
+        the ratio collapses back to 1. None until the replica had fully
+        refit before the serve began: prior constants are paper-scale,
+        orders of magnitude off measured milliseconds, and a ratio against
+        them would flag every healthy replica as degraded (or mask a real
+        one)."""
+        cm = self._health_cms[i]
+        if cm is None:
+            return None
+        if st.kind is StageKind.PREFILL:
+            pred = cm.prefill_time(st.tokens)
+        elif st.kind is StageKind.DECODE:
+            pred = cm.fused_decode_time(len(st.busy), max(st.rounds, 1))
+        elif st.kind is StageKind.MIXED:
+            pred = cm.mixed_round_time(
+                max(st.tokens - st.chunk_tokens, 0), st.chunk_tokens
             )
+        else:
+            return None
+        return pred if pred > 0 else None
+
+    def _health_beat(self, i: int, n_stages_before: int) -> None:
+        """Stamp replica ``i``'s heartbeat after a ``serve_step``. A stage
+        boundary carries the stage's measured duration + the cost-model
+        prediction (feeding degraded detection); a step that only advanced
+        the clock (idle fast-forward) beats bare — liveness without
+        polluting the duration statistics."""
+        eng = self.engines[i]
+        stages = eng._sv.trace.stages
+        if len(stages) > n_stages_before:
+            st = stages[-1]
+            self.monitor.beat(
+                i, eng.clock,
+                duration_s=st.t_end - st.t_start,
+                predicted_s=self._predicted_stage_s(i, st),
+                # predictions come from the per-serve frozen model, so the
+                # version is constant for the whole serve (the monitor's
+                # rebaseline-on-version-change still guards unit callers
+                # that feed it a live, refitting model)
+                model_version=0,
+            )
+        else:
+            self.monitor.beat(i, eng.clock)
+
+    def _health_evaluate(self, now: float) -> None:
+        """Run the monitor's state machine at fleet time ``now``: condemn
+        (fence + evacuate) replicas it gives up on, then re-place work
+        queued on replicas it merely suspects."""
+        newly = self.monitor.evaluate(now, replicas=self.alive_replicas)
+        for i in newly:
+            self._condemn_replica(
+                i, now, reason=self.monitor.replicas[i].suspect_reason
+                or "silence"
+            )
+        self._redispatch_suspect_queues(now)
+
+    def _redispatch_suspect_queues(self, now: float) -> None:
+        """Per-request redispatch with deadline-aware backoff: work queued
+        (not yet started) on a SUSPECT replica is re-placed onto the
+        cheapest-completion healthy replica once the suspicion has stood
+        for ``redispatch_backoff_s`` — grace for a false suspicion to clear
+        without churning the queue — or immediately when waiting out the
+        backoff would already blow the request's TTFT deadline. In-flight
+        slots stay: they move (page-copy first) only at condemnation."""
+        hcfg = self.monitor.cfg
+        for i in self.alive_replicas:
+            if self.monitor.state(i) != SUSPECT:
+                continue
+            sched = self.engines[i]._sv.scheduler
+            if not sched.queued:
+                continue
+            since = self.monitor.replicas[i].suspect_since
+            if since is None:
+                since = now
+            targets = [
+                j for j in self.alive_replicas
+                if j != i and self.monitor.is_healthy(j)
+            ]
+            if not targets:
+                continue                      # nowhere trustworthy to go
+            for req in list(sched.queued):
+                waited_out = now >= since + hcfg.redispatch_backoff_s
+                deadline_pressed = (
+                    req.ttft_slo_s is not None
+                    and now + hcfg.redispatch_backoff_s
+                    >= req.arrival + req.ttft_slo_s - hcfg.deadline_slack_s
+                )
+                if not (waited_out or deadline_pressed):
+                    continue
+                sched.commit(None, req)      # pop from the suspect queue
+                j = min(
+                    targets,
+                    key=lambda k: (self._placement_cost(k, req, False), k),
+                )
+                self.engines[j]._sv.scheduler.push(req)
+                self._grant_lease(req.rid, j)
+                req.redispatches += 1
+                self.redispatch_events += 1
+                self.redispatch_log.append({
+                    "rid": req.rid, "from": i, "to": j, "at_s": now,
+                    "deadline": bool(deadline_pressed and not waited_out),
+                })
+
+    def finish_serve(self) -> FleetReport:
+        end = max(
+            (self.engines[i].clock for i in self.alive_replicas),
+            default=0.0,
+        )
+        if self._recovery_watch:
             self._note_recoveries(end)
+        # ghosts that never woke mid-serve (hang outlasted the workload, or
+        # the condemned replica was never hung at all) still replay at
+        # teardown: a zombie's timing must not decide whether the fence is
+        # exercised
+        for i in sorted(self._ghosts):
+            self._fire_ghost(i, end)
         traces = [
             eng.finish_serve(validate=not self._resumed)
             for eng in self.engines
@@ -1053,6 +1544,27 @@ class Fleet:
                     (e["recover_s"] for e in self.fault_log if "recover_s" in e),
                     default=0.0,
                 )
+            )
+        if self.monitor is not None:
+            report.meta["suspect_events"] = float(self.monitor.suspect_events)
+            report.meta["false_suspicions"] = float(
+                self.monitor.false_suspicions
+            )
+            report.meta["condemned_replicas"] = float(
+                self.monitor.condemned_events
+            )
+            report.meta["degraded_events"] = float(
+                self.monitor.degraded_events
+            )
+            report.meta["redispatch_events"] = float(self.redispatch_events)
+        if self.fenced_completions or self.fenced_exports:
+            report.meta["fenced_stale_completions"] = float(
+                self.fenced_completions
+            )
+            report.meta["fenced_stale_exports"] = float(self.fenced_exports)
+        if self.integrity_rejections:
+            report.meta["integrity_rejections"] = float(
+                self.integrity_rejections
             )
         if not self._resumed:
             report.validate()
@@ -1136,6 +1648,21 @@ class Fleet:
             # JSON string: survives np.asarray round-trips that flatten
             # checkpoint leaves (a list of dicts would not)
             "fault_log": json.dumps(self.fault_log),
+            # health + fencing state: a restored fleet must keep distrusting
+            # what it distrusted (SUSPECT must not wake up ALIVE) and keep
+            # fencing what it fenced (epochs, leases, the fenced-event log)
+            "epochs": np.asarray(self.epochs, dtype=np.int64),
+            "fenced_completions": int(self.fenced_completions),
+            "fenced_exports": int(self.fenced_exports),
+            "redispatch_events": int(self.redispatch_events),
+            "integrity_rejections": int(self.integrity_rejections),
+            "fenced_log": json.dumps(self.fenced_log),
+            "leases": json.dumps(
+                {str(rid): list(lease) for rid, lease in self._leases.items()}
+            ),
+            "health": (
+                self.monitor.state_dict() if self.monitor is not None else ""
+            ),
         }
 
     def load_state_dict(
@@ -1171,6 +1698,46 @@ class Fleet:
         self.fault_log = json.loads(raw_log)
         self._recovery_watch = []             # recover_s already stamped
         self._pricing_key = None
+        # health + fencing state (absent in pre-PR-8 checkpoints → defaults)
+        self.epochs = [
+            int(e)
+            for e in np.asarray(
+                state.get("epochs", [0] * self.cfg.n_replicas)
+            )
+        ]
+        self.fenced_completions = int(state.get("fenced_completions", 0))
+        self.fenced_exports = int(state.get("fenced_exports", 0))
+        self.redispatch_events = int(state.get("redispatch_events", 0))
+        self.integrity_rejections = int(state.get("integrity_rejections", 0))
+        raw_fenced = state.get("fenced_log", "[]")
+        if not isinstance(raw_fenced, str):
+            raw_fenced = str(np.asarray(raw_fenced))
+        self.fenced_log = json.loads(raw_fenced)
+        raw_leases = state.get("leases", "{}")
+        if not isinstance(raw_leases, str):
+            raw_leases = str(np.asarray(raw_leases))
+        self._leases = {
+            int(rid): tuple(lease)
+            for rid, lease in json.loads(raw_leases).items()
+        }
+        raw_health = state.get("health", "")
+        if not isinstance(raw_health, str):
+            raw_health = str(np.asarray(raw_health))
+        if raw_health:
+            if self.monitor is None:
+                raise ValueError(
+                    "checkpoint carries health-monitor state but this fleet "
+                    "was built without FleetConfig.health — construct the "
+                    "restoring Fleet with the same health config"
+                )
+            self.monitor.load_state_dict(raw_health)
+        # undeclared-injection state is per serve (like _pending_faults, it
+        # is not checkpointed): a restored fleet starts with a clean layer
+        self._hangs = {}
+        self._restores = []
+        self._ghosts = {}
+        self.injected_log = []
+        self.redispatch_log = []
         # steal_log entries are not checkpointed (steal_events is), and any
         # offline solve belongs to the pre-checkpoint serve — clear both so
         # a reused Fleet object cannot report stale metadata
@@ -1203,3 +1770,10 @@ class Fleet:
                     clients[slot].current = req
                     req.decoded = eng.slots.emitted[slot]
             eng.advance_clock(float(clocks[i]))
+        # freeze health-prediction models off the restored profiler fits
+        # (same rule as begin_serve: the resumed serve judges slowdowns
+        # against the model as-of-resume, never the live refitting one)
+        self._health_cms = [
+            eng.profiler.cost_model if eng.profiler.full_fits > 0 else None
+            for eng in self.engines
+        ]

@@ -19,6 +19,7 @@ uniformly.
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -28,6 +29,23 @@ import numpy as np
 from ..core.types import Request
 
 Tree = Any
+
+
+class PageIntegrityError(RuntimeError):
+    """A migrated KV payload failed its content checksum at import. The
+    destination pool is untouched when this raises — callers fall back to
+    recompute-on-resume (``Fleet.migrate_slot``) instead of continuing a
+    poisoned stream."""
+
+
+def page_checksum(k_pages: jax.Array, v_pages: jax.Array, kv_length: int) -> int:
+    """Content checksum of a page-copy payload: CRC32 over the K and V
+    payload bytes plus the valid-KV length. Computed at ``export_pages``
+    and verified at ``import_pages`` — the cost is one host copy of a
+    payload that is being copied across pools anyway."""
+    h = zlib.crc32(np.ascontiguousarray(np.asarray(k_pages)).tobytes())
+    h = zlib.crc32(np.ascontiguousarray(np.asarray(v_pages)).tobytes(), h)
+    return zlib.crc32(str(int(kv_length)).encode(), h)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -298,14 +316,20 @@ class PagedSlotManager:
         self.cache["length"] = self.cache["length"].at[slot].set(0)
 
     # -- page-copy migration (live cross-engine slot transfer) ---------- #
-    def export_pages(self, slot: int) -> Tuple[List[int], jax.Array, jax.Array, int]:
+    def export_pages(
+        self, slot: int
+    ) -> Tuple[List[int], jax.Array, jax.Array, int, int]:
         """Gather ``slot``'s KV pages out of the pool for migration.
 
-        Returns ``(pages, k_payload, v_payload, kv_length)`` where the
-        payloads are ``(L, KV, n_pages, page_size, D)`` device arrays — a
-        plain gather along the pool's page axis, independent of *which*
-        page ids the destination pool will assign. The caller frees the
-        source pages afterwards (``release`` / ``free_pages_of``)."""
+        Returns ``(pages, k_payload, v_payload, kv_length, checksum)``
+        where the payloads are ``(L, KV, n_pages, page_size, D)`` device
+        arrays — a plain gather along the pool's page axis, independent of
+        *which* page ids the destination pool will assign — and
+        ``checksum`` is a CRC over the payload bytes (``page_checksum``),
+        computed at export time so a corrupted transfer is caught at
+        import instead of silently poisoning the resumed stream. The
+        caller frees the source pages afterwards (``release`` /
+        ``free_pages_of``)."""
         pages = list(self.tables[slot])
         if not pages:
             raise RuntimeError(f"slot {slot} holds no pages to export")
@@ -313,18 +337,36 @@ class PagedSlotManager:
         k = jnp.take(self.cache["k"], idx, axis=2)
         v = jnp.take(self.cache["v"], idx, axis=2)
         length = int(np.asarray(self.cache["length"][slot]))
-        return pages, k, v, length
+        return pages, k, v, length, page_checksum(k, v, length)
 
     def import_pages(
-        self, slot: int, k_pages: jax.Array, v_pages: jax.Array, kv_length: int
+        self,
+        slot: int,
+        k_pages: jax.Array,
+        v_pages: jax.Array,
+        kv_length: int,
+        checksum: Optional[int] = None,
     ) -> List[int]:
         """Land exported KV payloads in freshly allocated pages of THIS
         pool: allocate, scatter, point ``slot``'s block table at the new
         pages, and restore its valid-KV length. The page ids differ from
         the source's — only the block-table indirection has to agree, which
-        is the whole point of the paged layout. Returns the new pages."""
+        is the whole point of the paged layout. Returns the new pages.
+
+        When ``checksum`` is given, the received payload is re-hashed and
+        verified BEFORE any pool state changes; a mismatch raises
+        ``PageIntegrityError`` with the pool untouched, so the caller can
+        fall back to recompute-on-resume rather than continue a poisoned
+        stream."""
         if self.tables[slot]:
             raise RuntimeError(f"slot {slot} already holds pages")
+        if checksum is not None:
+            got = page_checksum(k_pages, v_pages, kv_length)
+            if got != checksum:
+                raise PageIntegrityError(
+                    f"slot {slot}: KV payload checksum {got:#010x} != "
+                    f"exported {checksum:#010x} — migration payload corrupt"
+                )
         n = int(k_pages.shape[2])
         pages = self.allocator.allocate(n)
         idx = jnp.asarray(pages, jnp.int32)

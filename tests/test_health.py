@@ -1,0 +1,637 @@
+"""Failure detection without an oracle: heartbeat/suspicion monitoring unit
+tests, hang and gray-degrade chaos served exactly-once through epoch fencing,
+zombie wake-up fencing, deadline-aware redispatch, KV checksum bit-flip
+rejection, and health/epoch checkpoint round-trips."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import CostModel, LagrangianPolicy, Request
+from repro.models.layers import init_params
+from repro.models.transformer import TransformerLM
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.fleet import (
+    HEALTH_SUSPECT_PENALTY,
+    FaultPlan,
+    Fleet,
+    FleetConfig,
+    ReplicaFault,
+)
+from repro.serving.health import (
+    ALIVE,
+    CONDEMNED,
+    SUSPECT,
+    HealthConfig,
+    ReplicaHealthMonitor,
+)
+from repro.serving.kv_slots import PageIntegrityError
+from repro.serving.sampler import greedy
+
+CFG = ArchConfig(
+    name="demo", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256,
+)
+CM = CostModel(level_caps=(32, 64, 128))
+ENGINE_CFG = dict(
+    n_slots=2, max_len=64, prefill_seq_buckets=(32,),
+    kv_layout="paged", page_size=16, prefill_chunk=16,
+    decode_horizon=1, mixed_schedule=False,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = TransformerLM(CFG)
+    params = init_params(jax.random.key(0), model.param_defs())
+    return model, params
+
+
+def _fleet(model, params, engine_kw=None, health=True, **fc_kw):
+    fc_kw.setdefault("n_replicas", 2)
+    fc_kw.setdefault("assign", "round_robin")
+    fc_kw.setdefault("dispatch", "round_robin")
+    fc_kw.setdefault("work_stealing", False)
+    if isinstance(health, HealthConfig):
+        fc_kw["health"] = health
+    elif health and "health" not in fc_kw:
+        fc_kw["health"] = HealthConfig()
+    return Fleet(
+        model, params, EngineConfig(**{**ENGINE_CFG, **(engine_kw or {})}),
+        FleetConfig(**fc_kw), cost_model=CM, sampler=greedy,
+    )
+
+
+def _assert_no_leaks(fleet):
+    for eng in fleet.engines:
+        assert eng.slots.allocator.num_used == 0, "orphaned pages"
+        eng.slots.allocator.check_consistency()
+        eng.slots.check_block_table_mirror()
+
+
+def _requests():
+    return [
+        Request(rid=0, n_prefill=10, n_decode=16),
+        Request(rid=1, n_prefill=8, n_decode=16),
+        Request(rid=2, n_prefill=12, n_decode=12),
+        Request(rid=3, n_prefill=8, n_decode=12),
+    ]
+
+
+def _calib_requests():
+    # prefill totals differ from _requests() so the per-replica profilers
+    # see >= 2 distinct prefill sizes and can reach their first FULL refit
+    # (each replica batches all its offline prompts into one prefill stage)
+    return [Request(rid=90 + i, n_prefill=4, n_decode=8) for i in range(4)]
+
+
+def _serve_fitted_reference(fleet):
+    """Warm + calibrate until every replica has a full cost-model fit, then
+    serve once more for the fitted reference streams."""
+    fleet.serve(_calib_requests(), LagrangianPolicy)
+    fleet.serve(_requests(), LagrangianPolicy)
+    assert all(e.profiler.full_fits > 0 for e in fleet.engines)
+    rep = fleet.serve(_requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in fleet.generated.items()}
+    return rep, ref_gen
+
+
+# --------------------------------------------------------------------------- #
+# Monitor unit tests (no model, no fleet)                                     #
+# --------------------------------------------------------------------------- #
+def _beaten_monitor(cfg=None, cadence=0.01, n=10):
+    mon = ReplicaHealthMonitor(2, cfg or HealthConfig())
+    for k in range(n):
+        mon.beat(0, k * cadence)
+        mon.beat(1, k * cadence)
+    return mon
+
+
+def test_silence_escalates_suspect_then_condemned():
+    mon = _beaten_monitor()
+    t0 = 9 * 0.01
+    assert mon.evaluate(t0 + 0.01) == []          # one normal gap: quiet
+    assert mon.state(0) == ALIVE
+    # silence grows while replica 1 keeps beating: 0 crosses the suspect
+    # sigma first, the condemn sigma later — and is returned exactly once
+    newly = []
+    t = t0
+    while not newly and t < t0 + 10.0:
+        t += 0.01
+        mon.beat(1, t)
+        newly = mon.evaluate(t)
+    assert newly == [0]
+    assert mon.state(0) == CONDEMNED
+    assert mon.state(1) == ALIVE
+    assert mon.suspect_events == 1 and mon.condemned_events == 1
+    # already condemned: never returned again, beats are ignored
+    assert mon.evaluate(t + 1.0, replicas=[0]) == []
+    mon.beat(0, t + 1.0)
+    assert mon.state(0) == CONDEMNED
+    states = [tr["state"] for tr in mon.transitions if tr["replica"] == 0]
+    assert states == [SUSPECT, CONDEMNED]
+
+
+def test_condemnation_gated_on_warmup_beats():
+    cfg = HealthConfig(warmup_beats=4)
+    mon = ReplicaHealthMonitor(1, cfg)
+    mon.beat(0, 0.0)                              # 1 beat < warmup
+    mon.evaluate(100.0)
+    assert mon.state(0) == SUSPECT                # may suspect...
+    assert mon.condemned_events == 0              # ...but never condemn
+
+
+def test_beat_clears_suspicion_and_counts_false_positive():
+    mon = _beaten_monitor()
+    t = 9 * 0.01
+    while mon.state(0) != SUSPECT:
+        t += 0.01
+        mon.beat(1, t)
+        mon.evaluate(t)
+    assert mon.state(0) != CONDEMNED
+    mon.beat(0, t)                                # it was merely slow
+    assert mon.state(0) == ALIVE
+    assert mon.false_suspicions == 1
+    assert mon.replicas[0].suspect_since is None
+
+
+def test_fixed_detector_scores_silence_against_timeout():
+    cfg = HealthConfig(
+        detector="fixed", fixed_timeout_s=0.1, condemn_factor=2.0,
+        warmup_beats=1,
+    )
+    mon = ReplicaHealthMonitor(1, cfg)
+    mon.beat(0, 0.0)
+    assert mon.suspicion(0, 0.05) == pytest.approx(0.5)
+    mon.evaluate(0.05)
+    assert mon.state(0) == ALIVE
+    mon.evaluate(0.11)                            # silence > timeout
+    assert mon.state(0) == SUSPECT
+    mon.evaluate(0.21)                            # silence > 2x timeout
+    assert mon.state(0) == CONDEMNED
+
+
+def test_same_instant_beats_do_not_collapse_gap_stats():
+    mon = ReplicaHealthMonitor(1, HealthConfig())
+    mon.beat(0, 0.0)
+    for _ in range(50):
+        mon.beat(0, 0.01)                         # idle re-assertions
+    assert mon.replicas[0].gaps == [0.01]
+    # the learned cadence is still 0.01, so a normal-cadence step later is
+    # not suspicious (zero gaps would have shrunk mean+spread toward 0)
+    assert mon.evaluate(0.02) == []
+    assert mon.state(0) == ALIVE
+
+
+def test_degraded_flagged_and_recovers():
+    cfg = HealthConfig(baseline_beats=4, degraded_window=4)
+    mon = ReplicaHealthMonitor(1, cfg)
+    t = 0.0
+    for _ in range(cfg.baseline_beats):           # healthy baseline ~1.0
+        t += 0.01
+        mon.beat(0, t, duration_s=0.01, predicted_s=0.01)
+    assert mon.replicas[0].slowdown_baseline == pytest.approx(1.0)
+    for _ in range(cfg.degraded_window):          # then everything x4
+        t += 0.04
+        mon.beat(0, t, duration_s=0.04, predicted_s=0.01)
+    assert mon.replicas[0].degraded
+    assert mon.state(0) == SUSPECT
+    assert mon.replicas[0].suspect_reason == "degraded"
+    assert mon.degraded_events == 1
+    assert not mon.is_healthy(0)
+    for _ in range(cfg.degraded_window):          # recovers to x1
+        t += 0.01
+        mon.beat(0, t, duration_s=0.01, predicted_s=0.01)
+    assert not mon.replicas[0].degraded
+    assert mon.state(0) == ALIVE
+    assert mon.false_suspicions == 1
+
+
+def test_degraded_needs_full_window_not_one_spike():
+    cfg = HealthConfig(baseline_beats=4, degraded_window=4)
+    mon = ReplicaHealthMonitor(1, cfg)
+    t = 0.0
+    for _ in range(cfg.baseline_beats):
+        t += 0.01
+        mon.beat(0, t, duration_s=0.01, predicted_s=0.01)
+    # a single 50x spike (first-hit compile, host jitter) must not flag
+    mon.beat(0, t + 0.5, duration_s=0.5, predicted_s=0.01)
+    t += 0.5
+    for _ in range(3):
+        t += 0.01
+        mon.beat(0, t, duration_s=0.01, predicted_s=0.01)
+    assert not mon.replicas[0].degraded
+    assert mon.state(0) == ALIVE
+
+
+def test_model_version_change_recaptures_baseline():
+    cfg = HealthConfig(baseline_beats=4, degraded_window=4)
+    mon = ReplicaHealthMonitor(1, cfg)
+    t = 0.0
+    for _ in range(cfg.baseline_beats):
+        t += 0.01
+        mon.beat(0, t, duration_s=0.01, predicted_s=0.01, model_version=0)
+    assert mon.replicas[0].slowdown_baseline == pytest.approx(1.0)
+    # the cost model refit: the same measured durations now price 4x against
+    # the new fit — without rebaselining this would be a false degrade flag
+    for _ in range(cfg.baseline_beats + cfg.degraded_window):
+        t += 0.01
+        mon.beat(0, t, duration_s=0.04, predicted_s=0.01, model_version=1)
+    assert mon.replicas[0].slowdown_baseline == pytest.approx(4.0)
+    assert not mon.replicas[0].degraded
+    assert mon.state(0) == ALIVE
+
+
+def test_health_config_validation():
+    with pytest.raises(ValueError):
+        HealthConfig(detector="psychic")
+    with pytest.raises(ValueError):
+        HealthConfig(suspect_sigma=8.0, condemn_sigma=8.0)
+    with pytest.raises(ValueError):
+        HealthConfig(fixed_timeout_s=0.0)
+    with pytest.raises(ValueError):
+        HealthConfig(degraded_factor=1.0)
+
+
+def test_monitor_state_dict_round_trips_suspicion():
+    mon = _beaten_monitor()
+    t = 9 * 0.01
+    while mon.state(0) != SUSPECT:
+        t += 0.01
+        mon.beat(1, t)
+        mon.evaluate(t)
+    blob = mon.state_dict()
+    mon2 = ReplicaHealthMonitor(2, HealthConfig())
+    mon2.load_state_dict(blob)
+    assert mon2.state(0) == SUSPECT               # NOT reset to ALIVE
+    assert mon2.replicas[0].suspect_since == mon.replicas[0].suspect_since
+    assert mon2.replicas[0].gaps == mon.replicas[0].gaps
+    assert mon2.suspect_events == mon.suspect_events
+    assert mon2.transitions == mon.transitions
+    with pytest.raises(ValueError):
+        ReplicaHealthMonitor(3, HealthConfig()).load_state_dict(blob)
+
+
+def test_hang_fault_validation():
+    with pytest.raises(ValueError):
+        ReplicaFault(replica=0, at_s=1.0, kind="hang")          # no until_s
+    with pytest.raises(ValueError):
+        ReplicaFault(replica=0, at_s=1.0, kind="hang", until_s=0.5)
+    with pytest.raises(ValueError):
+        ReplicaFault(replica=0, at_s=1.0, kind="degrade", speed_factor=0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Fencing + dispatch-eligibility units (fleet, no serving steps needed)       #
+# --------------------------------------------------------------------------- #
+def test_deliver_completion_fences_stale_claims(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    fleet.begin_serve(_requests(), LagrangianPolicy)
+    rid = 0
+    holder, epoch = fleet._leases[rid]
+    # stale epoch: the replica was fenced since this claim was minted
+    assert not fleet.deliver_completion(holder, epoch + 1, rid, [7], 0.0)
+    # lease mismatch: another replica claims a request it never held
+    other = 1 - holder
+    assert not fleet.deliver_completion(
+        other, fleet.epochs[other], rid, [7], 0.0
+    )
+    assert fleet.fenced_completions == 2
+    reasons = [e["reason"] for e in fleet.fenced_log]
+    assert any("stale epoch" in r for r in reasons)
+    assert any("lease mismatch" in r for r in reasons)
+    # the genuine holder under the current epoch is accepted
+    assert fleet.deliver_completion(holder, epoch, rid, [7, 8], 0.0)
+    assert fleet.engines[holder].generated[rid] == [7, 8]
+    # dead replicas are fenced regardless of epoch
+    fleet._dead.add(holder)
+    assert not fleet.deliver_completion(holder, epoch, rid, [9], 0.0)
+    assert fleet.fenced_log[-1]["reason"] == "replica dead"
+
+
+def test_suspect_replica_priced_out_of_dispatch(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    assert fleet.health_penalties() == [1.0, 1.0]
+    fleet.monitor._suspect(0, 0.0, "silence")
+    assert fleet.dispatchable_replicas == [1]
+    assert fleet.health_penalties() == [HEALTH_SUSPECT_PENALTY, 1.0]
+    # both suspect: work still has to land somewhere
+    fleet.monitor._suspect(1, 0.0, "silence")
+    assert fleet.dispatchable_replicas == [0, 1]
+    # no monitor: no penalties, everything dispatchable
+    bare = _fleet(model, params, health=False)
+    assert bare.health_penalties() is None
+    assert bare.dispatchable_replicas == [0, 1]
+
+
+def test_redispatch_waits_backoff_unless_deadline_pressed(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(
+        model, params,
+        health=HealthConfig(redispatch_backoff_s=0.05),
+    )
+    reqs = _requests()
+    reqs[0].ttft_slo_s = 0.01                     # r0's first request: tight
+    fleet.begin_serve(reqs, LagrangianPolicy)
+    q0 = fleet.engines[0]._sv.scheduler
+    n0 = len(q0.queued)
+    assert n0 > 0
+    fleet.monitor._suspect(0, 0.0, "silence")
+    # before the backoff: only the deadline-pressed request moves
+    fleet._redispatch_suspect_queues(0.0)
+    assert len(q0.queued) == n0 - 1
+    assert fleet.redispatch_events == 1
+    assert fleet.redispatch_log[0] == {
+        "rid": 0, "from": 0, "to": 1, "at_s": 0.0, "deadline": True,
+    }
+    assert fleet._leases[0] == (1, 0)
+    assert reqs[0].redispatches == 1
+    # backoff elapsed: the rest of the queue drains to the healthy replica
+    fleet._redispatch_suspect_queues(0.06)
+    assert len(q0.queued) == 0
+    assert all(e["to"] == 1 for e in fleet.redispatch_log)
+    assert all(
+        fleet._leases[e["rid"]] == (1, 0) for e in fleet.redispatch_log
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Tentpole: mid-serve hang detected without an oracle, served exactly once   #
+# --------------------------------------------------------------------------- #
+def test_hang_detected_condemned_and_served_exactly_once(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    rep, ref_gen = _serve_fitted_reference(fleet)
+    mk = rep.makespan
+
+    # replica 0 silently stops mid-serve and never resumes within the serve;
+    # the fleet is NOT told (injected_log is chaos ground truth, fault_log
+    # stays oracle-free for this kind)
+    plan = FaultPlan([ReplicaFault(
+        replica=0, at_s=0.3 * mk, kind="hang", until_s=50.0 * mk,
+    )])
+    rep2 = fleet.serve(_requests(), LagrangianPolicy, fault_plan=plan)
+
+    assert fleet.monitor.state(0) == CONDEMNED
+    assert rep2.meta["condemned_replicas"] == 1.0
+    assert fleet.epochs[0] == 1                   # fenced before evacuation
+    # the ghost (flushed at finish_serve) replayed its stale claims and the
+    # fence discarded every one
+    assert rep2.meta["fenced_stale_completions"] > 0
+    assert all(e["epoch"] == 0 for e in fleet.fenced_log)
+    # exactly-once: every request served, streams bit-identical to the
+    # no-fault serve (the Fleet.generated merge raises on any double-serve)
+    assert {r: list(t) for r, t in fleet.generated.items()} == ref_gen
+    # detection latency is bounded: condemned within the serve, well before
+    # the hang would have resumed
+    condemned_at = next(
+        tr["at_s"] for tr in fleet.monitor.transitions
+        if tr["state"] == CONDEMNED
+    )
+    assert 0.3 * mk < condemned_at < 10.0 * mk
+    _assert_no_leaks(fleet)
+
+
+def test_zombie_wakeup_after_condemnation_is_fenced(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    rep, ref_gen = _serve_fitted_reference(fleet)
+    mk = rep.makespan
+
+    # the hang RESUMES before the serve ends: the condemned replica wakes as
+    # a zombie and replays the in-flight work it held — every delivery must
+    # hit the fence, none may land in a second replica's output
+    plan = FaultPlan([ReplicaFault(
+        replica=0, at_s=0.3 * mk, kind="hang", until_s=0.9 * mk,
+    )])
+    rep2 = fleet.serve(_requests(), LagrangianPolicy, fault_plan=plan)
+
+    assert rep2.meta["condemned_replicas"] == 1.0
+    assert rep2.meta["fenced_stale_completions"] > 0
+    kinds = [e["kind"] for e in fleet.injected_log]
+    assert kinds.count("hang") == 1 and kinds.count("hang_end") == 1
+    # zero double-served tokens: bit-identical streams, one claim per rid
+    assert {r: list(t) for r, t in fleet.generated.items()} == ref_gen
+    fenced_rids = {e["rid"] for e in fleet.fenced_log}
+    assert fenced_rids                            # the ghost really replayed
+    _assert_no_leaks(fleet)
+
+
+def test_degrade_x4_flagged_while_progressing(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    rep, ref_gen = _serve_fitted_reference(fleet)
+    mk = rep.makespan
+
+    # x4-slow gray failure (speed_factor scales virtual time: 0.25 = x4
+    # duration), applied mid-serve, fleet not told
+    plan = FaultPlan([ReplicaFault(
+        replica=0, at_s=0.3 * mk, kind="degrade", speed_factor=0.25,
+    )])
+    rep2 = fleet.serve(_requests(), LagrangianPolicy, fault_plan=plan)
+
+    assert rep2.meta["degraded_events"] >= 1.0
+    assert fleet.monitor.replicas[0].suspect_reason == "degraded"
+    assert fleet.monitor.state(0) == SUSPECT      # flagged, NOT condemned
+    assert rep2.meta["condemned_replicas"] == 0.0
+    # the degraded replica kept progressing: streams still bit-identical
+    assert {r: list(t) for r, t in fleet.generated.items()} == ref_gen
+    # the survivor was never flagged
+    assert fleet.monitor.replicas[1].state == ALIVE
+    assert rep2.meta["false_suspicions"] == 0.0
+    _assert_no_leaks(fleet)
+
+
+def test_clean_serve_has_no_false_positives(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    rep, _ = _serve_fitted_reference(fleet)
+    assert rep.meta["suspect_events"] == 0.0
+    assert rep.meta["false_suspicions"] == 0.0
+    assert rep.meta["degraded_events"] == 0.0
+    assert rep.meta["condemned_replicas"] == 0.0
+    assert "fenced_stale_completions" not in rep.meta
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: KV page-integrity checksums reject a bit-flipped migration       #
+# --------------------------------------------------------------------------- #
+def _run_until_bound_slot(fleet, replica):
+    """Step until ``replica`` has a decode-bound slot; return the slot."""
+    while fleet.step():
+        eng = fleet.engines[replica]
+        for slot in list(eng.slots.active_slots):
+            if eng.slots.emitted[slot] >= 2:
+                return slot
+    raise AssertionError("no bound slot materialized")
+
+
+def test_bitflip_checksum_rejected_then_recompute_fallback(model_and_params):
+    model, params = model_and_params
+
+    def requests():
+        # three requests: replica 1 keeps a free slot to import into
+        return _requests()[:3]
+
+    base = _fleet(model, params)
+    base.serve(requests(), LagrangianPolicy)      # warm
+    base.serve(requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in base.generated.items()}
+
+    # engine-level: a flipped payload bit fails the CRC at import, with the
+    # destination pool untouched
+    fleet = _fleet(model, params)
+    fleet.begin_serve(requests(), LagrangianPolicy)
+    slot = _run_until_bound_slot(fleet, 0)
+    ckpt = fleet.engines[0].export_slot(slot)
+    k = np.ascontiguousarray(np.asarray(ckpt.k_pages)).copy()
+    k.view(np.uint8).flat[0] ^= 1                 # literally one bit
+    corrupt = dataclasses.replace(ckpt, k_pages=k)
+    dst = fleet.engines[1]
+    used_before = dst.slots.allocator.num_used
+    with pytest.raises(PageIntegrityError):
+        dst.import_slot(corrupt)
+    assert dst.slots.allocator.num_used == used_before
+    dst.slots.allocator.check_consistency()
+    # the UNcorrupted checkpoint still imports cleanly afterwards
+    dst.import_slot(ckpt)
+    while fleet.step():
+        pass
+    fleet.finish_serve()
+
+    # fleet-level: migrate_slot falls back to recompute-on-resume when the
+    # payload is corrupted in flight, and the stream stays bit-identical
+    fleet2 = _fleet(model, params)
+    fleet2.begin_serve(requests(), LagrangianPolicy)
+    slot = _run_until_bound_slot(fleet2, 0)
+    orig_import = Engine.import_slot
+
+    def corrupting_import(self, ckpt):
+        flipped = np.ascontiguousarray(np.asarray(ckpt.k_pages)).copy()
+        flipped.view(np.uint8).flat[0] ^= 1
+        return orig_import(self, dataclasses.replace(ckpt, k_pages=flipped))
+
+    Engine.import_slot = corrupting_import
+    try:
+        res = fleet2.migrate_slot(0, slot, 1)
+    finally:
+        Engine.import_slot = orig_import
+    assert res == "recompute"
+    assert fleet2.integrity_rejections == 1
+    assert fleet2.migration_log[-1]["integrity_rejected"] == 1
+    while fleet2.step():
+        pass
+    rep = fleet2.finish_serve()
+    assert rep.meta["integrity_rejections"] == 1.0
+    assert {r: list(t) for r, t in fleet2.generated.items()} == ref_gen
+    _assert_no_leaks(fleet2)
+
+
+def test_stale_epoch_export_refused(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    fleet.begin_serve(_requests(), LagrangianPolicy)
+    slot = _run_until_bound_slot(fleet, 0)
+    # an exporter fenced mid-flight: its epoch-stamped export is discarded
+    # before any pages move
+    assert fleet.migrate_slot(0, slot, 1, src_epoch=fleet.epochs[0] - 1) \
+        is False
+    assert fleet.fenced_exports == 1
+    assert fleet.fenced_log[-1]["kind"] == "export"
+    # the slot is still live on the source and the serve completes
+    assert fleet.engines[0].slots.request_of[slot] is not None
+    while fleet.step():
+        pass
+    fleet.finish_serve()
+    _assert_no_leaks(fleet)
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: fleet checkpoints round-trip health + epoch state                #
+# --------------------------------------------------------------------------- #
+def test_fleet_checkpoint_round_trips_health_and_epochs(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    fleet.begin_serve(_requests(), LagrangianPolicy)
+    for _ in range(4):
+        fleet.step()
+    now = max(e.clock for e in fleet.engines)
+    # a live suspicion + one fenced claim, then checkpoint mid-serve
+    fleet.monitor._suspect(0, now, "silence")
+    assert not fleet.deliver_completion(1, 99, 1, [5], now)
+    state = jax.tree_util.tree_map(np.asarray, fleet.state_dict())
+    pre = {rid: list(t) for rid, t in fleet.generated.items()}
+
+    fleet2 = _fleet(model, params)
+    fleet2.load_state_dict(state, {r.rid: r for r in _requests()})
+    # the regression: a restored fleet must NOT wake the suspect up ALIVE
+    assert fleet2.monitor.state(0) == SUSPECT
+    assert fleet2.monitor.replicas[0].suspect_since == pytest.approx(now)
+    assert fleet2.epochs == fleet.epochs
+    assert fleet2.fenced_completions == 1
+    assert fleet2.fenced_log == fleet.fenced_log
+    assert fleet2._leases == fleet._leases
+    while fleet2.step():
+        pass
+    fleet2.finish_serve()
+    post = fleet2.generated
+    served = {
+        rid for rid in range(4) if pre.get(rid) or post.get(rid)
+    }
+    assert served == {0, 1, 2, 3}
+    _assert_no_leaks(fleet2)
+
+    # restoring health state into a fleet built WITHOUT a monitor must fail
+    # loudly, not silently drop the suspicion
+    bare = _fleet(model, params, health=False)
+    with pytest.raises(ValueError):
+        bare.load_state_dict(state, {r.rid: r for r in _requests()})
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: fault-timing boundaries                                          #
+# --------------------------------------------------------------------------- #
+def test_fault_at_exactly_current_clock_fires(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    fleet.serve(_requests(), LagrangianPolicy)    # warm
+    fleet.serve(_requests(), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in fleet.generated.items()}
+    # at_s == the fleet clock at serve start (0.0): due on the very first
+    # step, not skipped by an open-interval comparison
+    plan = FaultPlan([ReplicaFault(
+        replica=0, at_s=0.0, kind="hang", until_s=1e-6,
+    )])
+    fleet.serve(_requests(), LagrangianPolicy, fault_plan=plan)
+    kinds = [e["kind"] for e in fleet.injected_log]
+    assert kinds == ["hang", "hang_end"]
+    assert fleet.injected_log[0]["applied_at_s"] == 0.0
+    # the blip resumed before detection: nothing condemned, streams intact
+    assert fleet.monitor.condemned_events == 0
+    assert {r: list(t) for r, t in fleet.generated.items()} == ref_gen
+
+
+def test_two_faults_same_instant_apply_in_stable_order(model_and_params):
+    model, params = model_and_params
+    fleet = _fleet(model, params)
+    fleet.serve(_requests(), LagrangianPolicy)    # warm
+    # two degrades on the same replica at the same instant: applied in plan
+    # order (FaultPlan's sort is stable on the (at_s, replica) tie)
+    plan = FaultPlan([
+        ReplicaFault(replica=0, at_s=0.0, kind="degrade", speed_factor=0.5),
+        ReplicaFault(replica=0, at_s=0.0, kind="degrade", speed_factor=0.25),
+    ])
+    fleet.serve(_requests(), LagrangianPolicy, fault_plan=plan)
+    degrades = [e for e in fleet.injected_log if e["kind"] == "degrade"]
+    assert [e["speed_factor"] for e in degrades] == [0.5, 0.125]
+    assert fleet.engines[0].speed_factor == pytest.approx(0.125)
+    # and across replicas the tie breaks by replica index
+    plan2 = FaultPlan([
+        ReplicaFault(replica=1, at_s=0.5, kind="degrade", speed_factor=0.5),
+        ReplicaFault(replica=0, at_s=0.5, kind="degrade", speed_factor=0.5),
+    ])
+    assert [f.replica for f in plan2.faults] == [0, 1]

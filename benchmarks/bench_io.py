@@ -117,11 +117,20 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
         "migrated_pages_out": float(eng.migrated_pages_out),
         "migrations_in": float(eng.migrations_in),
         "migrations_out": float(eng.migrations_out),
+        # prefix-cache accounting: prompt tokens served from cached KV pages
+        # instead of being recomputed, as a count and as a fraction of the
+        # workload's total prompt tokens (0.0 when the cache is off)
+        "cache_hit_tokens": float(eng.cache_hit_tokens),
+        "cached_token_rate": (
+            eng.cache_hit_tokens
+            / max(sum(r.n_prefill for r in trace.requests), 1)
+        ),
     }
     m.update(decode_latency_percentiles(trace))
     if eng.cfg.kv_layout == "paged":
         m["peak_kv_bytes"] = eng.slots.peak_kv_bytes()
         m["kv_capacity_bytes"] = eng.slots.kv_bytes_capacity()
+        m["shared_pages_peak"] = float(eng.slots.shared_pages_peak)
     else:
         cap = eng.slots.cache["k"].nbytes + eng.slots.cache["v"].nbytes
         m["peak_kv_bytes"] = cap

@@ -11,6 +11,12 @@ wall-clock magnitudes are reported, never asserted):
     bit-identical to the fault-free serve; a hard kill at the same instant
     must re-pay the full generated prefix (recomputed tokens > 0). The
     gate: page-copy strictly beats recompute on tokens re-paid.
+  * **cache drain** — the same drain instant with the prefix cache on, so
+    the drained replica's slots sit on refcount-shared pages: completion
+    must stay exactly-once with zero recompute and streams bit-identical
+    both to the fault-free *cached* serve and to the cache-off serve, and
+    every replica must end refcount-clean (pages in use == index holds,
+    clearing the index empties the pool).
   * **rebalance** — in-flight rebalancing: a long request decoding on a
     4x-slow replica with the fast replica drained. Queued-only stealing
     has nothing to take; extending the steal gate to RUNNING slots
@@ -79,18 +85,19 @@ def _model_and_params(cfg):
     return model, params
 
 
-def _engine_cfg(cfg, n_slots, max_len):
+def _engine_cfg(cfg, n_slots, max_len, **engine_kw):
     from repro.serving.engine import EngineConfig
 
     return EngineConfig(
         n_slots=n_slots, max_len=max_len,
         prefill_seq_buckets=cfg["seq_buckets"], kv_layout="paged",
         page_size=cfg["page_size"], prefill_chunk=cfg["prefill_chunk"],
-        decode_horizon=1, mixed_schedule=False,
+        decode_horizon=1, mixed_schedule=False, **engine_kw,
     )
 
 
-def _fleet(cfg, model, params, n_slots, max_len, specs=None, **fc_kw):
+def _fleet(cfg, model, params, n_slots, max_len, specs=None, engine_kw=None,
+           **fc_kw):
     from repro.core import CostModel
     from repro.serving.fleet import Fleet, FleetConfig
 
@@ -99,7 +106,7 @@ def _fleet(cfg, model, params, n_slots, max_len, specs=None, **fc_kw):
     fc_kw.setdefault("dispatch", "round_robin")
     fc_kw.setdefault("work_stealing", False)
     return Fleet(
-        model, params, _engine_cfg(cfg, n_slots, max_len),
+        model, params, _engine_cfg(cfg, n_slots, max_len, **(engine_kw or {})),
         FleetConfig(**fc_kw),
         cost_model=CostModel(level_caps=cfg["level_caps"]),
         replica_specs=specs,
@@ -116,6 +123,31 @@ def _check_consistency(fleet):
             raise AssertionError(
                 f"replica {i}: {eng.slots.allocator.num_used} orphaned "
                 f"pages after serve"
+            )
+
+
+def _check_cache_consistency(fleet):
+    """The cache-enabled variant: after a serve the prefix index legitimately
+    holds pages, so 'no orphans' becomes 'every allocated page is an index
+    hold, refcounts agree, and dropping the index empties the pool'. The
+    index is cleared as the final step, so a fleet checked here starts the
+    next serve cold."""
+    for i, eng in enumerate(fleet.engines):
+        eng.slots.allocator.check_consistency()
+        eng.slots.check_block_table_mirror()
+        eng.slots.check_refcounts()
+        held = len(eng.slots.prefix_index.held_pages())
+        used = eng.slots.allocator.num_used
+        if used != held:
+            raise AssertionError(
+                f"replica {i}: {used} pages in use but {held} cache holds "
+                f"after serve (leaked pages)"
+            )
+        eng.slots.prefix_index.clear()
+        if eng.slots.allocator.num_used != 0:
+            raise AssertionError(
+                f"replica {i}: {eng.slots.allocator.num_used} pages still "
+                f"in use after clearing the prefix index"
             )
 
 
@@ -188,6 +220,79 @@ def run_drain_arm(cfg, model, params):
             **fleet_recovery_metrics(report),
         }
     return out
+
+
+# --------------------------------------------------------------------------- #
+# Arm 1b: drain with the prefix cache enabled (shared pages in flight)        #
+# --------------------------------------------------------------------------- #
+def _cache_requests(cfg):
+    from repro.core import Request
+
+    # round-robin assign puts evens on replica 0, odds on replica 1; each
+    # parity class is one prefix group, so every replica serves prompts
+    # sharing a 24-token template (1 full page + a COW'd partial at
+    # page_size 16). Evens decode long so replica 0 is still mid-decode —
+    # holding SHARED pages — when replica 1 goes idle and the drain fires.
+    out = []
+    for rid in range(8):
+        long_side = rid % 2 == 0
+        out.append(Request(
+            rid=rid,
+            n_prefill=40 if long_side else 26,
+            n_decode=20 if long_side else 3,
+            prefix_group=rid % 2, prefix_len=24,
+        ))
+    return out
+
+
+def run_cache_arm(cfg, model, params):
+    from repro.core import LagrangianPolicy
+
+    from .bench_io import fleet_recovery_metrics
+
+    kw = dict(engine_kw=dict(prefix_cache=True))
+    # fault-free reference, cache ON (second serve runs against a warm index)
+    ref = _fleet(cfg, model, params, cfg["d_slots"], cfg["d_max_len"], **kw)
+    ref.warm_serving_shapes()
+    ref.serve(_cache_requests(cfg), LagrangianPolicy)      # warm
+    ref.serve(_cache_requests(cfg), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in ref.generated.items()}
+    ref_hits = sum(e.cache_hit_tokens for e in ref.engines)
+    _check_cache_consistency(ref)
+
+    # cache OFF on the same workload: caching must not change a single token
+    base = _fleet(cfg, model, params, cfg["d_slots"], cfg["d_max_len"])
+    base.serve(_cache_requests(cfg), LagrangianPolicy)     # warm
+    base.serve(_cache_requests(cfg), LagrangianPolicy)
+    off_parity = base.generated == ref_gen
+    _check_consistency(base)
+
+    # the event: drain replica 0 while its slots decode on shared pages
+    fleet = _fleet(cfg, model, params, cfg["d_slots"], cfg["d_max_len"], **kw)
+    fleet.serve(_cache_requests(cfg), LagrangianPolicy)    # warm
+    fleet.begin_serve(_cache_requests(cfg), LagrangianPolicy)
+    if not _step_until_survivor_idle(fleet, min_emitted=2):
+        raise SystemExit("cache drain: never reached the injection state")
+    fleet.drain_replica(0)
+    while fleet.step():
+        pass
+    report = fleet.finish_serve()
+    report.validate()
+    _check_cache_consistency(fleet)
+    done = [r for t in report.traces for r in t.requests]
+    return {
+        "n_requests": len(_cache_requests(cfg)),
+        "completed": len(done),
+        "exactly_once": len({r.rid for r in done}) == len(done),
+        "token_parity": fleet.generated == ref_gen,
+        "off_on_parity": off_parity,
+        "ref_cache_hit_tokens": float(ref_hits),
+        "drain_cache_hit_tokens": float(
+            sum(e.cache_hit_tokens for e in fleet.engines)
+        ),
+        "makespan_s": report.makespan,
+        **fleet_recovery_metrics(report),
+    }
 
 
 # --------------------------------------------------------------------------- #
@@ -487,6 +592,7 @@ def main() -> None:
 
     model, params = _model_and_params(cfg)
     drain = run_drain_arm(cfg, model, params)
+    cache = run_cache_arm(cfg, model, params)
     rebalance = run_rebalance_arm(cfg, model, params)
     chaos = run_chaos_arm(cfg, model, params, args.out, seeds, args.smoke)
 
@@ -498,6 +604,13 @@ def main() -> None:
         print(f"{mode}_page_copy,{int(m['recovered_page_copy'])},requests")
         print(f"{mode}_time_to_recover,{m['time_to_recover_s'] * 1e3:.2f},ms")
         print(f"{mode}_token_parity,{int(m['token_parity'])},bool")
+    print(f"cache_drain_completed,{cache['completed']},requests")
+    print(f"cache_drain_recomputed_tokens,"
+          f"{int(cache['recomputed_tokens'])},tokens")
+    print(f"cache_drain_hit_tokens,"
+          f"{int(cache['drain_cache_hit_tokens'])},tokens")
+    print(f"cache_drain_token_parity,{int(cache['token_parity'])},bool")
+    print(f"cache_off_on_parity,{int(cache['off_on_parity'])},bool")
     print(f"rebalance_queued_only_makespan,"
           f"{rebalance['queued_only']['makespan_s'] * 1e3:.2f},ms")
     print(f"rebalance_running_steal_makespan,"
@@ -517,7 +630,8 @@ def main() -> None:
     print(f"chaos_recompute,{chaos['recovered_recompute']},requests")
     print(f"chaos_migrations,{chaos['migration_events']},events")
 
-    payload = {"drain": drain, "rebalance": rebalance, "chaos": chaos}
+    payload = {"drain": drain, "cache": cache, "rebalance": rebalance,
+               "chaos": chaos}
     path = emit_json("chaos", payload, smoke=args.smoke, out_dir=args.out)
     print(f"# wrote {path}")
 
@@ -541,6 +655,31 @@ def main() -> None:
         raise SystemExit(
             "hard kill re-paid no tokens — the injection state had no "
             "generated prefix, the comparison is vacuous"
+        )
+    if cache["completed"] != cache["n_requests"] or not cache["exactly_once"]:
+        raise SystemExit(
+            f"cache drain: {cache['completed']}/{cache['n_requests']} "
+            f"completions"
+        )
+    if not cache["token_parity"]:
+        raise SystemExit(
+            "cache drain: streams diverged from the fault-free cached serve"
+        )
+    if not cache["off_on_parity"]:
+        raise SystemExit(
+            "cache arm: enabling the prefix cache changed token streams"
+        )
+    if cache["recomputed_tokens"] != 0:
+        raise SystemExit(
+            f"cache drain recomputed {int(cache['recomputed_tokens'])} "
+            f"tokens — migrating shared pages must re-pay nothing"
+        )
+    if cache["recovered_page_copy"] < 1:
+        raise SystemExit("cache drain never exercised the page-copy path")
+    if cache["ref_cache_hit_tokens"] <= 0 or cache["drain_cache_hit_tokens"] <= 0:
+        raise SystemExit(
+            "cache arm served zero tokens from the cache — the drain hit "
+            "no shared pages, the arm is vacuous"
         )
     if not rebalance["token_parity"]:
         raise SystemExit("rebalance: migration changed token streams")

@@ -1,0 +1,267 @@
+"""Prefix caching end-to-end: KV reuse on the serving path and cache-aware
+pricing in the offline packer.
+
+Three arms, all hard-gated (a regression exits non-zero):
+
+  * reuse — the same Zipf-skewed shared-prefix workload served with the
+    prefix cache off vs on. Gates: bit-identical token streams (caching is
+    an optimization, not a model change), strictly fewer *computed* prefill
+    tokens (computed + cached must equal the baseline's computed — pages
+    are reused, work is not dropped), and strictly better mean TTFT and
+    makespan (skipped chunk rounds are real time, not bookkeeping).
+  * pricing — a warm cache plus a prompt mix where nominal prompt length
+    misleads: hot-group requests carry long prompts that are almost fully
+    cached, a cold request carries a slightly shorter but fully uncached
+    prompt. Cache-blind LPT pairs the cold prompt with a hot one (it prices
+    nominal tokens); cache-aware pricing isolates it. Gate: at exact
+    nominal-token parity, the aware assignment's true makespan (priced by
+    uncached work) is strictly better.
+  * hygiene — after the cached serve every page still allocated is a cache
+    hold (refcounts consistent), and clearing the index returns the pool
+    to exactly zero pages in use. Leaked or double-freed pages fail here.
+
+Run: PYTHONPATH=src python -m benchmarks.prefix_cache [--smoke] [--out DIR]
+Prints ``name,value,unit`` CSV and writes BENCH_prefix_cache.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (
+    CostModel,
+    GlobalQueueScheduler,
+    PrefillFirstPolicy,
+    Request,
+    build_clients,
+)
+from repro.core.offline import request_weights, solve_offline
+from repro.data import WorkloadSpec, shared_prefix_workload
+
+from .bench_io import emit_json, run_serving_benchmark
+
+FULL = dict(
+    arch=ArchConfig(
+        name="bench", family="dense", n_layers=2, d_model=128, n_heads=8,
+        n_kv_heads=4, d_ff=256, vocab_size=512,
+    ),
+    # short replies: prefill dominates, which is the regime prefix reuse
+    # is supposed to win in (long shared templates, short completions)
+    spec=WorkloadSpec(
+        n_requests=32, input_mean=72, input_std=20, output_mean=8,
+        output_std=4, output_max=12, input_max=120,
+    ),
+    n_groups=3, prefix_mean=64.0, prefix_std=8.0,
+    n_slots=8, max_len=160, seq_buckets=(64, 128),
+    level_caps=(64, 128, 256), prefill_chunk=16, page_size=16, num_pages=192,
+    # pricing arm: hot prompts are nominally the longest but ~fully cached
+    price_hot=110, price_cold=100, price_prefix=96, price_decode=4,
+)
+SMOKE = dict(
+    arch=ArchConfig(
+        name="bench-smoke", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256,
+    ),
+    spec=WorkloadSpec(
+        n_requests=10, input_mean=48, input_std=12, output_mean=6,
+        output_std=3, output_max=10, input_max=80,
+    ),
+    n_groups=2, prefix_mean=32.0, prefix_std=4.0,
+    n_slots=4, max_len=112, seq_buckets=(32, 64),
+    level_caps=(32, 64, 128), prefill_chunk=16, page_size=16, num_pages=96,
+    price_hot=62, price_cold=56, price_prefix=48, price_decode=4,
+)
+
+
+def _serve_arm(cfg, prefix_cache: bool):
+    """One measured serve of the shared-prefix workload (cache on or off).
+
+    The harness's warm pass (seed 12) draws from the same prefix groups, so
+    the cache-on arm measures the steady state: a warm index, the regime a
+    long-running server actually sits in."""
+    wf = lambda seed: shared_prefix_workload(  # noqa: E731
+        cfg["spec"], seed=seed, n_groups=cfg["n_groups"],
+        prefix_mean=cfg["prefix_mean"], prefix_std=cfg["prefix_std"],
+        known_lengths=True,
+    )
+    eng, metrics, trace = run_serving_benchmark(
+        cfg, workload_factory=wf, kv_layout="paged",
+        page_size=cfg["page_size"], prefill_chunk=cfg["prefill_chunk"],
+        num_pages=cfg["num_pages"], prefix_cache=prefix_cache,
+    )
+    ttfts = [r.ttft for r in trace.requests if r.ttft is not None]
+    metrics["ttft_mean_s"] = float(np.mean(ttfts)) if ttfts else 0.0
+    metrics["makespan_s"] = trace.makespan
+    metrics["computed_prefill_tokens"] = float(trace.computed_prefill_tokens)
+    metrics["cached_prefill_tokens"] = float(trace.cached_prefill_tokens)
+    return eng, metrics, trace
+
+
+def run_reuse_arm(cfg):
+    eng_off, off, _ = _serve_arm(cfg, prefix_cache=False)
+    eng_on, on, _ = _serve_arm(cfg, prefix_cache=True)
+    parity = all(
+        eng_off.generated[r] == eng_on.generated[r] for r in eng_off.generated
+    ) and set(eng_off.generated) == set(eng_on.generated)
+    failures = []
+    if not parity:
+        failures.append("reuse: token streams differ between cache off/on")
+    if not on["computed_prefill_tokens"] < off["computed_prefill_tokens"]:
+        failures.append(
+            "reuse: cache did not reduce computed prefill tokens "
+            f"({on['computed_prefill_tokens']:.0f} vs "
+            f"{off['computed_prefill_tokens']:.0f})"
+        )
+    if (on["computed_prefill_tokens"] + on["cached_prefill_tokens"]
+            != off["computed_prefill_tokens"]):
+        failures.append(
+            "reuse: computed+cached != baseline computed (work was dropped "
+            "or double-counted, not reused)"
+        )
+    if not on["ttft_mean_s"] < off["ttft_mean_s"]:
+        failures.append(
+            f"reuse: mean TTFT not improved ({on['ttft_mean_s']:.4f}s vs "
+            f"{off['ttft_mean_s']:.4f}s)"
+        )
+    if not on["makespan_s"] < off["makespan_s"]:
+        failures.append(
+            f"reuse: makespan not improved ({on['makespan_s']:.4f}s vs "
+            f"{off['makespan_s']:.4f}s)"
+        )
+    if not on["cache_hit_tokens"] > 0:
+        failures.append("reuse: cache-on serve recorded zero hit tokens")
+    return eng_on, {"off": off, "on": on, "token_parity": parity}, failures
+
+
+def run_pricing_arm(cfg, eng):
+    """Cache-aware vs cache-blind offline pricing on a warm cache.
+
+    Two hot requests share a ``price_prefix``-token template the serve just
+    left resident; one cold request is slightly shorter but fully uncached.
+    Blind LPT orders by nominal length, so the cold prompt lands next to a
+    hot one; aware pricing sees the hot prompts are nearly free and gives
+    the cold prompt a client of its own. Both assignments cover the same
+    requests (exact nominal-token parity) — only the split differs."""
+    cm = CostModel(level_caps=cfg["level_caps"])
+    hot_group = 9000  # fresh group id: warmed here, not by the reuse arm
+    warm = Request(
+        rid=9000, n_prefill=cfg["price_hot"], n_decode=1, n_decode_est=1,
+        prefix_group=hot_group, prefix_len=cfg["price_prefix"],
+    )
+    eng.serve([warm], build_clients(cfg["n_slots"], [warm]),
+              GlobalQueueScheduler([warm]), PrefillFirstPolicy())
+    reqs = [
+        Request(rid=0, n_prefill=cfg["price_hot"], n_decode=cfg["price_decode"],
+                n_decode_est=cfg["price_decode"], prefix_group=hot_group,
+                prefix_len=cfg["price_prefix"]),
+        Request(rid=1, n_prefill=cfg["price_hot"], n_decode=cfg["price_decode"],
+                n_decode_est=cfg["price_decode"], prefix_group=hot_group,
+                prefix_len=cfg["price_prefix"]),
+        Request(rid=2, n_prefill=cfg["price_cold"], n_decode=cfg["price_decode"],
+                n_decode_est=cfg["price_decode"]),
+    ]
+    # price against the warm fleet state: probe each prompt's resident pages
+    for r in reqs:
+        r.cached_prefill = eng.slots.probe_prefix(eng._prompt_tokens(r))
+    aware = solve_offline(reqs, 2, cm, include_prefill=True, cache_aware=True)
+    blind = solve_offline(reqs, 2, cm, include_prefill=True, cache_aware=False)
+    # both splits are judged by the work that will actually run: the
+    # cache-aware (uncached-token) cost is ground truth for a warm cache
+    w_true = request_weights(reqs, cm, 2, include_prefill=True, cache_aware=True)
+    w_of = {r.rid: float(w) for r, w in zip(reqs, w_true)}
+    ms = lambda asn: max(  # noqa: E731
+        (sum(w_of[rid] for rid in client) for client in asn), default=0.0
+    )
+    aware_ms, blind_ms = float(ms(aware.assignment)), float(ms(blind.assignment))
+    failures = []
+    if [r.cached_prefill for r in reqs[:2]] != [cfg["price_prefix"]] * 2:
+        failures.append(
+            "pricing: warm probe missed the hot prefix "
+            f"(got {[r.cached_prefill for r in reqs]})"
+        )
+    if reqs[2].cached_prefill != 0:
+        failures.append("pricing: cold request probed as cached")
+    if not aware_ms < blind_ms:
+        failures.append(
+            f"pricing: cache-aware not strictly better ({aware_ms:.4f}s vs "
+            f"blind {blind_ms:.4f}s)"
+        )
+    metrics = {
+        "aware_makespan_s": aware_ms,
+        "blind_makespan_s": blind_ms,
+        "pricing_gain": (blind_ms - aware_ms) / blind_ms if blind_ms else 0.0,
+        "nominal_tokens": float(sum(r.n_prefill for r in reqs)),
+        "cached_tokens_probed": float(sum(r.cached_prefill for r in reqs)),
+    }
+    return metrics, failures
+
+
+def run_hygiene_arm(eng):
+    """The pool must end refcount-clean: every allocated page is an index
+    hold, and dropping the index frees everything."""
+    failures = []
+    try:
+        eng.slots.check_refcounts()
+    except AssertionError as e:  # pragma: no cover - gate path
+        failures.append(f"hygiene: refcount check failed ({e})")
+    held = len(eng.slots.prefix_index.held_pages())
+    used = eng.slots.allocator.num_used
+    if used != held:
+        failures.append(
+            f"hygiene: {used} pages in use but only {held} cache holds "
+            "(leaked pages)"
+        )
+    eng.slots.prefix_index.clear()
+    if eng.slots.allocator.num_used != 0:
+        failures.append(
+            f"hygiene: {eng.slots.allocator.num_used} pages still in use "
+            "after clearing the index"
+        )
+    return {
+        "end_pages_held": float(held),
+        "end_pages_used_after_clear": float(eng.slots.allocator.num_used),
+    }, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (seconds, not minutes)")
+    ap.add_argument("--out", default=None, help="directory for BENCH_*.json")
+    args = ap.parse_args()
+    cfg = SMOKE if args.smoke else FULL
+
+    eng_on, reuse, failures = run_reuse_arm(cfg)
+    pricing, f2 = run_pricing_arm(cfg, eng_on)
+    hygiene, f3 = run_hygiene_arm(eng_on)
+    failures += f2 + f3
+
+    print("name,value,unit")
+    for name in ("off", "on"):
+        m = reuse[name]
+        print(f"{name}_throughput,{m['throughput_tok_s']:.1f},tok/s")
+        print(f"{name}_computed_prefill,{m['computed_prefill_tokens']:.0f},tok")
+        print(f"{name}_cached_prefill,{m['cached_prefill_tokens']:.0f},tok")
+        print(f"{name}_ttft_mean,{m['ttft_mean_s'] * 1e3:.2f},ms")
+        print(f"{name}_makespan,{m['makespan_s']:.4f},s")
+    on = reuse["on"]
+    print(f"token_parity,{int(reuse['token_parity'])},bool")
+    print(f"cached_token_rate,{on['cached_token_rate']:.4f},frac")
+    print(f"shared_pages_peak,{on['shared_pages_peak']:.0f},pages")
+    print(f"aware_makespan,{pricing['aware_makespan_s']:.4f},s")
+    print(f"blind_makespan,{pricing['blind_makespan_s']:.4f},s")
+    print(f"pricing_gain,{pricing['pricing_gain']:.4f},frac")
+    print(f"end_pages_used_after_clear,"
+          f"{hygiene['end_pages_used_after_clear']:.0f},pages")
+
+    payload = {"reuse": reuse, "pricing": pricing, "hygiene": hygiene}
+    path = emit_json("prefix_cache", payload, smoke=args.smoke, out_dir=args.out)
+    print(f"# wrote {path}")
+    if failures:
+        raise SystemExit("prefix_cache gates failed:\n  " + "\n  ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -83,11 +83,17 @@ def ascii_gantt(
             f" goodput={trace.goodput:.1f} tok/s "
             f"slo={trace.slo_attainment * 100:.0f}%"
         )
+    cache_tag = ""
+    if trace.cached_prefill_tokens:
+        cache_tag = (
+            f" prefill={trace.computed_prefill_tokens}tok computed"
+            f"+{trace.cached_prefill_tokens}tok cached"
+        )
     out.write(
         f"Gantt [{trace.policy_name}] makespan={trace.makespan:.2f}s "
         f"util={trace.utilization * 100:.2f}% "
         f"busy-window util={trace.busy_window_utilization * 100:.2f}% "
-        f"speed={trace.generation_speed:.1f} tok/s{slo_tag}\n"
+        f"speed={trace.generation_speed:.1f} tok/s{slo_tag}{cache_tag}\n"
     )
     for cid in rows:
         line = "".join(
@@ -134,6 +140,9 @@ def fleet_ascii_gantt(
             f" migrations={int(report.meta['migration_events'])}"
             f"({int(report.meta.get('migrated_pages', 0))}pg)"
         )
+    cached_total = sum(t.cached_prefill_tokens for t in report.traces)
+    if cached_total:
+        fault_tag += f" cached_prefill={cached_total}tok"
     out.write(
         f"Fleet Gantt [{report.policy_name}] replicas={report.n_replicas} "
         f"makespan={span:.2f}s util={report.utilization * 100:.2f}%"

@@ -79,6 +79,7 @@ def replica_request_weight(
     cost_model: CostModel,
     slots_per_replica: int,
     remaining_decode: Optional[int] = None,
+    cached_prefill: Optional[int] = None,
 ) -> float:
     """Request ``req``'s estimated service time on one replica: prefill
     plus client wall-clock decode completion at that replica's slot count,
@@ -87,12 +88,21 @@ def replica_request_weight(
     ``least_load`` dispatch load, and the steal gate all call this one
     function, so the solve and the online layer can never silently
     diverge. ``remaining_decode`` overrides the decode estimate for
-    partially-served requests (dispatch load accounting)."""
+    partially-served requests (dispatch load accounting).
+
+    ``cached_prefill`` is how many of the request's prompt tokens THIS
+    replica's prefix cache would supply (warm-state probe): the prefill
+    term prices only the uncached remainder, so a replica that already
+    holds a request's shared prefix genuinely bids lower than a cold one.
+    Defaults to ``req.cached_prefill`` (0 for cache-less fleets — the
+    historical pricing, unchanged)."""
     decode = (
         int(req.n_decode_est or req.n_decode)
         if remaining_decode is None else max(remaining_decode, 0)
     )
-    return cost_model.prefill_time(req.n_prefill) + (
+    cached = req.cached_prefill if cached_prefill is None else cached_prefill
+    uncached = max(req.n_prefill - max(cached, 0), 0)
+    return cost_model.prefill_time(uncached) + (
         cost_model.estimated_decode_completion(decode, slots_per_replica)
     )
 
@@ -119,6 +129,7 @@ def hetero_weights(
     cost_models: Sequence[CostModel],
     slots_per_replica: int,
     replica_penalties: Optional[Sequence[float]] = None,
+    cached_tokens: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """The R||Cmax weight matrix ``T[i, j]``: request ``i``'s estimated
     service time on replica ``j`` (``replica_request_weight`` evaluated
@@ -127,19 +138,39 @@ def hetero_weights(
     the health layer prices SUSPECT replicas out of the offline solve by
     inflating their columns, rather than deleting them — the solver's
     shape stays R-wide and a penalized replica still takes work if every
-    alternative is worse."""
+    alternative is worse.
+
+    ``cached_tokens`` — an ``(n_requests, n_replicas)`` matrix of prompt
+    tokens each replica's warm prefix cache would supply — makes the
+    prefill term per-(request, replica): a replica already holding a
+    request's shared prefix bids its uncached remainder only, so cache
+    affinity flows into the R||Cmax solve instead of being a hot-path
+    accident. None (the default) prices ``Request.cached_prefill``
+    uniformly — 0 for cache-less fleets, the historical matrix."""
     n_i, n_j = len(requests), len(cost_models)
     if replica_penalties is not None and len(replica_penalties) != n_j:
         raise ValueError(
             f"{len(replica_penalties)} penalties for {n_j} replicas"
         )
+    if cached_tokens is not None:
+        cached_tokens = np.asarray(cached_tokens)
+        if cached_tokens.shape != (n_i, n_j):
+            raise ValueError(
+                f"cached_tokens shape {cached_tokens.shape} != ({n_i}, {n_j})"
+            )
     t = np.zeros((n_i, n_j), dtype=np.float64)
     for j, cm in enumerate(cost_models):
         pen = 1.0 if replica_penalties is None else float(replica_penalties[j])
         if pen < 1.0:
             raise ValueError("replica penalties must be >= 1.0")
         for i, r in enumerate(requests):
-            t[i, j] = pen * replica_request_weight(r, cm, slots_per_replica)
+            t[i, j] = pen * replica_request_weight(
+                r, cm, slots_per_replica,
+                cached_prefill=(
+                    None if cached_tokens is None
+                    else int(cached_tokens[i, j])
+                ),
+            )
     return t
 
 

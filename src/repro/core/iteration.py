@@ -46,10 +46,22 @@ class CandidateBatch:
     requests: List[Request]
     client_ids: List[int]
     chunk_tokens: Optional[int] = None
+    # Prompt tokens across the batch the prefix cache will supply (the
+    # engine probes its index when building the candidate; 0 with no cache
+    # or under the cache-blind pricing ablation). Cached tokens are never
+    # computed, so policies pricing outstanding prefill work must charge
+    # ``uncached_prefill_tokens``, not the nominal prompt lengths.
+    cached_tokens: int = 0
 
     @property
     def total_prefill_tokens(self) -> int:
         return sum(r.n_prefill for r in self.requests)
+
+    @property
+    def uncached_prefill_tokens(self) -> int:
+        """Outstanding prefill tokens that actually need compute — nominal
+        prompt lengths minus what the prefix cache covers."""
+        return max(self.total_prefill_tokens - self.cached_tokens, 0)
 
     @property
     def effective_prefill_tokens(self) -> int:
@@ -215,8 +227,11 @@ class IterationPolicy:
             tp = cost_model.prefill_per_token
         if t0 <= 0:
             t0 = cost_model.decode_round_time(snap.n_active)
+        # P = outstanding prefill tokens that will actually flow through
+        # mixed rounds: cache-adopted tokens never run, so pricing them
+        # would buy decode-latency inflation for work that does not exist
         p_out = max(
-            snap.candidate.total_prefill_tokens,
+            snap.candidate.uncached_prefill_tokens,
             snap.candidate.effective_prefill_tokens,
         )
         if t0 <= 0 or tp <= 0:

@@ -59,7 +59,11 @@ class OfflineResult:
 
 
 def request_weights(
-    requests: Sequence[Request], cost_model: CostModel, n_clients: int
+    requests: Sequence[Request],
+    cost_model: CostModel,
+    n_clients: int,
+    include_prefill: bool = False,
+    cache_aware: bool = True,
 ) -> np.ndarray:
     """T_i: estimated decode completion time per request (offline model §IV-B).
 
@@ -67,14 +71,25 @@ def request_weights(
     lengths stay unknown until execution, as in the paper. (The
     heterogeneous solver prices a different, prefill-inclusive quantity —
     see ``core.hetero.replica_request_weight``.)
-    """
-    return np.asarray(
-        [
-            cost_model.estimated_decode_completion(r.n_decode_est or r.n_decode, n_clients)
-            for r in requests
-        ],
-        dtype=np.float64,
-    )
+
+    ``include_prefill`` adds each request's prefill service time to its
+    weight — required when prompt lengths (and therefore prefill cost)
+    vary enough to dominate the packing. With ``cache_aware`` (the
+    default) the prefill term prices the request's *uncached* prompt
+    length (``Request.cached_prefill`` as probed against the warm fleet
+    state): a cache hit makes a nominally huge prompt nearly free, and a
+    packer that prices the nominal length balances work that will never
+    run. ``cache_aware=False`` is the hard-gated cache-blind ablation."""
+    out = []
+    for r in requests:
+        w = cost_model.estimated_decode_completion(
+            r.n_decode_est or r.n_decode, n_clients
+        )
+        if include_prefill:
+            p = r.uncached_prefill if cache_aware else r.n_prefill
+            w += cost_model.prefill_time(p)
+        out.append(w)
+    return np.asarray(out, dtype=np.float64)
 
 
 # internal alias kept for the pre-heterogeneous call sites below
@@ -246,17 +261,24 @@ def solve_offline(
     exact: bool = False,
     exact_time_limit_s: float = 60.0,
     local_search_rounds: int = 200,
+    include_prefill: bool = False,
+    cache_aware: bool = True,
 ) -> OfflineResult:
     """Solve the offline request-assignment model.
 
     Default path: LPT + local search (paper-scale in milliseconds). With
     ``exact=True`` also runs the MILP (keeps whichever is better) — this is
     the SCIP path in the paper, practical only at small scale.
+    ``include_prefill`` / ``cache_aware`` select the prefill-inclusive,
+    prefix-cache-aware pricing (see ``request_weights``).
     """
     if n_clients <= 0:
         raise ValueError("n_clients must be positive")
     t0 = time.perf_counter()
-    weights = _weights(requests, cost_model, n_clients)
+    weights = _weights(
+        requests, cost_model, n_clients,
+        include_prefill=include_prefill, cache_aware=cache_aware,
+    )
     rid_of = [r.rid for r in requests]
 
     assignment = lpt_assign(weights, n_clients)

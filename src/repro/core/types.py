@@ -61,6 +61,14 @@ class Request:
     # tokens of requests that met every SLO they declared (HyGen's metric).
     ttft_slo_s: Optional[float] = None
     tbt_slo_s: Optional[float] = None
+    # Shared-prefix identity: the first ``prefix_len`` prompt tokens are
+    # drawn from the group's stream instead of the request's own, so
+    # requests in the same group share a byte-identical prompt prefix the
+    # prefix cache can serve. Both are workload identity (like n_prefill),
+    # not execution bookkeeping — reset() leaves them alone and prompts
+    # stay reconstructible from the Request after migration or restore.
+    prefix_group: Optional[int] = None
+    prefix_len: int = 0
 
     # Execution bookkeeping (filled by simulator/engine).
     client: Optional[int] = None
@@ -82,12 +90,22 @@ class Request:
     # request never started on the suspect, so redispatch — unlike
     # preemption — changes no prefill accounting.
     redispatches: int = 0
+    # Prompt tokens served from the prefix cache at the last admission
+    # (pages adopted instead of recomputed). Execution bookkeeping for
+    # cache-aware pricing — every layer that prices prefill should charge
+    # ``uncached_prefill``, not the nominal prompt length.
+    cached_prefill: int = 0
 
     def __post_init__(self) -> None:
         if self.n_prefill <= 0:
             raise ValueError(f"request {self.rid}: n_prefill must be positive")
         if self.n_decode <= 0:
             raise ValueError(f"request {self.rid}: n_decode must be positive")
+        if not 0 <= self.prefix_len <= self.n_prefill:
+            raise ValueError(
+                f"request {self.rid}: prefix_len {self.prefix_len} outside "
+                f"[0, n_prefill={self.n_prefill}]"
+            )
         if self.n_decode_est is None:
             self.n_decode_est = self.n_decode
 
@@ -102,6 +120,12 @@ class Request:
     @property
     def remaining_decode(self) -> int:
         return self.n_decode - self.decoded
+
+    @property
+    def uncached_prefill(self) -> int:
+        """Prompt tokens that actually need compute given the last cache
+        probe/admission — what cache-aware pricing charges for prefill."""
+        return max(self.n_prefill - self.cached_prefill, 0)
 
     def _t_first(self) -> Optional[float]:
         # executors that predate first-token tracking (the simulator) only
@@ -158,6 +182,7 @@ class Request:
         self.t_first_token = None
         self.preemptions = 0
         self.redispatches = 0
+        self.cached_prefill = 0
 
 
 @dataclass
@@ -319,6 +344,25 @@ class ScheduleTrace:
         return self.busy_client_time / (window * self.num_clients)
 
     @property
+    def computed_prefill_tokens(self) -> int:
+        """Prefill tokens that actually ran through the model: PREFILL-stage
+        tokens plus the chunk share of MIXED stages. Cached (prefix-cache
+        adopted) tokens never enter a stage, so utilization accounting sees
+        only real work — the cached count is reported beside this
+        (``cached_prefill_tokens`` in meta / summary), never inside it."""
+        return sum(
+            s.tokens if s.kind is StageKind.PREFILL else s.chunk_tokens
+            for s in self.stages
+            if s.kind in (StageKind.PREFILL, StageKind.MIXED)
+        )
+
+    @property
+    def cached_prefill_tokens(self) -> int:
+        """Prompt tokens served from the prefix cache instead of computed
+        (engine-filled meta counter; 0 for executors without a cache)."""
+        return int(self.meta.get("cached_prefill_tokens", 0))
+
+    @property
     def total_generated_tokens(self) -> int:
         return sum(r.n_decode for r in self.requests)
 
@@ -408,6 +452,10 @@ class ScheduleTrace:
             "preemptions": self.preemption_count,
             "prefill_time_s": round(self.total_prefill_time, 4),
             "decode_time_s": round(self.total_decode_time, 4),
+            # cached vs computed prefill: cached tokens were adopted from
+            # the prefix cache, not processed — they are not "busy" work
+            "computed_prefill_tokens": self.computed_prefill_tokens,
+            "cached_prefill_tokens": self.cached_prefill_tokens,
             "max_decision_ms": round(max(self.decision_times_ms), 4)
             if self.decision_times_ms
             else 0.0,

@@ -95,6 +95,41 @@ def gsm8k_like_workload(
     return requests
 
 
+def shared_prefix_workload(
+    spec: WorkloadSpec = PAPER_WORKLOAD_SPEC,
+    seed: int = 0,
+    n_groups: int = 4,
+    prefix_mean: float = 48.0,
+    prefix_std: float = 12.0,
+    zipf_a: float = 1.5,
+    known_lengths: bool = False,
+) -> List[Request]:
+    """GSM8K-shaped requests whose prompts share per-group prefixes — the
+    system-prompt / few-shot-template workload prefix caching exists for.
+
+    Each request joins one of ``n_groups`` prefix groups, Zipf-skewed
+    (``zipf_a``) so a few hot templates dominate — the regime where a
+    content-addressed prefix cache pays. Group ``g`` owns a prefix of
+    ``clip(N(prefix_mean, prefix_std²))`` tokens (drawn once per group);
+    every member's prompt opens with it, and ``n_prefill`` is stretched to
+    at least prefix + 1 so at least one token is always unique per request.
+    The engine derives the actual token content from ``(prefix_group,
+    prefix_len, rid)`` alone, so the sharing survives migration/restore."""
+    rng = np.random.default_rng(seed)
+    requests = gsm8k_like_workload(spec, seed=seed, known_lengths=known_lengths)
+    plens = np.clip(
+        np.round(rng.normal(prefix_mean, prefix_std, size=n_groups)), 8, None
+    ).astype(int)
+    # Zipf over group ranks, folded into [0, n_groups)
+    groups = (rng.zipf(zipf_a, size=len(requests)) - 1) % n_groups
+    for r, g in zip(requests, groups):
+        r.prefix_group = int(g)
+        r.prefix_len = int(plens[g])
+        if r.n_prefill <= r.prefix_len:
+            r.n_prefill = r.prefix_len + 1
+    return requests
+
+
 def attach_slos(
     requests: List[Request],
     ttft_slo_s: Optional[float] = None,

@@ -168,6 +168,20 @@ class EngineConfig:
     # REPRO_DEBUG_INVARIANTS env var — the test suite turns it on globally
     # (tests/conftest.py), benchmarks leave it off.
     debug_invariants: Optional[bool] = None
+    # Prefix caching (paged layout only). True keeps a content-addressed
+    # index over completed prompts' FULL KV pages (chained page hashing, à
+    # la vLLM): a new prompt sharing a prefix with a cached one adopts the
+    # matching pages read-only (refcounted) and copy-on-writes the page
+    # holding its first divergent token, so chunked prefill starts at the
+    # first uncached token. The index holds one reference per published
+    # page; held pages are reclaimed LRU-leaf-first when the free list
+    # can't fund an allocation, so a warm cache never deadlocks admission.
+    prefix_cache: bool = False
+    # Price scheduling by UNCACHED prefill tokens (the work actually
+    # computed) instead of nominal prompt length. False is the cache-blind
+    # ablation: the cache still serves hits, but the Lagrangian prefill
+    # share and the offline packer see full prompt lengths.
+    cache_aware_pricing: bool = True
 
 
 def _bucket(x: int, buckets: Sequence[int]) -> int:
@@ -223,6 +237,7 @@ class _ChunkState:
     done: int = 0
     resume_emitted: int = 0               # >0 → recompute of a preemptee
     resume_pending: int = -1              # pending token to restore at bind
+    cached: int = 0                       # prompt tokens adopted from cache
 
     @property
     def total(self) -> int:
@@ -342,10 +357,16 @@ class Engine:
         if speed_factor <= 0:
             raise ValueError("speed_factor must be positive")
         self.speed_factor = float(speed_factor)
+        if config.prefix_cache and config.kv_layout != "paged":
+            raise ValueError(
+                "prefix_cache requires kv_layout='paged' — dense layout has "
+                "no page identity to share"
+            )
         if config.kv_layout == "paged":
             self.slots: Any = PagedSlotManager(
                 model, config.n_slots, config.max_len,
                 config.page_size, config.num_pages,
+                prefix_cache=config.prefix_cache,
             )
             self._chunk_jit = jax.jit(
                 lambda p, t, c, s, st, ln: model.prefill_chunk(p, t, c, s, st, ln),
@@ -414,6 +435,12 @@ class Engine:
         self.migrated_pages_out = 0
         self.migrations_in = 0
         self.migrations_out = 0
+        # Prefix-cache accounting: prompt tokens served from cached KV pages
+        # instead of being computed (adoption at admission).
+        self.cache_hit_tokens = 0
+        self._use_prefix_cache = (
+            config.kv_layout == "paged" and config.prefix_cache
+        )
         # Stage-boundary invariant checks (see EngineConfig.debug_invariants)
         self.debug_invariants = (
             config.debug_invariants
@@ -435,11 +462,26 @@ class Engine:
     # ------------------------------------------------------------------ #
     def _prompt_tokens(self, req: Request) -> np.ndarray:
         """Synthetic prompt tokens derived from the request id (demo data; a
-        production engine receives the tokenized prompt here)."""
+        production engine receives the tokenized prompt here).
+
+        Requests carrying a ``prefix_group`` share their first
+        ``prefix_len`` tokens — derived from the group id, not the rid — so
+        shared-prefix workloads (system prompts, few-shot templates) exist
+        at the token level and survive migration/restore: the prompt is
+        reconstructible from the ``Request`` alone on any replica."""
+        n = req.n_prefill
+        if req.prefix_group is not None and req.prefix_len > 0:
+            head_rng = np.random.default_rng(10_000_019 + req.prefix_group)
+            head = head_rng.integers(
+                1, self._vocab(), size=req.prefix_len
+            ).astype(np.int32)
+            tail_rng = np.random.default_rng(req.rid)
+            tail = tail_rng.integers(
+                1, self._vocab(), size=n - req.prefix_len
+            ).astype(np.int32)
+            return np.concatenate([head, tail])
         rng = np.random.default_rng(req.rid)
-        return rng.integers(
-            1, self._vocab(), size=req.n_prefill
-        ).astype(np.int32)
+        return rng.integers(1, self._vocab(), size=n).astype(np.int32)
 
     def _sample_first(self, logits, rids: Sequence[int]) -> np.ndarray:
         """Sample each prefill row's first token (token index 0 of its
@@ -567,7 +609,10 @@ class Engine:
         grab the exact pages whose absence would immediately force a
         preemption."""
         out = []
-        free = self.slots.allocator.num_free
+        # pages the prefix-cache index holds with no other owner count as
+        # headroom: the manager reclaims them LRU-leaf-first on demand, so a
+        # warm cache holding most of the pool never deadlocks admission
+        free = self.slots.allocator.num_free + self.slots.reclaimable_pages()
         if self.cfg.page_reserve != "upfront":
             free -= self._decode_growth_pages(1)
         blocked: set = set()
@@ -673,7 +718,12 @@ class Engine:
             active = self.slots.active_slots
             if not active:
                 return k
-            if self._decode_growth_pages(k) <= self.slots.allocator.num_free:
+            headroom = (
+                self.slots.allocator.num_free + self.slots.reclaimable_pages()
+            )
+            if self._decode_growth_pages(k) <= headroom:
+                # ensure_tokens reclaims index-held pages on demand, so
+                # eviction of live work stays the last resort
                 for s in active:
                     self.slots.ensure_tokens(s, self._growth_target(s, k))
                 return k
@@ -706,28 +756,42 @@ class Engine:
             prompt = self._prompt_tokens(req)
             resume_emitted = 0
             resume_pending = -1
+            resumed = False
             if req.rid in self._resume_rids:
                 self._resume_rids.discard(req.rid)
                 prefix = self.generated.get(req.rid, [])
                 if prefix:
+                    resumed = True
                     resume_emitted = len(prefix)
                     resume_pending = int(prefix[-1])
                     if len(prefix) > 1:
                         prompt = np.concatenate(
                             [prompt, np.asarray(prefix[:-1], np.int32)]
                         )
-                    # the whole re-prefilled span (prompt + prefix) is work
-                    # this request already paid for once — the cost page-copy
-                    # migration exists to avoid
-                    self.recomputed_tokens += len(prompt)
             if self.cfg.page_reserve == "upfront":
                 span = self._tokens_bound(req)
             else:
                 span = len(prompt)
-            self.slots.reserve(client.cid, span)
+            if self._use_prefix_cache:
+                # adopt cached full pages read-only (COW at the divergence
+                # page); chunked prefill starts at the first uncached token
+                cached = self.slots.reserve_with_prefix(
+                    client.cid, prompt, span
+                )
+            else:
+                self.slots.reserve(client.cid, span)
+                cached = 0
+            if resumed:
+                # the re-prefilled span (prompt + prefix) is work this
+                # request already paid for once — the cost page-copy
+                # migration exists to avoid; cache hits shrink it further
+                self.recomputed_tokens += len(prompt) - cached
+            req.cached_prefill = min(cached, req.n_prefill)
+            self.cache_hit_tokens += cached
             self._chunking[client.cid] = _ChunkState(
-                slot=client.cid, req=req, prompt=prompt,
+                slot=client.cid, req=req, prompt=prompt, done=cached,
                 resume_emitted=resume_emitted, resume_pending=resume_pending,
+                cached=cached,
             )
             req.client = client.cid
             req.prefill_bin = bin_index
@@ -775,6 +839,10 @@ class Engine:
             st.done += int(lens[i])
             if st.done >= st.total:
                 self.slots.bind(slot, st.req)
+                if self._use_prefix_cache:
+                    # publish the prompt's FULL pages (the partial last page
+                    # still takes decode writes and must stay private)
+                    self.slots.publish_prefix(slot, st.prompt)
                 if st.resume_emitted > 0:
                     # recompute complete: restore the pre-preemption stream
                     # state instead of sampling (bit-identical continuation)
@@ -916,6 +984,8 @@ class Engine:
             slot = st.slot
             if st.done >= st.total:
                 self.slots.bind(slot, st.req)
+                if self._use_prefix_cache:
+                    self.slots.publish_prefix(slot, st.prompt)
                 if st.resume_emitted > 0:
                     self.slots.emitted[slot] = st.resume_emitted
                     self.pending_token[slot] = st.resume_pending
@@ -1145,6 +1215,7 @@ class Engine:
         self.migrated_pages_out = 0
         self.migrations_in = 0
         self.migrations_out = 0
+        self.cache_hit_tokens = 0
         self._sv = _ServeSession(
             trace=trace, clients=clients, scheduler=request_scheduler,
             policy=iteration_policy, track_requests=track_requests,
@@ -1202,12 +1273,15 @@ class Engine:
     # Live migration by page-copy (fleet drain / rebalancing / recovery)  #
     # ------------------------------------------------------------------ #
     def _check_invariants(self) -> None:
-        """debug_invariants hook: allocator free-list/free-set consistency
-        plus the host↔device block-table mirror (paged layout only)."""
+        """debug_invariants hook: allocator free-list/free-set consistency,
+        the host↔device block-table mirror, and per-page refcount agreement
+        (block-table multiplicity + prefix-index holds) — paged layout
+        only."""
         if self.cfg.kv_layout != "paged":
             return
         self.slots.allocator.check_consistency()
         self.slots.check_block_table_mirror()
+        self.slots.check_refcounts()
 
     def _local_prefill_completions(self, rid: int) -> int:
         """Prefill completions for ``rid`` recorded in THIS session's trace
@@ -1231,7 +1305,10 @@ class Engine:
             return False
         if not any(s not in self._chunking for s in self.slots.free_slots):
             return False
-        free = self.slots.allocator.num_free - self._decode_growth_pages(1)
+        free = (
+            self.slots.allocator.num_free + self.slots.reclaimable_pages()
+            - self._decode_growth_pages(1)
+        )
         return n_pages <= free
 
     def slot_pages(self, slot: int) -> int:
@@ -1438,12 +1515,25 @@ class Engine:
                 # any in-flight prefills plus first chunks of new admissions
                 # (idle slots keep admitting while long prompts chunk)
                 cont = sorted(self._chunking)
+                cached_est = 0
+                if self._use_prefix_cache and cfg.cache_aware_pricing:
+                    # tokens of this candidate the cache will serve: known
+                    # exactly for in-flight prefills, probed (read-only) for
+                    # proposed admissions — so the Lagrangian share prices
+                    # the prefill work actually computed
+                    cached_est = sum(
+                        self._chunking[s].cached for s in cont
+                    ) + sum(
+                        self.slots.probe_prefix(self._prompt_tokens(r))
+                        for _, r in pairs
+                    )
                 candidate = CandidateBatch(
                     requests=[self._chunking[s].req for s in cont]
                     + [r for _, r in pairs],
                     client_ids=cont + [c.cid for c, _ in pairs],
                     chunk_tokens=self._next_chunk_tokens()
                     + sum(min(cfg.prefill_chunk, r.n_prefill) for _, r in pairs),
+                    cached_tokens=cached_est,
                 )
             else:
                 candidate = CandidateBatch(
@@ -1497,9 +1587,11 @@ class Engine:
                     self._commit_pairs(new_pairs)
                     sv.bin_index += 1
                     self._start_chunked_batch(new_pairs, sv.bin_index, t)
-                    plan.extend(
-                        (self._chunking[c.cid], n) for c, _, n in admitted
-                    )
+                    for c, _, n in admitted:
+                        st = self._chunking[c.cid]
+                        # a prefix-cache hit shrinks the first chunk below
+                        # the planned grant — clamp to what actually remains
+                        plan.append((st, min(n, st.remaining)))
                 if cfg.page_reserve != "upfront":
                     # fund every decode lane's next-round KV write, evicting
                     # victims if the pool exhausts — an evicted mid-chunk
@@ -1659,7 +1751,13 @@ class Engine:
             recomputed_tokens=self.recomputed_tokens,
             migrations_in=self.migrations_in,
             migrations_out=self.migrations_out,
+            cached_prefill_tokens=self.cache_hit_tokens,
         )
+        if self.cfg.kv_layout == "paged":
+            trace.meta.update(
+                shared_pages_peak=self.slots.shared_pages_peak,
+                cow_copies=self.slots.cow_copies,
+            )
         if validate:
             trace.validate()
         return trace
@@ -1697,11 +1795,13 @@ class Engine:
         chunk_done = np.zeros(self.cfg.n_slots, np.int32)
         chunk_resume = np.zeros(self.cfg.n_slots, np.int32)
         chunk_pending = np.full(self.cfg.n_slots, -1, np.int32)
+        chunk_cached = np.zeros(self.cfg.n_slots, np.int32)
         for slot, st in self._chunking.items():
             chunk_rid[slot] = st.req.rid
             chunk_done[slot] = st.done
             chunk_resume[slot] = st.resume_emitted
             chunk_pending[slot] = st.resume_pending
+            chunk_cached[slot] = st.cached
         return {
             "cache": jax.tree_util.tree_map(np.asarray, self.slots.cache),
             "request_of": [
@@ -1717,6 +1817,7 @@ class Engine:
             "chunk_done": chunk_done,
             "chunk_resume": chunk_resume,
             "chunk_pending": chunk_pending,
+            "chunk_cached": chunk_cached,
             # preempted-and-requeued rids awaiting recompute (their prefixes
             # live in ``generated``, which the fleet checkpoints separately)
             "resume_rids": np.asarray(sorted(self._resume_rids), np.int32),
@@ -1751,6 +1852,7 @@ class Engine:
         chunk_done = np.asarray(state.get("chunk_done", []))
         chunk_resume = np.asarray(state.get("chunk_resume", []))
         chunk_pending = np.asarray(state.get("chunk_pending", []))
+        chunk_cached = np.asarray(state.get("chunk_cached", []))
         for slot, rid in enumerate(chunk_rid):
             if rid >= 0:
                 req = requests_by_rid[int(rid)]
@@ -1769,6 +1871,7 @@ class Engine:
                     slot=slot, req=req, prompt=prompt,
                     done=int(chunk_done[slot]),
                     resume_emitted=re_cnt, resume_pending=re_pend,
+                    cached=int(chunk_cached[slot]) if chunk_cached.size else 0,
                 )
         if self.cfg.kv_layout == "paged":
             # the device block table is the durable page-ownership record

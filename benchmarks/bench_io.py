@@ -127,6 +127,14 @@ def engine_metrics(eng, trace, wall_s: float) -> Dict[str, float]:
         ),
     }
     m.update(decode_latency_percentiles(trace))
+    if getattr(eng, "obs", None) is not None:
+        # observability volume of the run (obs-enabled benches only): how
+        # many span events / audit records / capacity samples the serve
+        # emitted — tracked so instrumentation growth shows up in the
+        # artifact diff, not just in memory profiles
+        m["obs_span_events"] = float(len(eng.obs.spans.events))
+        m["obs_audit_records"] = float(len(eng.obs.audit.records))
+        m["obs_capacity_samples"] = float(len(eng.obs.capacity_samples))
     if eng.cfg.kv_layout == "paged":
         m["peak_kv_bytes"] = eng.slots.peak_kv_bytes()
         m["kv_capacity_bytes"] = eng.slots.kv_bytes_capacity()

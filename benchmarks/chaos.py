@@ -515,6 +515,7 @@ def run_chaos_arm(cfg, model, params, out_dir, seeds, smoke):
             failed.append(seed)
     wall = time.perf_counter() - t0
     if failed:
+        os.makedirs(out_dir or ".", exist_ok=True)
         path = os.path.join(out_dir or ".", "BENCH_chaos_journal.json")
         with open(path, "w") as fh:
             json.dump(journals, fh, indent=2)
@@ -560,6 +561,136 @@ def run_chaos_arm(cfg, model, params, out_dir, seeds, smoke):
     }
 
 
+# --------------------------------------------------------------------------- #
+# Arm 4: observability (Perfetto trace + capacity conservation + audit)       #
+# --------------------------------------------------------------------------- #
+def _obs_requests(cfg):
+    from repro.core import Request
+
+    # the chaos workload with half the requests staggered as online
+    # arrivals, so replica-dispatch decisions actually fire (and must all
+    # land in the audit log)
+    out = []
+    for rid in range(cfg["n_c"]):
+        n_pre = (cfg["c_prefill_long"] if rid % 3 == 2
+                 else cfg["c_prefill_short"])
+        out.append(Request(
+            rid=rid, n_prefill=n_pre,
+            n_decode=cfg["c_decode"] + 3 * (rid % 4),
+            arrival=0.0 if rid % 2 == 0 else 0.02 * rid,
+        ))
+    return out
+
+
+def run_obs_arm(cfg, model, params, out_dir):
+    """Observability gates on a seeded chaos serve:
+
+      * ``summary()`` back-compat — a fault-free serve with observability
+        on reports exactly the same summary keys (and the same token
+        streams) as the identical serve with it off;
+      * capacity conservation — every replica's attribution rows sum
+        EXACTLY to makespan x slots (``capacity_attribution`` hard-checks
+        the over-attribution side; the gate closes the under side too);
+      * audit completeness — every dispatch, steal, migration, and
+        condemnation the fleet executed has a matching audit/span record;
+      * the exported Chrome-trace JSON is schema-valid and non-trivial.
+    """
+    from repro.core import LagrangianPolicy
+    from repro.obs import Observation, capacity_attribution, write_trace
+    from repro.serving.fleet import FaultPlan, ReplicaFault
+    from repro.serving.health import HealthConfig
+
+    fc = dict(
+        n_replicas=cfg["n_replicas"], assign="lpt", dispatch="least_load",
+        work_stealing=True, health=HealthConfig(),
+    )
+    # fault-free reference, observability OFF
+    ref = _fleet(cfg, model, params, cfg["c_slots"], cfg["c_max_len"], **fc)
+    ref.warm_serving_shapes()
+    ref.serve(_obs_requests(cfg), LagrangianPolicy)        # warm
+    ref_report = ref.serve(_obs_requests(cfg), LagrangianPolicy)
+    ref_gen = {rid: list(t) for rid, t in ref.generated.items()}
+
+    # the identical fault-free serve, observability ON
+    obs0 = Observation()
+    quiet = _fleet(
+        cfg, model, params, cfg["c_slots"], cfg["c_max_len"],
+        engine_kw=dict(observe=obs0), **fc,
+    )
+    quiet_report = quiet.serve(_obs_requests(cfg), LagrangianPolicy)
+    from repro.obs import check_capacity_conservation
+
+    check_capacity_conservation(obs0)
+    summary_keys_equal = (
+        set(quiet_report.summary()) == set(ref_report.summary())
+    )
+    quiet_parity = quiet.generated == ref_gen
+
+    # the chaos serve: a drain mid-flight + a declared slowdown, recorded
+    obs = Observation()
+    fleet = _fleet(
+        cfg, model, params, cfg["c_slots"], cfg["c_max_len"],
+        engine_kw=dict(observe=obs), **fc,
+    )
+    plan = FaultPlan([
+        ReplicaFault(replica=1, at_s=0.35 * ref_report.makespan,
+                     kind="drain"),
+        ReplicaFault(replica=2, at_s=0.2 * ref_report.makespan,
+                     kind="slow", speed_factor=0.5),
+    ])
+    report = fleet.serve(_obs_requests(cfg), LagrangianPolicy,
+                         fault_plan=plan)
+    check_capacity_conservation(obs)
+    rows = capacity_attribution(obs)
+
+    n_online = sum(1 for r in _obs_requests(cfg) if r.arrival > 0.0)
+    audit = obs.audit.counts()
+    instants = [e for e in obs.spans.events if e.rid < 0]
+    n_steal_instants = sum(1 for e in instants if e.kind == "steal")
+    n_migr_instants = sum(1 for e in instants if e.kind == "migration")
+    n_fault_instants = sum(1 for e in instants if e.kind == "fault")
+
+    trace_path = os.path.join(out_dir or ".", "chaos_obs.trace.json")
+    write_trace(obs, trace_path)
+    with open(trace_path) as fh:
+        doc = json.load(fh)
+    events = doc.get("traceEvents", [])
+    schema_ok = bool(events) and all(
+        isinstance(e.get("name"), str) and e.get("ph") in ("X", "i", "M")
+        and ("ts" in e or e.get("ph") == "M")
+        for e in events
+    )
+
+    return {
+        "summary_keys_equal": summary_keys_equal,
+        "quiet_token_parity": quiet_parity,
+        "chaos_token_parity": fleet.generated == ref_gen,
+        "capacity_rows": len(rows),
+        "capacity_conserved": True,            # check_* raised otherwise
+        "capacity_total_s": sum(r["total"] for r in rows.values()),
+        "capacity_busy_s": sum(r["busy"] for r in rows.values()),
+        "n_online_arrivals": n_online,
+        "dispatch_audits": audit.get("dispatch", 0),
+        "dispatch_complete": audit.get("dispatch", 0) == n_online,
+        "steal_instants": n_steal_instants,
+        "steals_complete": n_steal_instants == len(fleet.steal_log),
+        "migration_instants": n_migr_instants,
+        "migrations_complete": n_migr_instants == fleet.migration_events,
+        "condemn_audits": audit.get("condemn", 0),
+        "condemns_complete": (
+            audit.get("condemn", 0) == fleet.monitor.condemned_events
+        ),
+        "fault_instants": n_fault_instants,
+        "placement_audits": audit.get("placement", 0),
+        "span_events": len(obs.spans.events),
+        "audit_records": len(obs.audit.records),
+        "trace_events": len(events),
+        "trace_schema_ok": schema_ok,
+        "trace_path": trace_path,
+        "makespan_s": report.makespan,
+    }
+
+
 def _parse_seeds(args, cfg):
     """Seed list: --seeds wins, then --n-seeds, then REPRO_CHAOS_SEEDS
     (a comma list or a bare count), then the config default."""
@@ -595,6 +726,7 @@ def main() -> None:
     cache = run_cache_arm(cfg, model, params)
     rebalance = run_rebalance_arm(cfg, model, params)
     chaos = run_chaos_arm(cfg, model, params, args.out, seeds, args.smoke)
+    obs = run_obs_arm(cfg, model, params, args.out)
 
     print("name,value,unit")
     for mode in ("drain", "hard_kill"):
@@ -629,9 +761,16 @@ def main() -> None:
     print(f"chaos_page_copy,{chaos['recovered_page_copy']},requests")
     print(f"chaos_recompute,{chaos['recovered_recompute']},requests")
     print(f"chaos_migrations,{chaos['migration_events']},events")
+    print(f"obs_summary_keys_equal,{int(obs['summary_keys_equal'])},bool")
+    print(f"obs_capacity_conserved,{int(obs['capacity_conserved'])},bool")
+    print(f"obs_dispatch_complete,{int(obs['dispatch_complete'])},bool")
+    print(f"obs_span_events,{obs['span_events']},events")
+    print(f"obs_audit_records,{obs['audit_records']},records")
+    print(f"obs_trace_events,{obs['trace_events']},events")
+    print(f"obs_trace_schema_ok,{int(obs['trace_schema_ok'])},bool")
 
     payload = {"drain": drain, "cache": cache, "rebalance": rebalance,
-               "chaos": chaos}
+               "chaos": chaos, "obs": obs}
     path = emit_json("chaos", payload, smoke=args.smoke, out_dir=args.out)
     print(f"# wrote {path}")
 
@@ -704,6 +843,27 @@ def main() -> None:
         raise SystemExit(
             f"only {n_injections} fault/injection events across "
             f"{len(seeds)} schedules — the harness is under-injecting"
+        )
+    # ---- observability gates -------------------------------------------- #
+    if not obs["summary_keys_equal"]:
+        raise SystemExit(
+            "obs arm: enabling observability changed the summary() key set"
+        )
+    if not (obs["quiet_token_parity"] and obs["chaos_token_parity"]):
+        raise SystemExit("obs arm: observability changed token streams")
+    for gate in ("dispatch_complete", "steals_complete",
+                 "migrations_complete", "condemns_complete"):
+        if not obs[gate]:
+            raise SystemExit(f"obs arm: audit incomplete ({gate})")
+    if obs["dispatch_audits"] < 1 or obs["fault_instants"] < 1:
+        raise SystemExit(
+            "obs arm vacuous: no dispatch decisions or fault instants "
+            "were recorded"
+        )
+    if not obs["trace_schema_ok"] or obs["trace_events"] < 10:
+        raise SystemExit(
+            f"obs arm: Perfetto export invalid or trivial "
+            f"({obs['trace_events']} events)"
         )
     print("# all chaos gates passed")
 

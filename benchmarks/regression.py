@@ -1,0 +1,191 @@
+"""Benchmark regression gate: diff fresh ``BENCH_*.json`` artifacts against
+the committed snapshots in ``benchmarks/baselines/``.
+
+Per-metric tolerance bands, not one global threshold:
+
+  * **exact class** — correctness flags and orderings (token parity,
+    exactly-once, ``*_complete`` / ``*_equal`` / ``*_ok`` / ``*_conserved``
+    observability gates, aware-beats-blind orderings). These must match the
+    baseline bit-for-bit and are compared even when the smoke flags differ
+    (a parity flag that holds on the full run must hold on the smoke run
+    too). Any mismatch fails the job.
+  * **wall-clock class** — ``wall_s``, ``*_tok_s``, latency percentiles,
+    decision times: machine-dependent, reported only, never gated.
+  * **banded class** — everything else numeric. Gated within a relative
+    tolerance band, but only when the fresh artifact and the baseline were
+    produced at the same scale (identical ``meta.smoke``): a smoke run's
+    counts legitimately differ from the committed full-run snapshot, so a
+    scale mismatch demotes the band to report-only.
+
+Keys present on one side only are reported (new metrics appear with every
+PR; that is the point of the trajectory) — except an exact-class key that
+*disappears* at matching scale, which fails: a deleted parity gate is a
+silenced alarm, not a neutral diff.
+
+Usage::
+
+    python -m benchmarks.regression --fresh bench-out [--baselines DIR]
+                                    [--tolerance 0.3]
+
+Exit code 0 when every gate holds, 1 otherwise. Stdlib only.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+_BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
+
+# substrings that put a metric name in the exact class
+_EXACT_TOKENS = (
+    "parity", "identical", "exactly_once", "all_passed", "ordering",
+    "beats", "conserved",
+)
+_EXACT_SUFFIXES = ("_complete", "_equal", "_ok", "_passed")
+
+# substrings that put a metric name in the wall-clock (report-only) class
+_WALL_TOKENS = (
+    "wall_s", "tok_s", "decision_ms", "_ms", "latency", "time_to_recover",
+    "post_event", "recover_s",
+)
+
+
+def classify(key: str) -> str:
+    """'exact' | 'wall' | 'banded' for a flattened metric key."""
+    leaf = key.rsplit(".", 1)[-1]
+    if any(t in leaf for t in _EXACT_TOKENS) or leaf.endswith(_EXACT_SUFFIXES):
+        return "exact"
+    if any(t in leaf for t in _WALL_TOKENS):
+        return "wall"
+    return "banded"
+
+
+def flatten(obj, prefix: str = "") -> Dict[str, object]:
+    """Nested metrics dict -> {'a.b.c': scalar-or-list} with dotted keys."""
+    out: Dict[str, object] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    else:
+        out[prefix[:-1]] = obj
+    return out
+
+
+def _eq(a, b) -> bool:
+    if isinstance(a, bool) or isinstance(b, bool):
+        return bool(a) == bool(b)
+    if isinstance(a, (int, float)) and isinstance(b, (int, float)):
+        return float(a) == float(b)
+    return a == b
+
+
+def _within_band(a, b, tol: float) -> bool:
+    if not (isinstance(a, (int, float)) and isinstance(b, (int, float))):
+        return a == b
+    a, b = float(a), float(b)
+    return abs(a - b) <= tol * max(abs(a), abs(b), 1.0)
+
+
+def diff_artifact(
+    fresh: dict, base: dict, tol: float
+) -> Tuple[List[str], List[str]]:
+    """(failures, notes) for one fresh/baseline artifact pair."""
+    failures: List[str] = []
+    notes: List[str] = []
+    same_scale = fresh.get("meta", {}).get("smoke") == base.get(
+        "meta", {}
+    ).get("smoke")
+    f = flatten(fresh.get("metrics", {}))
+    b = flatten(base.get("metrics", {}))
+    if not same_scale:
+        notes.append(
+            "scale mismatch (smoke flags differ): banded metrics report-only"
+        )
+    for key in sorted(set(f) | set(b)):
+        if key.rsplit(".", 1)[-1].endswith("_path"):
+            continue                    # machine-local paths, never compared
+        cls = classify(key)
+        if key not in b:
+            notes.append(f"new metric: {key} = {f[key]}")
+            continue
+        if key not in f:
+            if cls == "exact" and same_scale:
+                failures.append(f"exact-class metric removed: {key}")
+            else:
+                notes.append(f"metric gone from fresh run: {key}")
+            continue
+        fv, bv = f[key], b[key]
+        if cls == "exact":
+            if not _eq(fv, bv):
+                failures.append(f"exact mismatch: {key}: {bv} -> {fv}")
+        elif cls == "wall":
+            if isinstance(fv, (int, float)) and isinstance(bv, (int, float)):
+                if float(bv) != 0.0 and float(fv) != float(bv):
+                    notes.append(
+                        f"wall-clock: {key}: {bv} -> {fv} "
+                        f"({(float(fv) / float(bv) - 1) * 100:+.1f}%)"
+                    )
+        else:
+            if not _within_band(fv, bv, tol):
+                msg = f"banded drift (>{tol:.0%}): {key}: {bv} -> {fv}"
+                if same_scale:
+                    failures.append(msg)
+                else:
+                    notes.append(msg)
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the fresh BENCH_*.json artifacts")
+    ap.add_argument("--baselines", default=_BASELINES,
+                    help="committed snapshot directory")
+    ap.add_argument("--tolerance", type=float, default=0.3,
+                    help="relative band for same-scale numeric metrics")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print report-only notes, not just gates")
+    args = ap.parse_args(argv)
+
+    fresh_paths = sorted(glob.glob(os.path.join(args.fresh, "BENCH_*.json")))
+    if not fresh_paths:
+        print(f"regression: no BENCH_*.json under {args.fresh!r}", file=sys.stderr)
+        return 1
+
+    any_failures = False
+    compared = 0
+    for path in fresh_paths:
+        name = os.path.basename(path)
+        base_path = os.path.join(args.baselines, name)
+        if not os.path.exists(base_path):
+            print(f"{name}: no committed baseline — skipped (new benchmark?)")
+            continue
+        with open(path) as fh:
+            fresh = json.load(fh)
+        with open(base_path) as fh:
+            base = json.load(fh)
+        failures, notes = diff_artifact(fresh, base, args.tolerance)
+        compared += 1
+        status = "FAIL" if failures else "ok"
+        print(f"{name}: {status} "
+              f"({len(failures)} gate failures, {len(notes)} notes)")
+        for line in failures:
+            print(f"  FAIL {line}")
+        if args.verbose:
+            for line in notes:
+                print(f"  note {line}")
+        any_failures = any_failures or bool(failures)
+
+    if compared == 0:
+        print("regression: no artifact had a committed baseline", file=sys.stderr)
+        return 1
+    print("# regression gates " + ("FAILED" if any_failures else "passed"))
+    return 1 if any_failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

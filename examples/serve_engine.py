@@ -37,6 +37,14 @@ from repro.core.gantt import ascii_gantt
 from repro.data import WorkloadSpec, gsm8k_like_workload, shared_prefix_workload
 from repro.models.layers import init_params
 from repro.models.transformer import TransformerLM
+from repro.obs import (
+    Observation,
+    capacity_table,
+    check_capacity_conservation,
+    lifecycle_table,
+    perfetto_trace,
+    write_trace,
+)
 from repro.serving.engine import Engine, EngineConfig
 
 
@@ -133,6 +141,36 @@ def main():
         if cache_on:
             print(ascii_gantt(tr, width=90, max_clients=8))
     print(f"token streams identical across cache off/on: {gens[False] == gens[True]}")
+
+    # observability demo: the same mixed-step serve with an Observation
+    # attached — per-request lifecycle spans, the capacity-attribution
+    # rollup (every slot-second classified, rows summing exactly to
+    # makespan x slots), and a Perfetto trace for ui.perfetto.dev.
+    print("observability demo (hybrid-paged serve, observe=Observation()):")
+    obs = Observation()
+    reqs = gsm8k_like_workload(spec, seed=7, known_lengths=True)
+    eng = Engine(
+        model, params,
+        EngineConfig(
+            n_slots=8, max_len=128, prefill_seq_buckets=(32,),
+            kv_layout="paged", page_size=16, prefill_chunk=32, observe=obs,
+        ),
+    )
+    eng.profiler.cost_model = cm
+    eng.serve(
+        reqs, build_clients(8, reqs, None), GlobalQueueScheduler(reqs),
+        LagrangianPolicy(), policy_name="observed",
+    )
+    check_capacity_conservation(obs)
+    print(capacity_table(obs))
+    print("first 3 request lifecycles:")
+    print(lifecycle_table(obs, rids=[0, 1, 2]))
+    path = write_trace(obs, "serve_engine.trace.json")
+    n_events = len(perfetto_trace(obs)["traceEvents"])
+    print(
+        f"wrote {path} ({n_events} events, "
+        f"{len(obs.audit.records)} audit records) — open in ui.perfetto.dev"
+    )
 
 
 if __name__ == "__main__":

@@ -169,20 +169,37 @@ def fleet_ascii_gantt(
 
 
 def utilization_timeline(trace: ScheduleTrace, buckets: int = 50) -> List[float]:
-    """Utilization per time bucket (for Fig.-style summaries)."""
+    """Utilization per time bucket (for Fig.-style summaries).
+
+    Each stage's busy client-time is apportioned to buckets by overlap and
+    then scaled so the bucket shares sum to exactly ``duration × n_busy`` —
+    a stage ending on (or within float epsilon of) a bucket edge cannot
+    leak a sliver of busy time into the next bucket, and bucket totals
+    always reconcile with the trace's total busy time.
+    """
     if not trace.stages:
         return []
     span = trace.makespan
     busy = [0.0] * buckets
     for s in trace.stages:
+        n_busy = len(s.busy) + len(s.busy_partial)
+        if n_busy == 0 or s.duration <= 0:
+            continue
         b0 = s.t_start / span * buckets
         b1 = s.t_end / span * buckets
-        n_busy = len(s.busy) + len(s.busy_partial)
-        i = int(b0)
-        while i < b1 and i < buckets:
-            lo = max(b0, i)
-            hi = min(b1, i + 1)
-            busy[i] += (hi - lo) * span / buckets * n_busy
+        i = min(int(b0), buckets - 1)
+        parts = []                       # (bucket, overlap in bucket units)
+        while i < buckets:
+            lo, hi = max(b0, i), min(b1, i + 1)
+            if hi - lo > 1e-12:          # skip float-epsilon edge slivers
+                parts.append((i, hi - lo))
+            if b1 <= i + 1:
+                break
             i += 1
+        total = sum(w_i for _, w_i in parts)
+        if total <= 0:
+            continue
+        for i, w_i in parts:
+            busy[i] += s.duration * n_busy * (w_i / total)
     denom = span / buckets * trace.num_clients
     return [round(b / denom, 4) for b in busy]

@@ -180,7 +180,11 @@ class IterationPolicy:
         return max(1, min(k_max, int(k_star)))
 
     def prefill_share(
-        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+        self,
+        snap: SystemSnapshot,
+        cost_model: CostModel,
+        budget: int,
+        explain: Optional[dict] = None,
     ) -> int:
         """Prefill-chunk tokens to co-schedule into the next *mixed* round
         (0 ≤ share ≤ budget) — the Lagrangian turned from a binary stage
@@ -205,19 +209,32 @@ class IterationPolicy:
         pure fused decode. The paper's binary choice survives as the two
         saturated ends of this knob.
         """
+        def _out(share: int, rule: str, **priced) -> int:
+            # audit-log hook: when the engine passes an ``explain`` dict the
+            # priced inputs and chosen share are recorded alongside it
+            if explain is not None:
+                explain.update(
+                    rule=rule, budget=budget, share=share,
+                    n_active=snap.n_active, pending=snap.pending_requests,
+                    candidate=len(snap.candidate.requests), **priced,
+                )
+            return share
+
         if budget <= 0:
-            return 0
+            return _out(0, "no_budget")
         if snap.n_active == 0:
-            return budget                  # nothing decoding — nothing to inflate
+            # nothing decoding — nothing to inflate
+            return _out(budget, "no_active_decoders")
         waiters = max(snap.pending_requests, len(snap.candidate.requests))
         if waiters <= 0:
-            return 0
+            return _out(0, "no_waiters")
         w = min(1.0, waiters / max(snap.n_clients, 1))
         # SLO-urgency: a candidate nearing its TTFT deadline raises the
         # admission-pressure weight past its nominal [0, 1] cap, so the
         # priced share grows ~sqrt(1 + urgency) and the deadline outbids
         # the decode latency it inflates.
-        w = w * (1.0 + self._slo_urgency(snap))
+        urgency = self._slo_urgency(snap)
+        w = w * (1.0 + urgency)
         t0 = cost_model.mixed_round_time(snap.n_active, 0)
         tp = cost_model.mixed_prefill_token_time
         if tp <= 0:
@@ -235,9 +252,12 @@ class IterationPolicy:
             snap.candidate.effective_prefill_tokens,
         )
         if t0 <= 0 or tp <= 0:
-            return budget
+            return _out(budget, "degenerate_fit", w=w, t0=t0, tp=tp)
         n_star = (w * p_out * t0 / (snap.n_active * tp)) ** 0.5
-        return min(budget, int(n_star))
+        return _out(
+            min(budget, int(n_star)), "lagrangian_share",
+            w=w, urgency=urgency, p_out=p_out, t0=t0, tp=tp, n_star=n_star,
+        )
 
     def decide(
         self,
@@ -245,16 +265,19 @@ class IterationPolicy:
         cost_model: CostModel,
         k_max: int = 1,
         mixed_budget: Optional[int] = None,
+        explain: Optional[dict] = None,
     ) -> Decision:
         """Stage choice plus the decode horizon to run if decoding.
 
         ``mixed_budget`` switches to mixed-step semantics: instead of the
         binary prefill-vs-decode choice the policy prices the prefill-token
         share of one unified dispatch (``chunk_tokens``); 0 falls back to a
-        pure fused-decode stage at the priced horizon."""
+        pure fused-decode stage at the priced horizon. ``explain``, when a
+        dict, is filled with the share evaluation's priced inputs (the
+        engine forwards it to the observability audit log)."""
         if mixed_budget is not None:
             share = min(
-                self.prefill_share(snap, cost_model, mixed_budget),
+                self.prefill_share(snap, cost_model, mixed_budget, explain),
                 mixed_budget,
             )
             if share > 0:
@@ -287,11 +310,18 @@ class PrefillFirstPolicy(IterationPolicy):
         return True
 
     def prefill_share(
-        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+        self,
+        snap: SystemSnapshot,
+        cost_model: CostModel,
+        budget: int,
+        explain: Optional[dict] = None,
     ) -> int:
         # mixed-step analogue of "prefill whenever possible": take the
         # whole chunk budget every round, regardless of latency inflation
-        return max(budget, 0)
+        share = max(budget, 0)
+        if explain is not None:
+            explain.update(rule="prefill_first", budget=budget, share=share)
+        return share
 
 
 class DecodeFirstPolicy(IterationPolicy):
@@ -303,10 +333,20 @@ class DecodeFirstPolicy(IterationPolicy):
         return False
 
     def prefill_share(
-        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+        self,
+        snap: SystemSnapshot,
+        cost_model: CostModel,
+        budget: int,
+        explain: Optional[dict] = None,
     ) -> int:
         # only co-schedule prefill when there is nothing to decode at all
-        return max(budget, 0) if snap.n_active == 0 else 0
+        share = max(budget, 0) if snap.n_active == 0 else 0
+        if explain is not None:
+            explain.update(
+                rule="decode_first", budget=budget, share=share,
+                n_active=snap.n_active,
+            )
+        return share
 
 
 class LagrangianPolicy(IterationPolicy):
@@ -467,11 +507,18 @@ class DynamicBatchPolicy(IterationPolicy):
         return self.inner.decide_prefill(snap, cost_model)
 
     def prefill_share(
-        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+        self,
+        snap: SystemSnapshot,
+        cost_model: CostModel,
+        budget: int,
+        explain: Optional[dict] = None,
     ) -> int:
         if snap.pending_requests <= snap.n_idle:
-            return max(budget, 0)          # drain phase: admit immediately
-        return self.inner.prefill_share(snap, cost_model, budget)
+            share = max(budget, 0)         # drain phase: admit immediately
+            if explain is not None:
+                explain.update(rule="drain_phase", budget=budget, share=share)
+            return share
+        return self.inner.prefill_share(snap, cost_model, budget, explain)
 
 
 class TimedPolicy(IterationPolicy):
@@ -494,12 +541,13 @@ class TimedPolicy(IterationPolicy):
         cost_model: CostModel,
         k_max: int = 1,
         mixed_budget: Optional[int] = None,
+        explain: Optional[dict] = None,
     ) -> Decision:
         # time the full engine-facing decision: under mixed-step scheduling
         # the binary __call__ path never runs, so without this override a
         # mixed serve would record no decision times at all
         t0 = time.perf_counter()
-        out = self.inner.decide(snap, cost_model, k_max, mixed_budget)
+        out = self.inner.decide(snap, cost_model, k_max, mixed_budget, explain)
         self.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
         return out
 
@@ -512,9 +560,13 @@ class TimedPolicy(IterationPolicy):
         return self.inner.decode_horizon(snap, cost_model, k_max)
 
     def prefill_share(
-        self, snap: SystemSnapshot, cost_model: CostModel, budget: int
+        self,
+        snap: SystemSnapshot,
+        cost_model: CostModel,
+        budget: int,
+        explain: Optional[dict] = None,
     ) -> int:
-        return self.inner.prefill_share(snap, cost_model, budget)
+        return self.inner.prefill_share(snap, cost_model, budget, explain)
 
 
 POLICIES = {

@@ -464,7 +464,14 @@ class ScheduleTrace:
             )
             if self.decision_times_ms
             else 0.0,
-            **self.meta,
+            # meta is declared Dict[str, float] and summary() guarantees it:
+            # only scalar leaves pass through. Structured event records
+            # (fault logs, fenced logs, ...) belong in the observability
+            # registry's typed log side-channel (repro.obs), never here.
+            **{
+                k: v for k, v in self.meta.items()
+                if isinstance(v, (int, float, bool))
+            },
         }
 
     def validate(self) -> None:
@@ -688,7 +695,12 @@ class FleetReport:
             "replica_makespans_s": [round(t.makespan, 4) for t in self.traces],
             "replica_requests": [len(t.requests) for t in self.traces],
             "replica_summaries": per_replica,
-            **self.meta,
+            # scalar leaves only — structured logs live in the observability
+            # registry's typed side-channel (repro.obs), never in meta
+            **{
+                k: v for k, v in self.meta.items()
+                if isinstance(v, (int, float, bool))
+            },
         }
 
     def validate(self) -> None:

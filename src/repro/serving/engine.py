@@ -182,6 +182,48 @@ class EngineConfig:
     # ablation: the cache still serves hits, but the Lagrangian prefill
     # share and the offline packer see full prompt lengths.
     cache_aware_pricing: bool = True
+    # Observability sink (a ``repro.obs.Observation``). None — the default —
+    # is the zero-cost path: every emission site in the serve loop guards on
+    # a single ``is not None`` and a disabled serve executes zero obs
+    # callbacks (tests enforce this via Observation.tripwire). Benches and
+    # traced serves pass one instance; a Fleet shares the engine config's
+    # instance across every replica so request spans chain causally through
+    # migrations. One Observation records exactly one serve.
+    observe: Optional[Any] = None
+
+
+# Declarations for the typed metrics registry mirroring the engine's
+# ``trace.meta`` counters (units + help text; keys not listed here default
+# to unit-less counters). ``summary()`` output is unchanged — the registry
+# is the typed, documented view over the same numbers.
+_METRIC_SPECS: Dict[str, Tuple[str, str, str]] = {
+    "mixed_rounds": ("counter", "", "mixed prefill+decode rounds dispatched"),
+    "prefill_stall_time_s": (
+        "counter", "s",
+        "wall-clock decoders spent frozen behind preempting prefill stages",
+    ),
+    "decode_dispatches": ("counter", "", "fused decode dispatches"),
+    "preemption_events": ("counter", "", "slots preempted by page eviction"),
+    "peak_concurrency": (
+        "gauge", "", "peak simultaneously in-flight requests on one replica",
+    ),
+    "offline_deferrals": (
+        "counter", "", "offline admissions deferred by overload control",
+    ),
+    "recomputed_tokens": (
+        "counter", "tokens", "tokens re-prefilled on recompute-on-resume",
+    ),
+    "migrations_in": ("counter", "", "slots imported by page-copy migration"),
+    "migrations_out": ("counter", "", "slots exported by page-copy migration"),
+    "cached_prefill_tokens": (
+        "counter", "tokens", "prompt tokens served from the prefix cache",
+    ),
+    "shared_pages_peak": (
+        "gauge", "pages", "peak KV pages shared read-only across slots",
+    ),
+    "cow_copies": ("counter", "pages", "copy-on-write page copies"),
+    "decoded_tokens": ("counter", "tokens", "tokens decoded"),
+}
 
 
 def _bucket(x: int, buckets: Sequence[int]) -> int:
@@ -451,6 +493,16 @@ class Engine:
         # + mid-chunk prefills) — the admission-concurrency metric the
         # on-demand-vs-upfront reservation comparison is judged on.
         self.peak_concurrency = 0
+        # Observability (repro.obs.Observation). None (the default) keeps
+        # every emission site dead; a Fleet overwrites obs_replica with the
+        # engine's replica index after construction.
+        self.obs = config.observe
+        self.obs_replica = 0
+        if config.kv_layout == "paged":
+            self.slots.obs = self.obs
+        # migrated-in slots awaiting their first post-import dispatch —
+        # capacity attribution classifies that wait as "migration"
+        self._mig_pending: set = set()
         # rid -> every token this engine sampled for it (parity testing and
         # the place a production engine would stream detokenized output from)
         self.generated: Dict[int, List[int]] = {}
@@ -700,6 +752,12 @@ class Engine:
             self.slots.release(slot)
             sv.clients[slot].current = None
         self.preemption_events += 1
+        self._mig_pending.discard(slot)
+        if self.obs is not None:
+            self.obs.span(
+                req.rid, "preempt", sv.t, replica=self.obs_replica,
+                slot=slot, reason="page_pressure",
+            )
         sv.scheduler.push(req)
 
     def _ensure_decode_capacity(self, k: int, allow_shrink: bool = False) -> int:
@@ -748,6 +806,82 @@ class Engine:
             req.t_first_token = t
             if self.overload is not None and req.ttft_slo_s is not None:
                 self.overload.record_ttft(t - req.arrival, req.ttft_slo_s)
+            if self.obs is not None:
+                self.obs.span(
+                    req.rid, "first_token", t, replica=self.obs_replica,
+                    slot=req.client, ttft_s=round(t - req.arrival, 6),
+                )
+
+    # ------------------------------------------------------------------ #
+    # Observability emission (every call site guards on self.obs)         #
+    # ------------------------------------------------------------------ #
+    def _obs_admit(
+        self, req: Request, t: float, slot: int, resumed: bool, cached: int
+    ) -> None:
+        """Admission span; a request's first-ever event is its arrival."""
+        if not self.obs.spans.has(req.rid):
+            self.obs.span(
+                req.rid, "arrival", max(req.arrival, 0.0),
+                replica=self.obs_replica,
+            )
+        self.obs.span(
+            req.rid, "resume" if resumed else "admit", t,
+            replica=self.obs_replica, slot=slot,
+            cached_tokens=cached, prefill_tokens=req.n_prefill,
+        )
+
+    def _obs_complete(self, req: Request, t: float, slot: int) -> None:
+        self.obs.span(
+            req.rid, "complete", t, replica=self.obs_replica, slot=slot,
+            decoded=req.decoded,
+        )
+
+    def _capacity_classes(
+        self, busy: Dict[int, int], busy_partial: Dict[int, int], dt: float
+    ) -> Dict[str, float]:
+        """Classify every slot's share of one stage: each of ``n_slots``
+        slots contributes exactly ``dt`` to exactly one class, so the sample
+        sums to ``dt × n_slots`` by construction (the conservation the
+        capacity-attribution rollup hard-checks)."""
+        cls: Dict[str, float] = {}
+        for s in range(self.cfg.n_slots):
+            if s in busy or s in busy_partial:
+                st = self._chunking.get(s)
+                if st is not None and st.resume_emitted > 0:
+                    c = "preempted"        # recomputing an evicted request
+                elif st is not None and st.cached > 0:
+                    c = "cache_hit"        # prefill riding adopted pages
+                else:
+                    c = "busy"
+                self._mig_pending.discard(s)
+            elif s in self._mig_pending:
+                c = "migration"            # imported, not yet dispatched
+            elif self.slots.request_of[s] is not None or s in self._chunking:
+                c = "stall"                # holds work but was not dispatched
+            else:
+                c = "idle_gap"             # free slot during the stage
+            cls[c] = cls.get(c, 0.0) + dt
+        return cls
+
+    def _obs_finish(self, trace: ScheduleTrace) -> None:
+        """Mirror the trace's meta counters into the typed registry and
+        record this replica's capacity denominator."""
+        obs = self.obs
+        for k, v in trace.meta.items():
+            kind, unit, help_ = _METRIC_SPECS.get(
+                k, ("counter", "", "engine meta counter")
+            )
+            obs.declare(k, kind, unit=unit, help=help_)
+            if kind == "counter":
+                obs.inc(k, float(v))
+            else:
+                # fleet semantics for per-replica peaks: the registry keeps
+                # the max across replicas
+                obs.set(k, max(obs.registry.value(k), float(v)))
+        kind, unit, help_ = _METRIC_SPECS["decoded_tokens"]
+        obs.declare("decoded_tokens", kind, unit=unit, help=help_)
+        obs.inc("decoded_tokens", float(self.decoded_tokens))
+        obs.finish_replica(self.obs_replica, trace.makespan, self.cfg.n_slots)
 
     def _start_chunked_batch(
         self, pairs: List[Tuple[ClientState, Request]], bin_index: int, now: float
@@ -788,6 +922,8 @@ class Engine:
                 self.recomputed_tokens += len(prompt) - cached
             req.cached_prefill = min(cached, req.n_prefill)
             self.cache_hit_tokens += cached
+            if self.obs is not None:
+                self._obs_admit(req, now, client.cid, resumed, cached)
             self._chunking[client.cid] = _ChunkState(
                 slot=client.cid, req=req, prompt=prompt, done=cached,
                 resume_emitted=resume_emitted, resume_pending=resume_pending,
@@ -1022,12 +1158,19 @@ class Engine:
             req.t_prefill_end = t
             # resumed slots re-enter decode at their pre-preemption count
             req.decoded = self.slots.emitted[slot]
+            if self.obs is not None:
+                self.obs.span(
+                    req.rid, "prefill_done", t, replica=self.obs_replica,
+                    slot=slot,
+                )
             self._note_first_token(req, t)
             # requests with n_decode == 1 finish at prefill
             if self.cfg.eos_id is None and req.n_decode <= 1:
                 req.t_done = t
                 self.slots.release(slot)
                 clients[slot].current = None
+                if self.obs is not None:
+                    self._obs_complete(req, t, slot)
 
     def warm_serving_shapes(self) -> None:
         """Pre-compile every paged serving-dispatch variant the scheduler
@@ -1216,6 +1359,7 @@ class Engine:
         self.migrations_in = 0
         self.migrations_out = 0
         self.cache_hit_tokens = 0
+        self._mig_pending = set()
         self._sv = _ServeSession(
             trace=trace, clients=clients, scheduler=request_scheduler,
             policy=iteration_policy, track_requests=track_requests,
@@ -1361,6 +1505,12 @@ class Engine:
         sv.trace.external_prefills.pop(req.rid, None)
         self.migrations_out += 1
         self.migrated_pages_out += len(pages)
+        self._mig_pending.discard(slot)
+        if self.obs is not None:
+            self.obs.span(
+                req.rid, "migrate_out", sv.t, replica=self.obs_replica,
+                slot=slot, pages=len(pages), state=kind,
+            )
         if self.debug_invariants:
             self._check_invariants()
         return SlotCheckpoint(
@@ -1423,6 +1573,12 @@ class Engine:
         self._note_concurrency()
         self.migrations_in += 1
         self.migrated_pages_in += ckpt.n_pages
+        self._mig_pending.add(slot)
+        if self.obs is not None:
+            self.obs.span(
+                req.rid, "migrate_in", sv.t, replica=self.obs_replica,
+                slot=slot, pages=ckpt.n_pages, state=ckpt.kind,
+            )
         if self.debug_invariants:
             self._check_invariants()
         return slot
@@ -1486,6 +1642,10 @@ class Engine:
             if sv.stages_run >= cfg.max_stages:
                 raise RuntimeError("max_stages exceeded")
             t = sv.t
+            if self.obs is not None and paged:
+                # COW copies fire inside reserve_with_prefix; stamp them
+                # with the current virtual time
+                self.slots.obs_now = t
             max_cap = max(
                 self.profiler.cost_model.max_level.cap_tokens >> self._budget_shift,
                 self.profiler.cost_model.level_caps[0],
@@ -1562,14 +1722,24 @@ class Engine:
                     min(cfg.prefill_chunk, r.n_prefill) for _, r in pairs
                 )
                 mixed_budget = min(avail, cfg.mixed_token_buckets[-1])
+            explain = (
+                {} if (self.obs is not None and mixed_budget is not None)
+                else None
+            )
             t0 = time.perf_counter()
             decision = iteration_policy.decide(
                 snap, self.profiler.cost_model,
                 k_max=cfg.decode_horizon or cfg.max_decode_horizon,
                 mixed_budget=mixed_budget,
+                explain=explain,
             )
             do_prefill = decision.prefill
             trace.decision_times_ms.append((time.perf_counter() - t0) * 1e3)
+            if explain:
+                self.obs.audit_record(
+                    "prefill_share", t, self.obs_replica, explain,
+                    explain.get("share", decision.chunk_tokens),
+                )
 
             if mixed and decision.chunk_tokens > 0 and active:
                 # quantize the priced share down to the bucket table (the
@@ -1621,11 +1791,18 @@ class Engine:
                     )
                 )
                 sv.t = t + dt
+                if self.obs is not None:
+                    self.obs.capacity(
+                        self.obs_replica, t, sv.t,
+                        self._capacity_classes(busy, busy_partial, dt),
+                    )
                 self._finish_prefills(fin_chunks, clients, sv.t)
                 for slot in fin_decode:
                     req = self.slots.release(slot)
                     req.t_done = sv.t
                     clients[slot].current = None
+                    if self.obs is not None:
+                        self._obs_complete(req, sv.t, slot)
             elif (
                 candidate and paged
                 and (do_prefill or (mixed and decision.chunk_tokens > 0))
@@ -1654,6 +1831,11 @@ class Engine:
                     )
                 )
                 sv.t = t + dt
+                if self.obs is not None:
+                    self.obs.capacity(
+                        self.obs_replica, t, sv.t,
+                        self._capacity_classes(busy, busy_partial, dt),
+                    )
                 self._finish_prefills(finished, clients, sv.t)
             elif do_prefill and candidate:
                 self._commit_pairs(pairs)
@@ -1668,6 +1850,8 @@ class Engine:
                     req.t_prefill_start = t
                     req.t_prefill_end = t + dt
                     req.decoded = 1
+                    if self.obs is not None:
+                        self._obs_admit(req, t, client.cid, False, 0)
                     self._note_first_token(req, t + dt)
                     busy[client.cid] = req.rid
                 trace.stages.append(
@@ -1681,12 +1865,19 @@ class Engine:
                     )
                 )
                 sv.t = t + dt
+                if self.obs is not None:
+                    self.obs.capacity(
+                        self.obs_replica, t, sv.t,
+                        self._capacity_classes(busy, {}, dt),
+                    )
                 # requests with n_decode == 1 finish at prefill
                 for client, req in pairs:
                     if self.cfg.eos_id is None and req.n_decode <= 1:
                         req.t_done = sv.t
                         self.slots.release(client.cid)
                         client.current = None
+                        if self.obs is not None:
+                            self._obs_complete(req, sv.t, client.cid)
             elif active:
                 k = self._choose_horizon(decision.horizon)
                 if paged and cfg.page_reserve != "upfront":
@@ -1714,10 +1905,17 @@ class Engine:
                     )
                 )
                 sv.t = t + dt
+                if self.obs is not None:
+                    self.obs.capacity(
+                        self.obs_replica, t, sv.t,
+                        self._capacity_classes(busy, {}, dt),
+                    )
                 for slot in finished:
                     req = self.slots.release(slot)
                     req.t_done = sv.t
                     clients[slot].current = None
+                    if self.obs is not None:
+                        self._obs_complete(req, sv.t, slot)
             else:
                 if candidate:
                     continue  # policy refused but nothing to decode: retry
@@ -1758,6 +1956,8 @@ class Engine:
                 shared_pages_peak=self.slots.shared_pages_peak,
                 cow_copies=self.slots.cow_copies,
             )
+        if self.obs is not None:
+            self._obs_finish(trace)
         if validate:
             trace.validate()
         return trace

@@ -130,6 +130,9 @@ class ReplicaHealthMonitor:
         self.condemned_events = 0
         self.degraded_events = 0
         self.transitions: List[Dict[str, Any]] = []
+        # observability sink (repro.obs.Observation), set by the fleet when
+        # a serve opts in; None executes zero obs callbacks
+        self.obs = None
 
     # ------------------------------------------------------------------ #
     # Observation                                                        #
@@ -311,10 +314,20 @@ class ReplicaHealthMonitor:
         r.suspect_reason = reason
 
     def _transition(self, i: int, state: str, now: float, reason: str) -> None:
+        prev = self.replicas[i].state
         self.replicas[i].state = state
         self.transitions.append(
             {"replica": i, "state": state, "at_s": now, "reason": reason}
         )
+        if self.obs is not None:
+            self.obs.instant(
+                "health_transition", now, replica=i,
+                state=state, prev=prev, reason=reason,
+            )
+            self.obs.audit_record(
+                "health_transition", now, i,
+                {"prev": prev, "reason": reason}, state,
+            )
 
     def condemn(self, i: int, now: float, reason: str = "external") -> None:
         """Force-condemn (fleet-initiated, e.g. an operator decision)."""

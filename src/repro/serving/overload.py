@@ -128,8 +128,24 @@ class SLOAwareOverloadPolicy(OverloadPolicy):
             return pairs
         if not self._online_still_coming(engine):
             return pairs
-        if self._attainment_pressure() or self._queue_pressure(now, engine):
+        att = self._attainment_pressure()
+        queue = att or self._queue_pressure(now, engine)
+        if att or queue:
             kept = [(c, r) for c, r in pairs if not is_offline(r)]
-            self.deferrals += len(pairs) - len(kept)
+            deferred = [r.rid for _, r in pairs if is_offline(r)]
+            self.deferrals += len(deferred)
+            obs = getattr(engine, "obs", None)
+            if obs is not None:
+                obs.audit_record(
+                    "overload_defer", now, getattr(engine, "obs_replica", 0),
+                    {
+                        "deferred_rids": deferred,
+                        "attainment_pressure": bool(att),
+                        "queue_pressure": bool(queue and not att),
+                        "headroom": self.headroom,
+                        "observed_ttft_ratios": len(self._ratios),
+                    },
+                    "defer_offline",
+                )
             return kept
         return pairs

@@ -1,0 +1,379 @@
+"""Unified serve observability: typed metrics registry, causal lifecycle
+spans, capacity-attribution conservation, Perfetto export, decision audit
+log, the observe=None zero-callback guarantee, and obs state surviving a
+fleet checkpoint round-trip."""
+import json
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import (
+    CostModel,
+    GlobalQueueScheduler,
+    LagrangianPolicy,
+    Request,
+    build_clients,
+)
+from repro.core.gantt import utilization_timeline
+from repro.core.types import ScheduleTrace, StageKind, StageRecord
+from repro.models.layers import init_params
+from repro.models.transformer import TransformerLM
+from repro.obs import (
+    MetricDeclarationError,
+    Observation,
+    capacity_attribution,
+    check_capacity_conservation,
+    lifecycle_table,
+    perfetto_trace,
+    write_trace,
+)
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.fleet import Fleet, FleetConfig
+
+CFG = ArchConfig(
+    name="demo", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256,
+)
+CM = CostModel(level_caps=(32, 64, 128))
+ENGINE_CFG = dict(
+    n_slots=2, max_len=64, prefill_seq_buckets=(32,),
+    kv_layout="paged", page_size=16, prefill_chunk=16,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = TransformerLM(CFG)
+    params = init_params(jax.random.key(0), model.param_defs())
+    return model, params
+
+
+def _requests(n=6, n_decode=10):
+    return [Request(rid=i, n_prefill=10, n_decode=n_decode) for i in range(n)]
+
+
+def _engine(model, params, **kw):
+    eng = Engine(model, params, EngineConfig(**ENGINE_CFG, **kw))
+    eng.profiler.cost_model = CM
+    return eng
+
+
+def _serve(eng, reqs):
+    clients = build_clients(eng.cfg.n_slots, reqs, None)
+    return eng.serve(reqs, clients, GlobalQueueScheduler(reqs),
+                     LagrangianPolicy())
+
+
+def _fleet(model, params, engine_kw=None, **fc_kw):
+    fc_kw.setdefault("n_replicas", 2)
+    fc_kw.setdefault("assign", "round_robin")
+    fc_kw.setdefault("dispatch", "round_robin")
+    fc_kw.setdefault("work_stealing", False)
+    return Fleet(
+        model, params, EngineConfig(**{**ENGINE_CFG, **(engine_kw or {})}),
+        FleetConfig(**fc_kw), cost_model=CM,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Typed metrics registry                                                      #
+# --------------------------------------------------------------------------- #
+def test_registry_duplicate_declaration_is_idempotent():
+    obs = Observation()
+    a = obs.declare("steal_events", "counter", unit="events", help="steals")
+    b = obs.declare("steal_events", "counter", unit="events", help="steals")
+    assert a == b
+    obs.inc("steal_events", 2)
+    assert obs.registry.scalars()["steal_events"] == 2.0
+
+
+def test_registry_conflicting_redeclaration_raises():
+    obs = Observation()
+    obs.declare("queue_depth", "gauge", unit="requests")
+    with pytest.raises(MetricDeclarationError):
+        obs.declare("queue_depth", "counter", unit="requests")   # kind flip
+    with pytest.raises(MetricDeclarationError):
+        obs.declare("queue_depth", "gauge", unit="tokens")       # unit flip
+    with pytest.raises(MetricDeclarationError):
+        obs.declare("bogus", "trend")                            # unknown kind
+
+
+def test_registry_scalars_exclude_log_side_channel():
+    """Structured event records ride the typed log side-channel; the scalar
+    export never smuggles them (the old meta dicts carried JSON strings)."""
+    obs = Observation()
+    obs.declare("lat", "histogram", unit="s")
+    obs.observe_value("lat", 0.25)
+    obs.observe_value("lat", 0.75)
+    obs.set_log("fault_log", [{"replica": 1, "kind": "hang"}])
+    obs.log("fault_log", {"replica": 0, "kind": "slow"})
+    scalars = obs.registry.scalars()
+    assert scalars["lat_count"] == 2.0 and scalars["lat_sum"] == 1.0
+    assert all(isinstance(v, float) for v in scalars.values())
+    assert obs.registry.logs["fault_log"] == [
+        {"replica": 1, "kind": "hang"}, {"replica": 0, "kind": "slow"},
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# Capacity attribution: rows sum EXACTLY to makespan x slots                  #
+# --------------------------------------------------------------------------- #
+def test_capacity_conservation_on_engine_serve(model_and_params):
+    model, params = model_and_params
+    obs = Observation()
+    eng = _engine(model, params, observe=obs)
+    trace = _serve(eng, _requests())
+    assert check_capacity_conservation(obs)
+    rows = capacity_attribution(obs)
+    assert set(rows) == {0}
+    row = rows[0]
+    assert row["capacity"] == pytest.approx(
+        trace.makespan * eng.cfg.n_slots, rel=1e-9
+    )
+    assert row["busy"] > 0.0
+    # lifecycle table renders every admitted request
+    table = lifecycle_table(obs)
+    for rid in range(6):
+        assert f"\n{rid:5d}  " in table or table.startswith(f"{rid:5d}")
+
+
+def test_capacity_conservation_on_fleet_serve(model_and_params):
+    model, params = model_and_params
+    obs = Observation()
+    fleet = _fleet(model, params, engine_kw=dict(observe=obs))
+    fleet.serve(_requests(8), LagrangianPolicy)
+    assert check_capacity_conservation(obs)
+    rows = capacity_attribution(obs)
+    assert set(rows) == {0, 1}
+    for row in rows.values():
+        assert row["total"] == pytest.approx(row["capacity"], abs=1e-9)
+
+
+# --------------------------------------------------------------------------- #
+# Span parenting across a migration: one request, two replicas, one chain     #
+# --------------------------------------------------------------------------- #
+def test_span_chain_survives_forced_migration(model_and_params):
+    model, params = model_and_params
+    obs = Observation()
+    fleet = _fleet(model, params, engine_kw=dict(observe=obs))
+    # 2 requests over 2 round-robin replicas: replica 1 keeps a free slot
+    # (and free pages) so the forced migration always has headroom
+    reqs = _requests(2, n_decode=12)
+    fleet.begin_serve(reqs, LagrangianPolicy)
+    moved_rid = None
+    while True:
+        eng = fleet.engines[0]
+        if moved_rid is None:
+            for slot in list(eng.slots.active_slots):
+                if eng.slots.emitted[slot] >= 3:
+                    moved_rid = eng.slots.request_of[slot].rid
+                    assert fleet.migrate_slot(0, slot, 1)
+                    break
+        if not fleet.step():
+            break
+    fleet.finish_serve()
+    assert moved_rid is not None, "no slot ever reached 3 emitted tokens"
+
+    evs = obs.spans.by_request(moved_rid)
+    kinds = [e.kind for e in evs]
+    assert "migrate_out" in kinds and "migrate_in" in kinds
+    out_ev = next(e for e in evs if e.kind == "migrate_out")
+    in_ev = next(e for e in evs if e.kind == "migrate_in")
+    assert out_ev.replica == 0 and in_ev.replica == 1
+    # the migrate_in on replica 1 is causally downstream of the migrate_out
+    # on replica 0: walking parent links from the latest event reproduces
+    # the full per-request history — one chain across the fleet
+    assert in_ev.parent == out_ev.event_id
+    assert obs.spans.chain(moved_rid) == evs
+    assert evs[-1].kind == "complete"
+    # every request's chain is intact, not just the migrated one
+    for rid in obs.spans.request_ids():
+        assert obs.spans.chain(rid) == obs.spans.by_request(rid)
+
+
+# --------------------------------------------------------------------------- #
+# Perfetto exporter: JSON schema                                              #
+# --------------------------------------------------------------------------- #
+def test_perfetto_trace_schema(model_and_params, tmp_path):
+    model, params = model_and_params
+    obs = Observation()
+    eng = _engine(model, params, observe=obs)
+    _serve(eng, _requests())
+    path = write_trace(obs, str(tmp_path / "nested" / "serve.trace.json"))
+    with open(path) as fh:
+        doc = json.load(fh)
+    events = doc["traceEvents"]
+    assert events, "empty trace"
+    phases = {e["ph"] for e in events}
+    assert phases <= {"X", "i", "M"}
+    assert "X" in phases and "M" in phases
+    for e in events:
+        assert isinstance(e["name"], str) and e["name"]
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        if e["ph"] == "X":
+            assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+            assert "rid" in e["args"]
+        elif e["ph"] == "i":
+            assert e["s"] == "p" and e["ts"] >= 0.0
+    # one named track per replica x slot plus the control lane
+    threads = {
+        (e["pid"], e["tid"]) for e in events
+        if e["ph"] == "M" and e["name"] == "thread_name"
+    }
+    for slot in range(eng.cfg.n_slots):
+        assert (0, slot) in threads
+    assert doc["otherData"]["metrics"] == obs.registry.scalars()
+
+
+# --------------------------------------------------------------------------- #
+# observe=None executes ZERO observability callbacks                          #
+# --------------------------------------------------------------------------- #
+def test_observe_none_fires_no_obs_callbacks(model_and_params):
+    model, params = model_and_params
+    calls = []
+    Observation.tripwire = staticmethod(lambda: calls.append(1))
+    try:
+        eng = _engine(model, params)                  # observe=None default
+        _serve(eng, _requests())
+        assert calls == [], (
+            f"observe=None serve executed {len(calls)} obs callbacks"
+        )
+        # positive control: the tripwire does fire on an observed serve
+        obs_eng = _engine(model, params, observe=Observation())
+        _serve(obs_eng, _requests())
+        assert len(calls) > 0
+    finally:
+        Observation.tripwire = None
+
+
+# --------------------------------------------------------------------------- #
+# Obs state rides the fleet checkpoint through tree_map(np.asarray)           #
+# --------------------------------------------------------------------------- #
+def test_fleet_checkpoint_roundtrips_obs_state(model_and_params):
+    model, params = model_and_params
+    obs = Observation()
+    fleet = _fleet(model, params, engine_kw=dict(observe=obs))
+    reqs = _requests(6)
+    fleet.begin_serve(reqs, LagrangianPolicy)
+    for _ in range(6):
+        if not fleet.step():
+            break
+    state = jax.tree_util.tree_map(np.asarray, fleet.state_dict())
+
+    obs2 = Observation()
+    fleet2 = _fleet(model, params, engine_kw=dict(observe=obs2))
+    fleet2.load_state_dict(state, {r.rid: r for r in _requests(6)})
+    # recorded history restored: same events, same audit, same scalars
+    assert len(obs2.spans.events) == len(obs.spans.events)
+    assert [e.kind for e in obs2.spans.events] == [
+        e.kind for e in obs.spans.events
+    ]
+    assert len(obs2.audit.records) == len(obs.audit.records)
+    assert obs2.registry.scalars() == obs.registry.scalars()
+    assert obs2.capacity_samples == obs.capacity_samples
+    # the monitor's obs wiring survives restore (reset() used to drop it)
+    if fleet2.monitor is not None:
+        assert fleet2.monitor.obs is obs2
+    while fleet2.step():
+        pass
+    report = fleet2.finish_serve()
+    # summary() emits scalars, short string labels, and the per-replica
+    # breakdown lists — never JSON strings. Serialized structures are what
+    # the registry's typed log side-channel exists to replace.
+    fleet_lists = {
+        "speed_factors", "replica_makespans_s", "replica_requests",
+        "replica_summaries",
+    }
+    for key, val in report.summary().items():
+        if key in fleet_lists:
+            assert isinstance(val, list)
+            continue
+        assert isinstance(val, (int, float, str)), f"{key} is {type(val)}"
+        if isinstance(val, str):
+            assert not val.lstrip().startswith(("[", "{")), (
+                f"{key} smuggles JSON through summary(): {val[:60]!r}"
+            )
+    assert check_capacity_conservation(obs2)
+
+
+# --------------------------------------------------------------------------- #
+# Gantt utilization_timeline: bucket sums reconcile with total busy time      #
+# --------------------------------------------------------------------------- #
+def _random_trace(rng, n_stages, n_clients):
+    t = 0.0
+    stages = []
+    for i in range(n_stages):
+        dur = rng.choice([rng.uniform(1e-4, 0.5), rng.uniform(1e-9, 1e-6)])
+        n_busy = rng.randint(0, n_clients)
+        stages.append(StageRecord(
+            kind=StageKind.DECODE, t_start=t, t_end=t + dur, bin_index=i,
+            busy={c: c for c in range(n_busy)},
+        ))
+        t += dur
+        if rng.random() < 0.3:
+            t += rng.uniform(0.0, 0.2)    # idle gap between stages
+            stages.append(StageRecord(
+                kind=StageKind.DECODE, t_start=t, t_end=t, bin_index=i,
+                busy={},
+            ))
+    return ScheduleTrace(num_clients=n_clients, stages=stages)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_utilization_timeline_buckets_conserve_busy_time(seed):
+    """Property: bucket shares x bucket capacity sum to exactly the trace's
+    total busy client-time — a stage ending on a bucket edge cannot leak
+    a sliver into the next bucket or drop one."""
+    rng = random.Random(seed)
+    trace = _random_trace(rng, n_stages=rng.randint(1, 30),
+                          n_clients=rng.randint(1, 6))
+    for buckets in (1, 7, 50):
+        tl = utilization_timeline(trace, buckets)
+        assert len(tl) == buckets
+        span = trace.makespan
+        if span <= 0:
+            continue
+        denom = span / buckets * trace.num_clients
+        total_busy = sum(
+            s.duration * (len(s.busy) + len(s.busy_partial))
+            for s in trace.stages
+        )
+        # values are rounded to 4 decimals for display; allow exactly that
+        tol = 5e-5 * buckets * denom + 1e-9
+        assert sum(tl) * denom == pytest.approx(total_busy, abs=tol)
+
+
+def test_utilization_timeline_edge_aligned_stages():
+    """Stages tiling bucket edges exactly: every bucket reads 1.0."""
+    stages = [
+        StageRecord(kind=StageKind.DECODE, t_start=i * 0.1,
+                    t_end=(i + 1) * 0.1, bin_index=i, busy={0: 0, 1: 1})
+        for i in range(10)
+    ]
+    trace = ScheduleTrace(num_clients=2, stages=stages)
+    tl = utilization_timeline(trace, 10)
+    assert tl == [1.0] * 10
+
+
+# --------------------------------------------------------------------------- #
+# Decision audit log                                                          #
+# --------------------------------------------------------------------------- #
+def test_audit_log_records_dispatch_and_prefill_share(model_and_params):
+    model, params = model_and_params
+    obs = Observation()
+    fleet = _fleet(model, params, engine_kw=dict(observe=obs),
+                   dispatch="least_load")
+    reqs = [Request(rid=i, n_prefill=10, n_decode=8,
+                    arrival=0.0 if i < 4 else 0.01 * i) for i in range(8)]
+    fleet.serve(reqs, LagrangianPolicy)
+    counts = obs.audit.counts()
+    # every online arrival produced exactly one priced dispatch record
+    n_online = sum(1 for r in reqs if r.arrival > 0.0)
+    assert counts.get("dispatch", 0) == n_online
+    for rec in obs.audit.of_kind("dispatch"):
+        assert rec.inputs["policy"] == "least_load"
+        assert set(rec.inputs["loads_s"]) == {"0", "1"}
+        assert rec.chosen in (0, 1)
